@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: seeded graphs matching the paper's regimes,
+timing helpers, CSV emit.
+
+The paper's datasets (LiveJournal 69M … Friendster 1.8B edges) do not fit a
+1-core CPU container; benchmarks use seeded RMAT/uniform graphs with the
+same metrics.  Edge-work ratio (the paper's primary fusion metric) is
+size-independent by construction, so the ratios reproduce directly; the
+full-scale shapes are exercised by the dry-run instead (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.graph.structure import rmat_graph, undirected, uniform_graph
+
+BENCH_GRAPHS = {
+    "RM-S": lambda weighted: rmat_graph(2_000, 16_000, seed=11,
+                                        weighted=weighted),
+    "RM-M": lambda weighted: rmat_graph(10_000, 80_000, seed=12,
+                                        weighted=weighted),
+    "UN-M": lambda weighted: uniform_graph(10_000, 60_000, seed=13,
+                                           weighted=weighted),
+}
+
+
+def timed(fn, repeats: int = 3):
+    """Median wall time (s) + last result; first call is burned (compile)."""
+    fn()
+    ts = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Fig. 13 (WSP/NWR/RADIUS) + Fig. 14/Table 3 (DRR/Trust/RDS):
+fused vs unfused edge-work ratio and wall time, weighted and unweighted
+graphs.
+
+Theoretical bounds reproduced: simple pair fusions bound at 50% (two
+passes → one), 4-reduction fusions at 25%, RDS at 50% (4 rounds → 2).
+"""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_GRAPHS, emit, timed
+from repro.core import engine, fusion
+from repro.core import usecases as U
+
+SIMPLE = ["WSP", "NWR", "RADIUS"]
+MULTI = ["DRR", "Trust", "RDS"]
+
+
+def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
+        engines=("pull", "push")):
+    rows = []
+    for gname in graph_names:
+        for weighted in (False, True):
+            g = BENCH_GRAPHS[gname](weighted)
+            for eng in engines:
+                for name in usecases:
+                    spec = U.ALL_SPECS[name]()
+                    fprog = fusion.fuse(spec)
+                    uprog = fusion.lower_unfused(spec)
+                    t_f, rf = timed(lambda: engine.run_program(
+                        g, fprog, engine=eng), repeats=3)
+                    t_u, ru = timed(lambda: engine.run_program(
+                        g, uprog, engine=eng), repeats=3)
+                    ratio = rf.stats.edge_work / max(ru.stats.edge_work, 1.0)
+                    rows.append([
+                        gname, "w" if weighted else "unw", eng, name,
+                        round(ratio, 4),
+                        round(t_u / max(t_f, 1e-9), 3),
+                        rf.stats.rounds, ru.stats.rounds,
+                        round(t_f * 1e3, 1), round(t_u * 1e3, 1)])
+    return emit(rows, ["graph", "weights", "engine", "usecase",
+                       "edge_work_ratio", "speedup", "rounds_fused",
+                       "rounds_unfused", "t_fused_ms", "t_unfused_ms"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,124 @@
+"""Roofline derivation from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh):
+
+  compute term    = HLO_FLOPs_total / (chips × peak)        [s]
+  memory term     = HLO_bytes_total / (chips × HBM_bw)      [s]
+  collective term = collective_bytes_per_chip / link_bw     [s]
+
+Sources: FLOPs/bytes from the UNROLLED analysis lowering (exact — XLA's
+cost_analysis counts while bodies once, so the production scan module
+undercounts by the trip count; see launch/dryrun.py).  Collective bytes
+are parsed from the post-SPMD compiled HLO with while-trip weighting; those
+operand sizes are already per-device, so the per-chip time divides by
+link_bw only (equivalently: total moved = per_chip × chips, then the
+assignment formula's /(chips × link_bw) — same number, stated explicitly
+to avoid double division).
+
+Hardware (TPU v5e-class target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "full_graph_sm", "minibatch_lg", "ogb_products", "molecule",
+               "train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+
+
+def load_cells(report_dir="reports/dryrun", mesh="pod16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(report_dir, mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def derive(rec) -> dict:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("status"),
+                "note": rec.get("skip_reason", rec.get("error", ""))[:90]}
+    chips = rec["devices"]
+    an = rec.get("analysis_cost", {})
+    flops_total = an.get("flops")
+    bytes_total = an.get("bytes accessed")
+    if flops_total is None or "error" in an:
+        # fall back to the compiled (scan-undercounted) per-device numbers
+        flops_total = rec["cost_analysis"].get("flops", 0) * chips
+        bytes_total = rec["cost_analysis"].get("bytes accessed", 0) * chips
+    coll_per_chip = sum(v["operand_bytes"]
+                        for v in rec["collectives"].values())
+    t_compute = flops_total / (chips * PEAK_FLOPS)
+    t_memory = bytes_total / (chips * HBM_BW)
+    t_coll = coll_per_chip / LINK_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    model_flops = rec["meta"].get("model_flops", 0)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "kind": rec.get("kind"),
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "hlo_flops_total": flops_total,
+        "hlo_bytes_total": bytes_total,
+        "collective_bytes_per_chip": coll_per_chip,
+        "model_flops": model_flops,
+        "useful_flops_frac": (model_flops / flops_total)
+        if flops_total else 0.0,
+        "temp_bytes_per_chip": rec["memory_analysis"].get(
+            "temp_size_in_bytes", 0),
+        "arg_bytes_per_chip": rec["memory_analysis"].get(
+            "argument_size_in_bytes", 0),
+    }
+    # roofline fraction: useful model FLOP/s achieved if the step ran at
+    # the max of the three terms
+    t_bound = max(t_compute, t_memory, t_coll)
+    out["roofline_frac"] = (model_flops / (chips * PEAK_FLOPS)) / t_bound \
+        if t_bound > 0 else 0.0
+    return out
+
+
+def table(mesh="pod16x16", report_dir="reports/dryrun"):
+    rows = []
+    for rec in load_cells(report_dir, mesh):
+        rows.append(derive(rec))
+    rows.sort(key=lambda r: (r["arch"],
+                             SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 99))
+    return rows
+
+
+def main():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = table(mesh)
+        if not rows:
+            continue
+        print(f"\n== roofline ({mesh}) ==")
+        hdr = ["arch", "shape", "dom", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+               "useful%", "roofline%", "temp_GB/chip"]
+        print(",".join(hdr))
+        for r in rows:
+            if r.get("status") != "ok":
+                print(f"{r['arch']},{r['shape']},{r.get('status')},"
+                      f"{r.get('note', '')}")
+                continue
+            print(",".join([
+                r["arch"], r["shape"], r["dominant"],
+                f"{r['t_compute_s']:.4f}", f"{r['t_memory_s']:.4f}",
+                f"{r['t_collective_s']:.4f}",
+                f"{100 * r['useful_flops_frac']:.1f}",
+                f"{100 * r['roofline_frac']:.1f}",
+                f"{r['temp_bytes_per_chip'] / 1e9:.1f}"]))
+
+
+if __name__ == "__main__":
+    main()

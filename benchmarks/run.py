@@ -1,0 +1,48 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default runs the small graph regime (1-core CPU container); --full adds the
+medium graphs.  The roofline section reads the dry-run reports if present.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    graphs = ("RM-S", "RM-M") if args.full else ("RM-S",)
+    t0 = time.time()
+
+    print("\n### Fig. 11 / Table 1 — synthesized vs handwritten")
+    from benchmarks import synth_vs_hand
+    synth_vs_hand.run(graph_names=graphs)
+
+    print("\n### Fig. 13 + Fig. 14 / Table 3 — fusion (simple + multi)")
+    from benchmarks import fusion_bench
+    fusion_bench.run(graph_names=graphs)
+
+    print("\n### Table 2 — state sizes / scatter-op counts")
+    from benchmarks import state_metrics
+    state_metrics.run()
+
+    print("\n### Fig. 15 — fusion + synthesis time")
+    from benchmarks import synthesis_time
+    synthesis_time.run()
+
+    print("\n### Roofline (from dry-run artifacts, if present)")
+    from benchmarks import roofline
+    roofline.main()
+
+    print(f"\n[benchmarks.run] total wall: {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

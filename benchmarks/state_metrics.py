@@ -1,0 +1,60 @@
+"""Paper Table 2: per-vertex/per-edge state sizes and atomic-op counts.
+
+TPU adaptation: "atomics per edge" becomes scatter/segment ops per edge
+sweep — counted from the jitted iteration HLO; state bytes come from the
+fused component dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import engine, fusion, iterate
+from repro.core import usecases as U
+from repro.core.synthesis import synthesize_round
+from repro.graph.structure import uniform_graph, undirected
+
+CASES = ["BFS", "CC", "SSSP", "WP", "WSP", "NSP", "NWR", "Trust"]
+
+
+def _hlo_scatter_ops(g, round_, model):
+    synth = synthesize_round(round_)
+    comps = iterate.comp_runtimes(
+        round_, {k: v for k, v in synth.items() if not isinstance(k, tuple)})
+    plans = [leaf.plan for leaf in round_.leaves]
+
+    def one_iter():
+        return iterate.iterate_graph(g, comps, plans, model=model,
+                                     max_iter=1).state
+
+    txt = jax.jit(one_iter).lower().compile().as_text()
+    return txt.count(" scatter(") + txt.count(" scatter-"), \
+        txt.count("segment") + txt.count(" reduce(")
+
+
+def run():
+    g = uniform_graph(64, 256, seed=5)
+    rows = []
+    for name in CASES:
+        spec = U.ALL_SPECS[name]()
+        gg = undirected(g) if name == "CC" else g
+        prog = fusion.fuse(spec)
+        round_ = prog.rounds[0][1]
+        vertex_bytes = 0
+        for comp in round_.components:
+            vertex_bytes += jnp.dtype(
+                iterate.DTYPES[comp.f.dtype]).itemsize
+        edge_bytes = 4 * any(c.f.kind in ("weight",)
+                             for c in round_.components) + \
+            4 * any(c.f.kind == "capacity" for c in round_.components)
+        scat_push, _ = _hlo_scatter_ops(gg, round_, "push+")
+        _, red_pull = _hlo_scatter_ops(gg, round_, "pull+")
+        rows.append([name, len(round_.components), vertex_bytes, edge_bytes,
+                     scat_push, red_pull])
+    return emit(rows, ["usecase", "components", "vertex_bytes", "edge_bytes",
+                       "push_scatter_ops", "pull_reduce_ops"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Fig. 11 + Table 1: synthesized vs handwritten programs.
+
+Metrics: edge-work ratio (number of edge propagations, synthesized ÷
+handwritten — the paper's primary metric, size-independent) and wall time,
+for BFS / CC / SSSP / WP / PR across the engines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_GRAPHS, emit, timed
+from repro.core import engine, fusion
+from repro.core import usecases as U
+from repro.graph.structure import undirected
+
+ENGINES = ["pull", "push", "dense"]
+
+
+def run(graph_names=("RM-S",), engines=ENGINES):
+    rows = []
+    for gname in graph_names:
+        g = BENCH_GRAPHS[gname](True)
+        gu = undirected(g)
+        cases = [
+            ("BFS", U.bfs_depth(0), U.HANDWRITTEN["BFS"], g),
+            ("CC", U.cc(), U.HANDWRITTEN["CC"], gu),
+            ("SSSP", U.sssp(0), U.HANDWRITTEN["SSSP"], g),
+            ("WP", U.wp(0), U.HANDWRITTEN["WP"], g),
+        ]
+        for eng in engines:
+            if eng == "dense" and g.n > 4000:
+                continue
+            for name, spec, hand, gg in cases:
+                prog = fusion.fuse(spec)
+                t_s, res_s = timed(lambda: engine.run_program(
+                    gg, prog, engine=eng), repeats=3)
+                t_h, res_h = timed(lambda: engine.run_direct(
+                    gg, hand(), engine=eng), repeats=3)
+                # correctness cross-check while we're here
+                a = np.asarray(res_s.value, np.float64)
+                b = np.asarray(res_h.value, np.float64)
+                a = np.where(np.abs(a) >= 1e8, np.inf, a)
+                b = np.where(np.abs(b) >= 1e8, np.inf, b)
+                assert np.allclose(np.nan_to_num(a, posinf=1e9),
+                                   np.nan_to_num(b, posinf=1e9),
+                                   atol=1e-3), (name, eng)
+                ew_ratio = res_s.stats.edge_work / max(res_h.stats.edge_work,
+                                                       1.0)
+                rows.append([gname, eng, name,
+                             round(ew_ratio, 4),
+                             round(res_s.stats.edge_work),
+                             round(t_h / max(t_s, 1e-9), 3),
+                             round(t_s * 1e3, 1), round(t_h * 1e3, 1)])
+            # PR: handwritten only (paper has no synthesized PR — spec
+            # language has no damped-path F; see DESIGN.md)
+            from repro.core.synthesis import pagerank_kernels
+            dk = pagerank_kernels(gu.n, tol=1e-6, max_iter=100)
+            t_h, res_h = timed(lambda: engine.run_direct(gu, dk, engine=eng),
+                               repeats=3)
+            rows.append([gname, eng, "PR", "-", round(res_h.stats.edge_work),
+                         "-", "-", round(t_h * 1e3, 1)])
+    return emit(rows, ["graph", "engine", "usecase", "edge_work_ratio",
+                       "edge_work_synth", "speedup_H_over_S",
+                       "t_synth_ms", "t_hand_ms"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 15: analysis time — #path-based reductions, fusion time (ms)
+and kernel-synthesis (bounded constraint solving) time per use-case."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import fusion
+from repro.core import usecases as U
+from repro.core.synthesis import _CACHE, synthesize_round
+
+CASES = ["BFS", "CC", "SSSP", "WP", "WSP", "NSP", "NWR", "RADIUS", "DS",
+         "DRR", "Trust", "RDS"]
+
+
+def run():
+    rows = []
+    for name in CASES:
+        spec = U.ALL_SPECS[name]()
+        prog = fusion.fuse(spec)
+        n_pbr = sum(len(r.components) for _, r in prog.rounds)
+        _CACHE.clear()                      # honest cold-synthesis timing
+        t0 = time.perf_counter()
+        for _, round_ in prog.rounds:
+            if round_.leaves:
+                synthesize_round(round_)
+        synth_ms = (time.perf_counter() - t0) * 1e3
+        rows.append([name, n_pbr, round(prog.stats.wall_ms, 2),
+                     round(synth_ms, 1), prog.stats.total_rules(),
+                     prog.stats.cse])
+    return emit(rows, ["usecase", "n_pbr", "fusion_ms", "synthesis_ms",
+                       "fusion_rules_applied", "cse_eliminated"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Train a GNN end-to-end on CPU: GAT node classification on a synthetic
+cora-shaped graph, with the FT driver, checkpointing and loss tracking.
+
+    PYTHONPATH=src python examples/train_gnn.py [--steps 60]
+
+The loss must fall — this is the 'few hundred steps of a real model'
+end-to-end driver at laptop scale.
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.data import graphs as dg
+from repro.models import gnn as G
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.runtime.ft import FTConfig, FaultTolerantDriver
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get("gat-cora").full()
+    cfg = type(cfg)(name=cfg.name, n_layers=2, d_hidden=8, n_heads=8,
+                    d_in=128, n_classes=7)
+    batch = dg.cora_batch(n=400, e=2400, d_feat=cfg.d_in, seed=0)
+
+    key = jax.random.PRNGKey(0)
+    params = G.gat_init(cfg, key)
+    opt_cfg = AdamWConfig(lr=5e-3, warmup_steps=10, total_steps=args.steps)
+    opt = adamw_init(opt_cfg, params)
+
+    @jax.jit
+    def step(state, b):
+        params, opt = state
+        loss, grads = jax.value_and_grad(
+            lambda p: G.gat_loss(cfg, p, b))(params)
+        params, opt, m = adamw_update(opt_cfg, params, grads, opt)
+        return (params, opt), {"loss": loss, **m}
+
+    ckpt_dir = tempfile.mkdtemp(prefix="gat_ckpt_")
+    counter = {"step": 0}
+    ft = FaultTolerantDriver(
+        FTConfig(ckpt_dir=ckpt_dir, ckpt_every=25),
+        step, lambda: dict(counter),
+        lambda st: counter.update(step=int(st["step"])))
+
+    losses = []
+    state = (params, opt)
+
+    def next_batch():
+        counter["step"] += 1
+        return batch
+
+    state, n, metrics = ft.train(state, args.steps, next_batch)
+    # report the trajectory by re-evaluating checkpoints of the loss
+    l0 = float(G.gat_loss(cfg, params, batch))
+    l1 = float(G.gat_loss(cfg, state[0], batch))
+    acc = float(jnp.mean(jnp.argmax(G.gat_forward(
+        cfg, state[0], batch["x"], batch["src"], batch["dst"],
+        batch["x"].shape[0]), -1) == batch["y"]))
+    print(f"[train_gnn] steps={n} loss {l0:.4f} -> {l1:.4f} "
+          f"(train acc {acc:.2f}); checkpoints in {ckpt_dir}")
+    assert l1 < l0, "loss did not fall"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,161 @@
+"""Triple-let executor: iteration → map → reduce (paper §5).
+
+Runs a ``FusedProgram`` (from fusion.fuse or fusion.lower_unfused) on a
+graph under one of the five engines:
+
+  pull | push   sparse frontier engines (iterate.iterate_graph)
+  dense         dense edge-matrix reference engine
+  pallas        blocked-ELL TPU kernel engine (repro.kernels)
+  distributed   shard_map vertex-cut engine (needs a mesh)
+
+The three primitives map exactly as §5 prescribes: the fused ilet runs as an
+iterative path reduction, the mlet as a vectorized per-vertex map, the rlet
+as (masked) reductions over the vertex dimension, and the final expression
+evaluates on the results.  ⊥ values (reduction identities / ±inf) are
+excluded from vertex reductions per C6 (R(n, ⊥) = n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import iterate
+from repro.core.fusion import FusedProgram, FusedRound, plan_output
+from repro.core.kernel_lang import eval_expr
+from repro.core.synthesis import DirectKernels, synthesize_round
+
+_BOT_CUTOFF = 1e8
+
+
+@dataclasses.dataclass
+class ExecStats:
+    rounds: int = 0
+    iterations: int = 0
+    edge_work: float = 0.0
+    synth_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class ExecResult:
+    value: object                  # final result (array for vertex queries)
+    named: dict                    # bound intermediate results
+    stats: ExecStats
+
+
+def _valid_mask(x):
+    xf = x.astype(jnp.float32)
+    return jnp.isfinite(xf) & (jnp.abs(xf) < _BOT_CUTOFF)
+
+
+def _vertex_reduce(op: str, vals, mask):
+    vals = vals.astype(jnp.float32)
+    if op == "collect":
+        return mask
+    ident = {"min": jnp.inf, "max": -jnp.inf, "sum": 0.0, "prod": 1.0}[op]
+    masked = jnp.where(mask, vals, ident)
+    fn = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum, "prod": jnp.prod}[op]
+    return fn(masked)
+
+
+def _run_iteration(g, round_: FusedRound, engine: str, model: str,
+                   mesh, axes, max_iter, tol, synth_override=None):
+    synth = synth_override if synth_override is not None else synthesize_round(round_)
+    comps = iterate.comp_runtimes(round_, {k: v for k, v in synth.items()
+                                           if not isinstance(k, tuple)})
+    plans = [leaf.plan for leaf in round_.leaves]
+    if engine in ("pull", "push"):
+        m = model or ("pull+" if engine == "pull" else "push+")
+        res = iterate.iterate_graph(g, comps, plans, model=m,
+                                    max_iter=max_iter, tol=tol)
+    elif engine == "adaptive":
+        res = iterate.iterate_adaptive(g, comps, plans, max_iter=max_iter,
+                                       tol=tol)
+    elif engine == "dense":
+        res = iterate.iterate_dense(g, comps, plans, max_iter=max_iter, tol=tol)
+    elif engine == "distributed":
+        assert mesh is not None, "distributed engine needs a mesh"
+        res = iterate.iterate_distributed(g, comps, plans, mesh, axes=axes,
+                                          model=model or "pull+",
+                                          max_iter=max_iter, tol=tol)
+    elif engine == "pallas":
+        from repro.kernels import ops as kops
+        res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol)
+    else:
+        raise ValueError(f"unknown engine {engine}")
+    return res, comps
+
+
+def run_program(g, prog: FusedProgram, engine: str = "pull",
+                model: Optional[str] = None, mesh=None, axes=("data",),
+                max_iter: Optional[int] = None, tol: float = 0.0) -> ExecResult:
+    stats = ExecStats()
+    named: dict = {}
+    final = None
+    for bind_name, round_ in prog.rounds:
+        env: dict = {}
+        for key, val in named.items():
+            env[key] = val
+        if round_.leaves:
+            res, comps = _run_iteration(g, round_, engine, model, mesh, axes,
+                                        max_iter, tol)
+            stats.rounds += 1
+            stats.iterations += res.iterations
+            stats.edge_work += res.edge_work
+            for leaf in round_.leaves:
+                env[leaf.name] = res.state[plan_output(leaf.plan)]
+        # mlet: vectorized per-vertex map
+        for name, expr in round_.maps:
+            env[name] = eval_expr(expr, env, jnp)
+        # rlet: masked vertex reductions
+        for name, op, m_name, cond_name in round_.vreduces:
+            vals = jnp.asarray(env[m_name])
+            vals = jnp.broadcast_to(vals, (g.n,)) if vals.ndim == 0 else vals
+            mask = _valid_mask(vals)
+            if cond_name is not None:
+                cond = jnp.asarray(env[cond_name])
+                mask = mask & jnp.broadcast_to(cond.astype(bool), (g.n,))
+            env[name] = _vertex_reduce(op, vals, mask)
+        out = eval_expr(round_.out, env, jnp)
+        if bind_name is not None:
+            prefix = "$vec:" if round_.out_kind == "vertex" else "$scalar:"
+            named[prefix + bind_name] = out
+        final = out
+    return ExecResult(value=final, named=named, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Direct-kernel execution (PageRank and other Fig. 4b style kernel sets).
+# ---------------------------------------------------------------------------
+
+def run_direct(g, dk: DirectKernels, engine: str = "pull",
+               mesh=None, axes=("data",)) -> ExecResult:
+    from repro.core.fusion import Component, FusedRound, Leaf, Prim
+    from repro.core.lang import PATH_FNS, WEIGHT
+
+    comp = iterate.CompRuntime(
+        idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
+        p_fn=dk.p_fn, init_fn=dk.init_fn, source=None, e_fn=dk.e_fn)
+    plans = [Prim(dk.rop, 0)]
+    # frontier-masked (+) models for idempotent kernels (BFS/CC/SSSP/WP);
+    # full-recompute (−) for non-idempotent / epilogue kernels (PageRank)
+    idempotent = dk.rop in iterate._IDEMPOTENT_OPS and dk.e_fn is None
+    pull_like = engine in ("pull", "dense", "distributed")
+    model = ("pull+" if pull_like else "push+") if idempotent else \
+        ("pull-" if pull_like else "push-")
+    if engine in ("pull", "push"):
+        res = iterate.iterate_graph(g, [comp], plans, model=model,
+                                    max_iter=dk.max_iter, tol=dk.tol)
+    elif engine == "dense":
+        res = iterate.iterate_dense(g, [comp], plans, max_iter=dk.max_iter,
+                                    tol=dk.tol)
+    elif engine == "distributed":
+        res = iterate.iterate_distributed(g, [comp], plans, mesh, axes=axes,
+                                          model="pull-", max_iter=dk.max_iter,
+                                          tol=dk.tol)
+    else:
+        raise ValueError(engine)
+    stats = ExecStats(rounds=1, iterations=res.iterations, edge_work=res.edge_work)
+    return ExecResult(value=res.state[0], named={}, stats=stats)

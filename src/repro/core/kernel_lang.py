@@ -1,0 +1,183 @@
+"""The kernel-function expression language (paper Fig. 4a).
+
+Bodies of the iteration kernel functions I, P, R, E are expressions over a
+small typed grammar.  The same grammar drives (a) type-guided enumerative
+synthesis (§5.2), (b) evaluation as JAX-traceable closures inside the
+iteration engines, and (c) pretty-printing ("code generation" for the
+backends).
+
+Environment names available to expressions:
+  n        current propagated value                (type = value type T)
+  v        vertex id (init function)               VERT
+  s        source vertex id (init function)        VERT
+  w        weight(e)                               FLT
+  c        capacity(e)                             FLT
+  esrc     src(e)                                  VERT
+  edst     dst(e)                                  VERT
+  outdeg   outdeg(src(e))                          FLT (for PageRank-style P)
+  indeg    indeg(dst(e))                           FLT
+  nv       |V|                                     FLT
+  bot      ⊥ of the value type                     T
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+INT, FLT, BOOL, VERT = "int", "float", "bool", "vert"
+
+
+@dataclasses.dataclass(frozen=True)
+class Expr:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Lit(Expr):
+    val: float
+    ty: str
+
+    def __str__(self):
+        return str(self.val)
+
+
+@dataclasses.dataclass(frozen=True)
+class Var(Expr):
+    name: str
+    ty: str
+
+    def __str__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Bin(Expr):
+    op: str  # + - * / min max == < >
+    a: Expr
+    b: Expr
+
+    def __str__(self):
+        if self.op in ("min", "max"):
+            return f"{self.op}({self.a}, {self.b})"
+        return f"({self.a} {self.op} {self.b})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ITE(Expr):
+    c: Expr
+    a: Expr
+    b: Expr
+
+    def __str__(self):
+        return f"(if {self.c} then {self.a} else {self.b})"
+
+
+_BIN_FNS = {
+    "+": lambda a, b, xp: a + b,
+    "-": lambda a, b, xp: a - b,
+    "*": lambda a, b, xp: a * b,
+    "/": lambda a, b, xp: a / b,
+    "min": lambda a, b, xp: xp.minimum(a, b),
+    "max": lambda a, b, xp: xp.maximum(a, b),
+    "==": lambda a, b, xp: a == b,
+    "<": lambda a, b, xp: a < b,
+    ">": lambda a, b, xp: a > b,
+    "<=": lambda a, b, xp: a <= b,
+    ">=": lambda a, b, xp: a >= b,
+}
+
+
+def eval_expr(e: Expr, env: dict, xp=jnp):
+    if isinstance(e, Lit):
+        return e.val
+    if isinstance(e, Var):
+        return env[e.name]
+    if isinstance(e, Bin):
+        return _BIN_FNS[e.op](eval_expr(e.a, env, xp), eval_expr(e.b, env, xp), xp)
+    if isinstance(e, ITE):
+        c = eval_expr(e.c, env, xp)
+        a, b = eval_expr(e.a, env, xp), eval_expr(e.b, env, xp)
+        return xp.where(c, a, b) if xp is jnp else np.where(c, a, b)
+    raise TypeError(e)
+
+
+def compile_expr(e: Expr) -> Callable[[dict], object]:
+    """Expr → JAX-traceable closure over an env of arrays/scalars."""
+    return lambda env: eval_expr(e, env, jnp)
+
+
+def expr_size(e: Expr) -> int:
+    if isinstance(e, (Lit, Var)):
+        return 1
+    if isinstance(e, Bin):
+        return 1 + expr_size(e.a) + expr_size(e.b)
+    if isinstance(e, ITE):
+        return 1 + expr_size(e.c) + expr_size(e.a) + expr_size(e.b)
+    raise TypeError(e)
+
+
+# ---------------------------------------------------------------------------
+# Type-guided enumerative search (§5.2): expressions of a requested type in
+# order of increasing size, memoized per (type, size).
+# ---------------------------------------------------------------------------
+
+_ARITH_OPS = ("+", "-", "min", "max", "*", "/")
+_NUM = (INT, FLT)
+
+
+class Enumerator:
+    def __init__(self, terminals):
+        """terminals: list[Expr] (Vars and Lits available in this context)."""
+        self.terminals = list(terminals)
+        self._memo: dict = {}
+
+    def of(self, ty: str, size: int):
+        """All expressions of type `ty` with exactly `size` AST nodes."""
+        key = (ty, size)
+        if key in self._memo:
+            return self._memo[key]
+        out = []
+        if size == 1:
+            out = [t for t in self.terminals
+                   if t.ty == ty or (ty == FLT and t.ty == INT)]
+        else:
+            if ty in _NUM:
+                for op in _ARITH_OPS:
+                    # int expressions stay int-typed; '/' only for floats
+                    if op == "/" and ty == INT:
+                        continue
+                    for sa in range(1, size - 1):
+                        for a in self.of(ty, sa):
+                            for b in self.of(ty, size - 1 - sa):
+                                out.append(Bin(op, a, b))
+            if ty == VERT and size >= 1:
+                pass  # vertex-typed exprs are terminals only (ids aren't arithmetic)
+            if ty == BOOL:
+                for op in ("==", "<"):
+                    for base_ty in (INT, FLT, VERT):
+                        for sa in range(1, size - 1):
+                            for a in self.of(base_ty, sa):
+                                for b in self.of(base_ty, size - 1 - sa):
+                                    out.append(Bin(op, a, b))
+        self._memo[key] = out
+        return out
+
+    def upto(self, ty: str, max_size: int):
+        for k in range(1, max_size + 1):
+            yield from self.of(ty, k)
+
+
+def default_terminals(value_ty: str, for_init: bool = False):
+    """Terminal set for synthesizing P (or I when for_init)."""
+    ts = [Lit(0, INT), Lit(1, INT)]
+    if for_init:
+        ts += [Var("v", VERT), Var("s", VERT)]
+    else:
+        ts += [Var("n", value_ty), Var("w", FLT), Var("c", FLT),
+               Var("esrc", VERT), Var("edst", VERT), Var("outdeg", FLT),
+               Var("nv", FLT)]
+    return ts

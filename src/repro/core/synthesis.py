@@ -1,0 +1,206 @@
+"""Type-guided enumerative synthesis of the iteration kernel functions
+(paper §5.2).
+
+Given a factored path-based reduction ``R F`` the synthesizer searches the
+grammar of Fig. 4a (kernel_lang) in order of increasing expression size for
+
+  I — the initialization function, specified by C1/C2,
+  P — the propagation function, specified by C4/C5 (wrapped into P' for C3),
+  R — the reduction function, validated against C6–C9,
+
+memoizing candidate pools per type and caching results per (F, R).  The
+result is a correct-by-construction kernel set plus printable source for the
+five engine backends (the paper's "code generation").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import conditions as C
+from repro.core import lang as L
+from repro.core.kernel_lang import (Enumerator, Expr, Lit, Var, FLT, INT, VERT,
+                                    compile_expr, default_terminals, expr_size)
+
+
+@dataclasses.dataclass
+class SynthesizedKernels:
+    f: L.PathFn
+    rop: str
+    p_expr: Expr
+    i_expr: Expr                  # on-source branch (C2's ⊥ branch is structural)
+    idempotent: bool
+    terminating: bool             # strengthened C10 verified
+    candidates_tried: int
+    wall_ms: float
+
+    def p_fn(self):
+        return compile_expr(self.p_expr)
+
+    def init_fn(self):
+        fn = compile_expr(self.i_expr)
+        return lambda v: fn({"v": v, "s": v})   # evaluated per-vertex
+
+    def describe(self) -> str:
+        return (f"I := λv. if (v = s) {self.i_expr} else ⊥\n"
+                f"P := λn, e. {self.p_expr}\n"
+                f"R := {self.rop}  (idempotent={self.idempotent})\n"
+                f"E := λn. n")
+
+
+_VALUE_TY = {"int": INT, "float": FLT, "vert": VERT}
+_CACHE: dict = {}
+
+
+class SynthesisError(Exception):
+    pass
+
+
+def synthesize_component(f: L.PathFn, rop: str,
+                         require_idempotent: bool = False) -> SynthesizedKernels:
+    key = (f.kind, rop, require_idempotent)
+    if key in _CACHE:
+        return _CACHE[key]
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(0xC0FFEE)
+    ty = _VALUE_TY[f.dtype]
+
+    if not C.check_R(rop, require_idempotent, rng):
+        raise SynthesisError(f"reduction {rop} violates C7–C9 "
+                             f"(idempotent={require_idempotent})")
+
+    # --- P: C5 then C4, smallest first ------------------------------------
+    tried = 0
+    p_expr = None
+    enum = Enumerator(default_terminals(ty))
+    for cand in enum.upto(ty, 5):
+        tried += 1
+        if C.check_C5(cand, f, rng) and C.check_C4(cand, f, rop, rng):
+            p_expr = cand
+            break
+    if p_expr is None:
+        raise SynthesisError(f"no propagation function found for {rop} {f}")
+
+    # --- I: the on-source branch must match F(⟨v,v⟩) (C1) ------------------
+    init_terms = [Lit(0, INT), Lit(1, INT), Lit(L.CAP_INF, FLT),
+                  Var("v", VERT), Var("s", VERT)]
+    i_expr = None
+    ienum = Enumerator(init_terms)
+    for cand in ienum.upto(ty, 3):
+        tried += 1
+        if C.check_I(cand, f, rng):
+            i_expr = cand
+            break
+    if i_expr is None:
+        raise SynthesisError(f"no initialization function found for {f}")
+
+    terminating = C.check_C10(f, rop, rng)
+    out = SynthesizedKernels(
+        f=f, rop=rop, p_expr=p_expr, i_expr=i_expr,
+        idempotent=L.IDEMPOTENT[rop], terminating=terminating,
+        candidates_tried=tried, wall_ms=(time.perf_counter() - t0) * 1e3)
+    _CACHE[key] = out
+    return out
+
+
+def synthesize_round(round_) -> dict:
+    """Synthesize kernels for every component of a FusedRound.
+
+    Returns {comp_idx: (p_fn, init_fn)} for iterate.comp_runtimes, plus the
+    SynthesizedKernels records under key ("kernels", idx)."""
+    from repro.core.fusion import Lex, Prim
+
+    ops = {}
+
+    def walk(plan):
+        ops[plan.comp] = plan.op
+        if isinstance(plan, Lex):
+            walk(plan.secondary)
+
+    for leaf in round_.leaves:
+        walk(leaf.plan)
+
+    out = {}
+    for comp in round_.components:
+        sk = synthesize_component(comp.f, ops[comp.idx])
+        out[comp.idx] = (sk.p_fn(), sk.init_fn())
+        out[("kernels", comp.idx)] = sk
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Direct kernel specification (PageRank — paper Fig. 4b gives the kernels
+# explicitly; PR's damped-path F is outside the spec language).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DirectKernels:
+    """User-supplied kernels, same shape the synthesizer produces."""
+    name: str
+    rop: str
+    dtype: str                      # "int" | "float"
+    p_fn: object                    # env → value
+    init_fn: object                 # v → value
+    e_fn: Optional[object] = None   # epilogue
+    tol: float = 0.0
+    max_iter: Optional[int] = None
+
+
+def pagerank_kernels(n: int, gamma: float = 0.85, tol: float = 1e-6,
+                     max_iter: int = 100) -> DirectKernels:
+    """Fig. 4b: I = λv. 1/|V|;  P = λn,e. n / outdeg(src(e));  R = sum;
+    E = λn. γ·n + (1−γ)/|V|."""
+    return DirectKernels(
+        name="pagerank", rop="sum", dtype="float",
+        p_fn=lambda env: env["n"] / env["outdeg"],
+        init_fn=lambda v: v * 0 + 1.0 / n,
+        e_fn=lambda env: gamma * env["n"] + (1.0 - gamma) / n,
+        tol=tol, max_iter=max_iter)
+
+
+# ---------------------------------------------------------------------------
+# Backend code generation: printable per-engine source for a kernel set.
+# ---------------------------------------------------------------------------
+
+_ENGINE_TEMPLATES = {
+    "pull": """# pull engine (PowerGraph-pull analogue) — generated by Grafs
+def propagate(n, w, c, esrc, edst, outdeg, nv):
+    return {p}
+def init(v, s):
+    return jnp.where(v == s, {i}, IDENT)   # IDENT = ⊥ of {rop}
+# per iteration: vals = propagate(state[src], ...);  segment_{rop}(vals, dst)
+""",
+    "push": """# push engine (Ligra analogue) — generated by Grafs
+def propagate(n, w, c, esrc, edst, outdeg, nv):
+    return {p}
+# per iteration: frontier-masked  state.at[dst].{rop}(propagate(state[src]))
+""",
+    "dense": """# dense engine (GridGraph analogue) — generated by Grafs
+# new[v] = {rop} over u of P(state[u], W[u,v]) on the dense edge matrix
+def propagate(n, w, c, esrc, edst, outdeg, nv):
+    return {p}
+""",
+    "distributed": """# distributed engine (Gemini analogue) — generated by Grafs
+# per shard: local segment_{rop}; cross-shard combine: {collective}
+def propagate(n, w, c, esrc, edst, outdeg, nv):
+    return {p}
+""",
+    "pallas": """# pallas engine (GraphIt analogue) — generated by Grafs
+# blocked-ELL tile kernel: gather → propagate → masked {rop}-reduce in VMEM
+def propagate(n, w, c, esrc, edst, outdeg, nv):
+    return {p}
+""",
+}
+
+_COLLECTIVE = {"min": "lax.pmin", "max": "lax.pmax", "sum": "lax.psum",
+               "or": "lax.pmax", "and": "lax.pmin", "prod": "all_gather+prod"}
+
+
+def emit_source(sk: SynthesizedKernels, engine: str) -> str:
+    tpl = _ENGINE_TEMPLATES[engine]
+    return tpl.format(p=str(sk.p_expr), i=str(sk.i_expr), rop=sk.rop,
+                      collective=_COLLECTIVE[sk.rop])

@@ -1,0 +1,2 @@
+from repro.data.tokens import TokenStream
+from repro.data import graphs

@@ -1,0 +1,2 @@
+from repro.graph.structure import Graph, BlockedELL, rmat_graph, uniform_graph, grid_graph, line_graph, cora_like
+from repro.graph import segment

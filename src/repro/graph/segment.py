@@ -1,0 +1,127 @@
+"""Segment/scatter reduction primitives with explicit monoid identities.
+
+Condition C6 of the paper (``R(n, ⊥) = n``) makes ⊥ the identity element of
+every admissible reduction, so ⊥ is represented by the identity value of the
+monoid (DESIGN.md §2).  Every engine (pull segment ops, push scatters, the
+Pallas kernel, the distributed combiner) draws identities from here so they
+agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Large-but-finite sentinels; jnp.inf works for f32 but ints need finite caps.
+_INT_INF = jnp.iinfo(jnp.int32).max // 2
+
+
+def identity(op: str, dtype):
+    """Monoid identity as a NumPy scalar.
+
+    NumPy (not jnp) so the value stays concrete inside jit/while_loop traces
+    (JAX ≥0.8 turns in-trace jnp constants into tracers) and can cross the
+    Pallas kernel boundary as a static parameter.
+    """
+    import numpy as np
+    dtype = jnp.dtype(dtype)
+    if op == "min":
+        v = _INT_INF if jnp.issubdtype(dtype, jnp.integer) else np.inf
+    elif op == "max":
+        v = -_INT_INF if jnp.issubdtype(dtype, jnp.integer) else -np.inf
+    elif op in ("sum",):
+        v = 0
+    elif op == "prod":
+        v = 1
+    elif op == "or":
+        v = False
+    elif op == "and":
+        v = True
+    else:
+        raise ValueError(f"unknown reduction {op}")
+    return np.dtype(dtype).type(v)
+
+
+def segment_reduce(op: str, data, segment_ids, num_segments: int):
+    """Pull-side reduction: dst-keyed segment reduce with identity fill."""
+    if op == "min":
+        # segment_min fills empty segments with the dtype max; clamp to our
+        # finite identity so downstream arithmetic stays overflow-free.
+        out = jax.ops.segment_min(data, segment_ids, num_segments)
+        return jnp.minimum(out, identity("min", data.dtype))
+    if op == "max":
+        out = jax.ops.segment_max(data, segment_ids, num_segments)
+        return jnp.maximum(out, identity("max", data.dtype))
+    if op == "sum":
+        return jax.ops.segment_sum(data, segment_ids, num_segments)
+    if op == "prod":
+        return jax.ops.segment_prod(data, segment_ids, num_segments)
+    if op == "or":
+        return jax.ops.segment_max(data.astype(jnp.int32), segment_ids,
+                                   num_segments).astype(data.dtype)
+    if op == "and":
+        return jax.ops.segment_min(data.astype(jnp.int32), segment_ids,
+                                   num_segments).astype(data.dtype)
+    raise ValueError(f"unknown reduction {op}")
+
+
+def scatter_reduce(op: str, init, data, segment_ids):
+    """Push-side reduction: ``init.at[ids].op(data)``. ``init`` must already
+    hold current values (idempotent path) or identities (non-idempotent)."""
+    if op == "min":
+        return init.at[segment_ids].min(data)
+    if op == "max":
+        return init.at[segment_ids].max(data)
+    if op == "sum":
+        return init.at[segment_ids].add(data)
+    if op == "prod":
+        return init.at[segment_ids].mul(data)
+    if op == "or":
+        return init.at[segment_ids].max(data.astype(init.dtype))
+    if op == "and":
+        return init.at[segment_ids].min(data.astype(init.dtype))
+    raise ValueError(f"unknown reduction {op}")
+
+
+def combine(op: str, a, b):
+    """Elementwise monoid combine (used to merge partials across shards)."""
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "or":
+        return jnp.maximum(a, b)          # dtype-preserving ∨ on {0,1}/bool
+    if op == "and":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unknown reduction {op}")
+
+
+def psum_like(op: str, x, axis_name):
+    """Cross-shard combine for the distributed engine."""
+    if op == "sum":
+        return jax.lax.psum(x, axis_name)
+    if op == "min":
+        return jax.lax.pmin(x, axis_name)
+    if op == "max":
+        return jax.lax.pmax(x, axis_name)
+    if op == "or":
+        return jax.lax.pmax(x.astype(jnp.int32), axis_name).astype(x.dtype)
+    if op == "and":
+        return jax.lax.pmin(x.astype(jnp.int32), axis_name).astype(x.dtype)
+    if op == "prod":
+        # no native pprod; log-space would lose sign — use all_gather+prod.
+        g = jax.lax.all_gather(x, axis_name)
+        return jnp.prod(g, axis=0)
+    raise ValueError(f"unknown reduction {op}")
+
+
+def segment_softmax(scores, segment_ids, num_segments: int):
+    """Numerically-stable per-segment softmax (GAT edge attention)."""
+    smax = jax.ops.segment_max(scores, segment_ids, num_segments)
+    smax = jnp.maximum(smax, identity("max", scores.dtype))
+    ex = jnp.exp(scores - smax[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-30)

@@ -1,0 +1,209 @@
+"""Graph containers shared by the GraFS engines and the GNN models.
+
+Edges are stored twice, in destination-sorted order (pull / CSR-style:
+``segment_*`` reductions key on ``dst``) and in source-sorted order
+(push / CSC-style: frontier-masked scatters key on ``src``).  Both orders
+refer to the same logical edge set; per-edge data (weight, capacity) is
+carried alongside each order so engines never re-permute at run time.
+
+A ``BlockedELL`` layout additionally pads per-vertex in-degrees to a fixed
+width so the Pallas TPU kernel sees fully regular tiles (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeOrder:
+    """One ordering of the edge list plus its per-edge data."""
+    src: jnp.ndarray        # [E] int32
+    dst: jnp.ndarray        # [E] int32
+    weight: jnp.ndarray     # [E] float32
+    capacity: jnp.ndarray   # [E] float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    n: int
+    by_dst: EdgeOrder       # sorted by dst (pull engines)
+    by_src: EdgeOrder       # sorted by src (push engines)
+    in_deg: jnp.ndarray     # [n] int32
+    out_deg: jnp.ndarray    # [n] int32
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.by_dst.src.shape[0])
+
+    def host_edges(self):
+        """(src, dst, weight, capacity) as numpy, dst-sorted."""
+        e = self.by_dst
+        return (np.asarray(e.src), np.asarray(e.dst),
+                np.asarray(e.weight), np.asarray(e.capacity))
+
+
+def from_edges(n: int, src, dst, weight=None, capacity=None) -> Graph:
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    e = src.shape[0]
+    if weight is None:
+        weight = np.ones((e,), dtype=np.float32)
+    if capacity is None:
+        capacity = np.ones((e,), dtype=np.float32)
+    weight = np.asarray(weight, dtype=np.float32)
+    capacity = np.asarray(capacity, dtype=np.float32)
+
+    def order(key):
+        perm = np.argsort(key, kind="stable")
+        return EdgeOrder(src=jnp.asarray(src[perm]), dst=jnp.asarray(dst[perm]),
+                         weight=jnp.asarray(weight[perm]),
+                         capacity=jnp.asarray(capacity[perm]))
+
+    in_deg = np.bincount(dst, minlength=n).astype(np.int32)
+    out_deg = np.bincount(src, minlength=n).astype(np.int32)
+    return Graph(n=n, by_dst=order(dst), by_src=order(src),
+                 in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg))
+
+
+# ---------------------------------------------------------------------------
+# Blocked-ELL layout for the Pallas edge kernel.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockedELL:
+    """Degree-padded predecessor lists.
+
+    ``srcs[v, k]`` is the k-th predecessor of vertex v (or 0 where padded),
+    ``mask[v, k]`` marks real slots.  ``n_pad`` and ``width`` are multiples of
+    the requested tile sizes so a Pallas grid covers the arrays exactly.
+    """
+    n: int                  # logical vertex count
+    n_pad: int
+    width: int              # padded max in-degree
+    srcs: jnp.ndarray       # [n_pad, width] int32
+    weight: jnp.ndarray     # [n_pad, width] float32
+    capacity: jnp.ndarray   # [n_pad, width] float32
+    mask: jnp.ndarray       # [n_pad, width] bool
+
+
+def to_blocked_ell(g: Graph, block_v: int = 8, block_e: int = 128) -> BlockedELL:
+    src, dst, w, c = g.host_edges()
+    n = g.n
+    deg = np.bincount(dst, minlength=n)
+    width = int(max(1, deg.max() if deg.size else 1))
+    width = ((width + block_e - 1) // block_e) * block_e
+    n_pad = ((n + block_v - 1) // block_v) * block_v
+    srcs = np.zeros((n_pad, width), dtype=np.int32)
+    ws = np.zeros((n_pad, width), dtype=np.float32)
+    cs = np.zeros((n_pad, width), dtype=np.float32)
+    mask = np.zeros((n_pad, width), dtype=bool)
+    slot = np.zeros(n, dtype=np.int64)
+    # dst-sorted edges fill rows left to right
+    for i in range(src.shape[0]):
+        v = dst[i]
+        k = slot[v]
+        srcs[v, k] = src[i]
+        ws[v, k] = w[i]
+        cs[v, k] = c[i]
+        mask[v, k] = True
+        slot[v] = k + 1
+    return BlockedELL(n=n, n_pad=n_pad, width=width,
+                      srcs=jnp.asarray(srcs), weight=jnp.asarray(ws),
+                      capacity=jnp.asarray(cs), mask=jnp.asarray(mask))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic graph generators (seeded, host-side numpy).
+# ---------------------------------------------------------------------------
+
+def _dedupe(n, src, dst):
+    keep = src != dst  # drop self loops
+    src, dst = src[keep], dst[keep]
+    key = src.astype(np.int64) * n + dst
+    _, idx = np.unique(key, return_index=True)
+    return src[idx], dst[idx]
+
+
+def rmat_graph(n: int, e: int, seed: int = 0, weighted: bool = True,
+               a=0.57, b=0.19, c=0.19) -> Graph:
+    """R-MAT power-law generator (Chakrabarti et al.), deduped, no self loops."""
+    rng = np.random.default_rng(seed)
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    n_round = 1 << scale
+    src = np.zeros(e, dtype=np.int64)
+    dst = np.zeros(e, dtype=np.int64)
+    for level in range(scale):
+        r = rng.random(e)
+        right = r >= a + b            # quadrant column
+        bottom = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        src = src * 2 + bottom
+        dst = dst * 2 + right
+    src, dst = src % n, dst % n
+    src, dst = _dedupe(n, src, dst)
+    w = rng.integers(1, 64, size=src.shape[0]).astype(np.float32) if weighted \
+        else np.ones(src.shape[0], np.float32)
+    cap = rng.integers(1, 64, size=src.shape[0]).astype(np.float32) if weighted \
+        else np.ones(src.shape[0], np.float32)
+    return from_edges(int(n), src.astype(np.int32), dst.astype(np.int32), w, cap)
+
+
+def uniform_graph(n: int, e: int, seed: int = 0, weighted: bool = True) -> Graph:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=e)
+    dst = rng.integers(0, n, size=e)
+    src, dst = _dedupe(n, src, dst)
+    w = rng.integers(1, 16, size=src.shape[0]).astype(np.float32) if weighted \
+        else np.ones(src.shape[0], np.float32)
+    cap = rng.integers(1, 16, size=src.shape[0]).astype(np.float32) if weighted \
+        else np.ones(src.shape[0], np.float32)
+    return from_edges(int(n), src.astype(np.int32), dst.astype(np.int32), w, cap)
+
+
+def line_graph(n: int, weighted: bool = False, seed: int = 0) -> Graph:
+    src = np.arange(n - 1)
+    dst = np.arange(1, n)
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 9, size=n - 1).astype(np.float32) if weighted \
+        else np.ones(n - 1, np.float32)
+    return from_edges(n, src, dst, w, w[::-1].copy())
+
+
+def grid_graph(rows: int, cols: int, seed: int = 0) -> Graph:
+    """4-neighbour mesh, bidirectional edges (MeshGraphNet-style)."""
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    s, d = [], []
+    s.append(idx[:, :-1].ravel()); d.append(idx[:, 1:].ravel())
+    s.append(idx[:-1, :].ravel()); d.append(idx[1:, :].ravel())
+    src = np.concatenate(s + d)   # both directions
+    dst = np.concatenate(d + s)
+    rng = np.random.default_rng(seed)
+    w = rng.random(src.shape[0]).astype(np.float32) + 0.5
+    return from_edges(rows * cols, src, dst, w, w)
+
+
+def cora_like(n: int = 2708, e: int = 10556, d_feat: int = 1433, seed: int = 0):
+    """Cora-shaped citation graph + features + labels (synthetic, seeded)."""
+    g = uniform_graph(n, e + e // 4, seed=seed, weighted=False)
+    rng = np.random.default_rng(seed + 1)
+    x = (rng.random((n, d_feat)) < 0.012).astype(np.float32)  # sparse bag-of-words
+    y = rng.integers(0, 7, size=n).astype(np.int32)
+    return g, jnp.asarray(x), jnp.asarray(y)
+
+
+def undirected(g: Graph) -> Graph:
+    """Symmetrize: add reverse edges (CC in the paper assumes undirected).
+    Deduplicates — the dense engine represents edges as an adjacency
+    MATRIX, so parallel edges would change non-idempotent reductions
+    (PageRank) relative to the edge-list engines."""
+    src, dst, w, c = g.host_edges()
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    w2 = np.concatenate([w, w])
+    c2 = np.concatenate([c, c])
+    key = s2.astype(np.int64) * g.n + d2
+    _, idx = np.unique(key, return_index=True)
+    return from_edges(g.n, s2[idx], d2[idx], w2[idx], c2[idx])

@@ -1,0 +1,171 @@
+"""Blocked-ELL gather → propagate → reduce Pallas TPU kernel.
+
+This is the hardware adaptation of the paper's per-edge kernel-function
+application (DESIGN.md §2): the CPU frameworks' per-edge atomics / worklists
+become a dst-tiled, degree-padded ELL sweep where every Pallas grid step
+processes a fully regular ``(BLOCK_V dst vertices × BLOCK_E predecessor
+slots)`` tile in VMEM:
+
+  1. gather the predecessor values ``state[srcs]`` (VREG gather from the
+     VMEM-resident state vector),
+  2. apply the synthesized propagation function P (a jnp-traceable closure
+     from repro.core.synthesis — the paper's "kernel function" IS the
+     kernel body),
+  3. masked-reduce along the slot axis with the reduction monoid R, and
+  4. accumulate across slot-tiles in the output block (the grid's minor
+     axis walks the slot tiles, so ``out_ref`` accumulation is safe).
+
+Lexicographic plans (fused nested reductions, rule FPNEST) run one kernel
+invocation per lex level: later levels recompute the earlier levels'
+propagated values and mask to tie slots — the classic two-pass trick, kept
+on-chip per tile.
+
+Padding slots and frontier-inactive sources carry the reduction identity
+(condition C6 makes that sound).  Tiles default to (8, 128): the VPU lane
+layout, and the slot axis a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graph import segment
+
+BLOCK_V = 8
+BLOCK_E = 128
+
+# boolean monoids run as int32 min/max inside the kernel
+_INT_OP = {"or": "max", "and": "min"}
+
+
+def _combine(op: str, a, b):
+    return {"min": jnp.minimum, "max": jnp.maximum,
+            "sum": lambda x, y: x + y, "prod": lambda x, y: x * y}[op](a, b)
+
+
+def _row_reduce(op: str, x, axis):
+    return {"min": jnp.min, "max": jnp.max, "sum": jnp.sum,
+            "prod": jnp.prod}[op](x, axis=axis)
+
+
+def _level_kernel(srcs_ref, w_ref, c_ref, mask_ref, active_ref, outdeg_ref,
+                  *state_and_best, out_ref, op, p_fns, idents, bots,
+                  n_levels, nv, block_v, mode):
+    """One (BLOCK_V, BLOCK_E) tile of one lex level.
+
+    state_and_best = (state_0 .. state_{L-1}, best_0 .. best_{L-2}):
+    full per-vertex state vectors for every level plus the already-reduced
+    best values of the PRIOR levels (tie masks).  Level L-1 is the one being
+    reduced; ``op`` is its monoid.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    srcs = srcs_ref[...]
+    mask = mask_ref[...]
+    act = active_ref[...][srcs] != 0
+    mask = mask & act
+
+    rows = i * block_v + jax.lax.broadcasted_iota(jnp.int32, srcs.shape, 0)
+    env_common = {"w": w_ref[...], "c": c_ref[...], "esrc": srcs,
+                  "edst": rows, "outdeg": outdeg_ref[...][srcs],
+                  "nv": jnp.float32(nv)}
+
+    state_refs = state_and_best[:n_levels]
+    best_refs = state_and_best[n_levels:]
+
+    def prop(level):
+        nvals = state_refs[level][...][srcs]
+        p = p_fns[level]({"n": nvals, **env_common})
+        p = jnp.asarray(p, dtype=nvals.dtype)
+        return jnp.where(nvals == bots[level], idents[level], p), nvals
+
+    # tie masks from the prior levels
+    for lvl in range(n_levels - 1):
+        pv, _ = prop(lvl)
+        mask = mask & (pv == best_refs[lvl][...][:, None])
+
+    pv, nvals = prop(n_levels - 1)
+    if mode == "nonbot":                       # has-pred probe (pull− models)
+        vals = (nvals != bots[n_levels - 1]).astype(out_ref.dtype)
+    else:
+        vals = pv.astype(out_ref.dtype)
+    ident = jnp.asarray(idents[n_levels - 1], out_ref.dtype) if mode == "value" \
+        else jnp.asarray(0, out_ref.dtype)
+    red_op = op if mode == "value" else "max"
+    vals = jnp.where(mask, vals, ident)
+    partial = _row_reduce(red_op, vals, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full(out_ref.shape, ident, out_ref.dtype)
+
+    out_ref[...] = _combine(red_op, out_ref[...], partial)
+
+
+def ell_level_reduce(ell, op: str, p_fns: Sequence[Callable],
+                     states: Sequence[jnp.ndarray],
+                     idents: Sequence, active: jnp.ndarray,
+                     outdeg: jnp.ndarray,
+                     bests: Sequence[jnp.ndarray] = (),
+                     mode: str = "value",
+                     block_v: int = BLOCK_V, block_e: int = BLOCK_E,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Reduce one lex level over the blocked-ELL edges.
+
+    ell       BlockedELL layout (repro.graph.structure.to_blocked_ell)
+    op        monoid of the level being reduced
+    p_fns     propagation closures, one per level (priors first)
+    states    [n_pad] per-vertex value vectors, one per level
+    idents    reduction identities (= ⊥ sentinels), one per level
+    bests     [n_pad] best values of the PRIOR levels (len = len(states)-1)
+    mode      "value" (reduce P values) | "nonbot" (count non-⊥ preds)
+
+    Returns the [n_pad] per-vertex partial reduction.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_levels = len(states)
+    assert len(bests) == n_levels - 1
+    kernel_op = _INT_OP.get(op, op)
+    # Pallas kernels may not close over traced constants — identities must be
+    # Python scalars.
+    idents = tuple(
+        (int(i) if jnp.issubdtype(s.dtype, jnp.integer) else float(i))
+        for i, s in zip(idents, states))
+
+    out_dtype = states[-1].dtype if mode == "value" else jnp.int32
+    n_pad, width = ell.srcs.shape
+    grid = (n_pad // block_v, width // block_e)
+
+    tile = pl.BlockSpec((block_v, block_e), lambda i, j: (i, j))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
+    vrow = pl.BlockSpec((block_v,), lambda i, j: (i,))
+
+    kern = functools.partial(
+        _level_kernel, op=kernel_op, p_fns=tuple(p_fns),
+        idents=tuple(idents), bots=tuple(idents), n_levels=n_levels,
+        nv=float(ell.n), block_v=block_v, mode=mode)
+
+    args = [ell.srcs, ell.weight, ell.capacity, ell.mask,
+            active.astype(jnp.int32), outdeg]
+    specs = [tile, tile, tile, tile, full(active), full(outdeg)]
+    for s in states:
+        args.append(s)
+        specs.append(full(s))
+    for b in bests:
+        args.append(b)
+        specs.append(vrow)
+
+    fn = pl.pallas_call(
+        lambda *refs: kern(*refs[:-1], out_ref=refs[-1]),
+        grid=grid,
+        in_specs=specs,
+        out_specs=vrow,
+        out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
+        interpret=interpret,
+    )
+    return fn(*args)

@@ -1,0 +1,83 @@
+"""EmbeddingBag Pallas kernel (DLRM hot path).
+
+JAX has no native ``nn.EmbeddingBag``; the system-level primitive is a
+ragged gather over the vocab followed by a per-bag reduce.  DLRM bags are
+fixed-width multi-hot (K slots per field), so the TPU layout is dense:
+
+  idx   [B, K]   int32 row ids into the table
+  table [V, D]   float32/bf16 embedding rows
+  out   [B, D]   per-bag sum/mean
+
+Tiling: grid over (B / BLOCK_B, D / BLOCK_D).  The embedding-dim axis is
+blocked at 128 (lane width); each grid step gathers BLOCK_B × K rows of the
+current D-slice and reduces over K in VREGs.  The table is presented as a
+(V, BLOCK_D) VMEM block per step; production tables larger than VMEM stream
+row-ranges via double-buffered DMA — the BlockSpec boundary below is where
+that DMA pipeline attaches (see DESIGN.md §5, DLRM sharding: table rows are
+sharded over the model axis so V_local stays VMEM-resident for RM2 at 64-wide
+embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+BLOCK_D = 128
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref, *, mode, k):
+    idx = idx_ref[...]                         # [BB, K]
+    rows = table_ref[...][idx]                 # [BB, K, BD] VREG gather
+    acc = jnp.sum(rows, axis=1)
+    if mode == "mean":
+        acc = acc / jnp.float32(k)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _bag_kernel_weighted(idx_ref, wgt_ref, table_ref, out_ref, *, mode, k):
+    idx = idx_ref[...]
+    rows = table_ref[...][idx]                 # [BB, K, BD]
+    rows = rows * wgt_ref[...][..., None]
+    acc = jnp.sum(rows, axis=1)
+    if mode == "mean":
+        acc = acc / jnp.float32(k)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray,
+                  weights: Optional[jnp.ndarray] = None, mode: str = "sum",
+                  block_b: int = BLOCK_B, block_d: int = BLOCK_D,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fixed-width EmbeddingBag: table [V, D], idx [B, K] → [B, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    v, d = table.shape
+    b, k = idx.shape
+    block_b = min(block_b, b)
+    block_d = min(block_d, d)
+    assert b % block_b == 0 and d % block_d == 0, (b, d, block_b, block_d)
+    grid = (b // block_b, d // block_d)
+
+    idx_spec = pl.BlockSpec((block_b, k), lambda i, j: (i, 0))
+    tab_spec = pl.BlockSpec((v, block_d), lambda i, j: (0, j))
+    out_spec = pl.BlockSpec((block_b, block_d), lambda i, j: (i, j))
+
+    if weights is None:
+        fn = pl.pallas_call(
+            functools.partial(_bag_kernel, mode=mode, k=k),
+            grid=grid, in_specs=[idx_spec, tab_spec], out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+            interpret=interpret)
+        return fn(idx, table)
+    wgt_spec = pl.BlockSpec((block_b, k), lambda i, j: (i, 0))
+    fn = pl.pallas_call(
+        functools.partial(_bag_kernel_weighted, mode=mode, k=k),
+        grid=grid, in_specs=[idx_spec, wgt_spec, tab_spec], out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret)
+    return fn(idx, weights, table)

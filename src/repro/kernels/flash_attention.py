@@ -1,0 +1,116 @@
+"""Flash-attention forward Pallas kernel (TPU tiling of the online-softmax
+attention the LM stack uses everywhere).
+
+Grid: (B·H, S/BLOCK_Q, T/BLOCK_K); the KV axis is the minor grid dim, so
+the output blocks act as accumulators for the online recurrence:
+
+  m ← max(m, rowmax(logits));  p = exp(logits − m)
+  l ← l·α + rowsum(p);         acc ← acc·α + p @ V_tile,  α = exp(m_old − m)
+
+Causal and chunked-local (llama4 iRoPE) masks are computed per tile from
+iota — no mask tensor exists.  A final jnp epilogue divides acc by l.
+
+Tiles default to (128, 128): MXU-aligned on both matmul dims; the VMEM
+working set per step is q(BQ·D) + k/v(BK·D) + logits(BQ·BK) + acc(BQ·D)
+≈ 4·128·128·4B ≈ 260 KB at D=128 — comfortably inside one core's VMEM.
+Validated against ``ref.ref_flash_attention`` (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, chunk, block_q, block_k):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # [BQ, D]
+    k = k_ref[0].astype(jnp.float32)                      # [BK, D]
+    v = v_ref[0].astype(jnp.float32)
+    logits = q @ k.T * scale                              # [BQ, BK]
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    mask = jnp.ones_like(logits, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if chunk is not None:
+        mask = mask & (kpos // chunk == qpos // chunk)
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_old = m_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(logits, axis=-1))
+    p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[0] = acc_ref[0] * alpha[:, None] + p @ v
+    m_ref[0] = m_new
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    chunk: Optional[int] = None,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: Optional[bool] = None):
+    """q [B, H, S, D]; k/v [B, Hkv, T, D] (GQA: H a multiple of Hkv).
+
+    Returns [B, H, S, D].  Forward only (training uses the XLA-level flash
+    custom-VJP in models.layers; this kernel is the serving/TPU hot path).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = min(block_q, s)
+    while s % bq:
+        bq //= 2
+    bk = min(block_k, t)
+    while t % bk:
+        bk //= 2
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    grid = (b * h, s // bq, t // bk)
+
+    q_spec = pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0))
+    kv_spec = pl.BlockSpec((1, bk, d), lambda bh, i, j: (bh, j, 0))
+    o_spec = pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0))
+    s_spec = pl.BlockSpec((1, bq), lambda bh, i, j: (bh, i))
+
+    kern = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(d), causal=causal,
+        chunk=chunk, block_q=bq, block_k=bk)
+    acc, m, l = pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=(o_spec, s_spec, s_spec),
+        out_shape=(jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b * h, s), jnp.float32),
+                   jax.ShapeDtypeStruct((b * h, s), jnp.float32)),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, s, d).astype(q.dtype)

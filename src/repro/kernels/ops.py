@@ -1,0 +1,142 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+``iterate_pallas`` is the GraphIt-analogue engine (DESIGN.md §2): the same
+fixpoint semantics as ``iterate.iterate_graph`` but with every edge sweep
+executed by the blocked-ELL Pallas kernel.  The other wrappers expose the
+embedding-bag and ELL-softmax kernels behind plain jit'd functions that the
+models call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import iterate
+from repro.core.fusion import Lex, Prim
+from repro.graph.structure import Graph, to_blocked_ell
+from repro.kernels import edge_reduce as _er
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import segment_softmax as _ss
+
+embedding_bag = jax.jit(_eb.embedding_bag,
+                        static_argnames=("mode", "block_b", "block_d",
+                                         "interpret"))
+ell_softmax = jax.jit(_ss.ell_softmax,
+                      static_argnames=("block_v", "block_e", "interpret"))
+
+
+def _plan_levels(plan):
+    levels = []
+    p = plan
+    while isinstance(p, Lex):
+        levels.append((p.comp, p.op))
+        p = p.secondary
+    levels.append((p.comp, p.op))
+    return levels
+
+
+def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
+                   tol: float = 0.0, block_v: int = 8, block_e: int = 128,
+                   interpret: Optional[bool] = None) -> iterate.IterationResult:
+    """Fixpoint of the fused reduction with Pallas edge sweeps.
+
+    Semantics match the pull model (Def. 1 / Def. 2): idempotent plans run
+    frontier-masked (pull+), non-idempotent plans run full-recompute (pull−),
+    per-level lexicographic reductions per fused plan.
+    """
+    n = g.n
+    ell = to_blocked_ell(g, block_v=block_v, block_e=block_e)
+    n_pad = ell.n_pad
+    max_iter = max_iter if max_iter is not None else 2 * n + 4
+    idempotent = all(iterate.plan_idempotent(p) for p in plans)
+    comps_by_idx = {cr.idx: cr for cr in comps}
+    out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
+        jnp.maximum(g.out_deg, 1).astype(jnp.float32))
+    out_deg_real = jnp.zeros(n_pad, jnp.float32).at[:n].set(
+        g.out_deg.astype(jnp.float32))
+
+    def pad_state(x, ident):
+        return jnp.full((n_pad,), ident, x.dtype).at[:n].set(x)
+
+    def init_state():
+        base = iterate._init_state(comps, n)
+        return tuple(pad_state(s, cr.ident) for s, cr in zip(base, comps))
+
+    def run_plan(plan, state_d, active_i32):
+        levels = _plan_levels(plan)
+        bests, out = [], {}
+        for l, (cidx, op) in enumerate(levels):
+            lv = [levels[i][0] for i in range(l + 1)]
+            red = _er.ell_level_reduce(
+                ell, op,
+                p_fns=[comps_by_idx[c].p_fn for c in lv],
+                states=[state_d[c] for c in lv],
+                idents=[comps_by_idx[c].ident for c in lv],
+                active=active_i32, outdeg=out_deg_pad,
+                bests=bests, block_v=block_v, block_e=block_e,
+                interpret=interpret)
+            out[cidx] = red
+            bests.append(red)
+        return out
+
+    def has_pred_of(plan, state_d, active_i32):
+        levels = _plan_levels(plan)
+        out = {}
+        for l, (cidx, _) in enumerate(levels):
+            lv = [levels[i][0] for i in range(l + 1)]
+            hp = _er.ell_level_reduce(
+                ell, "max",
+                p_fns=[comps_by_idx[c].p_fn for c in lv],
+                states=[state_d[c] for c in lv],
+                idents=[comps_by_idx[c].ident for c in lv],
+                active=active_i32, outdeg=out_deg_pad,
+                bests=[], mode="nonbot", block_v=block_v, block_e=block_e,
+                interpret=interpret)
+            out[cidx] = hp.astype(bool)
+        return out
+
+    ones_active = jnp.ones(n_pad, jnp.int32)
+
+    def body(carry):
+        state, active, k, work = carry
+        state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
+        if idempotent:
+            active_i32 = active.astype(jnp.int32)
+            work = work + jnp.sum(out_deg_real * active.astype(jnp.float32))
+            red = {}
+            for p in plans:
+                red.update(run_plan(p, state_d, active_i32))
+            new_d = {}
+            for p in plans:
+                new_d.update(iterate.plan_merge(p, state_d, red, comps_by_idx))
+        else:
+            work = work + jnp.float32(g.num_edges)
+            red = {}
+            for p in plans:
+                red.update(run_plan(p, state_d, ones_active))
+            red = iterate._apply_epilogue(comps, red)
+            has_pred = {}
+            for p in plans:
+                for cidx, _ in _plan_levels(p):
+                    has_pred.update(has_pred_of(Prim("max", cidx), state_d,
+                                                ones_active))
+            new_d = iterate._recompute_merge(plans, comps_by_idx, state_d,
+                                             red, has_pred)
+        new = tuple(new_d[cr.idx] for cr in comps)
+        ch = iterate._changed(comps, new, state, tol)
+        return new, ch, k + 1, work
+
+    def cond(carry):
+        _, active, k, _ = carry
+        return jnp.any(active) & (k < max_iter)
+
+    state0 = init_state()
+    state, active, k, work = jax.lax.while_loop(
+        cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
+                     jnp.float32(0)))
+    return iterate.IterationResult(
+        state=tuple(s[:n] for s in state), iterations=int(k),
+        edge_work=float(work))

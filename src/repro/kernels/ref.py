@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function computes exactly what the corresponding kernel
+computes, with plain jnp ops and no tiling, so the kernel test sweeps can
+``assert_allclose`` against them across shapes and dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+
+
+def ref_ell_reduce(op: str, values, mask, ident):
+    """Masked row-reduction over a blocked-ELL tile layout.
+
+    values [n_pad, width], mask [n_pad, width] → [n_pad].
+    """
+    masked = jnp.where(mask, values, ident)
+    fn = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum, "prod": jnp.prod}[op]
+    return fn(masked, axis=1)
+
+
+def ref_edge_level(op: str, state, srcs, mask, p_of, ident, bot,
+                   tie_masks=None):
+    """One lex level of the blocked-ELL gather→propagate→reduce.
+
+    state [n] per-vertex values; srcs/mask [n_pad, width]; ``p_of(nvals, row,
+    col_srcs)`` applies the synthesized propagation to the gathered values.
+    ``tie_masks`` [n_pad, width] further restricts eligible slots (lex ties).
+    Returns [n_pad] per-vertex partial reduction.
+    """
+    nvals = state[srcs]
+    p = p_of(nvals, srcs)
+    p = jnp.where(nvals == bot, ident, p)            # C3: ⊥ propagates ⊥
+    m = mask if tie_masks is None else (mask & tie_masks)
+    return ref_ell_reduce(op, p, m, ident)
+
+
+def ref_embedding_bag(table, idx, offsets=None, mode: str = "sum",
+                      weights=None):
+    """EmbeddingBag: gather rows of ``table`` [V, D] for flat indices
+    ``idx`` [N] grouped into bags by ``offsets`` [B] (start positions), or
+    fixed-width bags when ``idx`` is [B, K].
+
+    JAX has no native EmbeddingBag — this gather + segment-sum IS the
+    reference semantics (kernel_taxonomy §RecSys).
+    """
+    if idx.ndim == 2:                                 # fixed-width bags
+        rows = table[idx]                             # [B, K, D]
+        if weights is not None:
+            rows = rows * weights[..., None]
+        if mode == "sum":
+            return rows.sum(axis=1)
+        if mode == "mean":
+            return rows.mean(axis=1)
+        if mode == "max":
+            return rows.max(axis=1)
+        raise ValueError(mode)
+    assert offsets is not None
+    n, b = idx.shape[0], offsets.shape[0]
+    seg = jnp.cumsum(
+        jnp.zeros(n, jnp.int32).at[offsets[1:]].add(1)) if b > 1 else \
+        jnp.zeros(n, jnp.int32)
+    rows = table[idx]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, seg, b)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, seg, b)
+        cnt = jax.ops.segment_sum(jnp.ones(n), seg, b)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, seg, b)
+    raise ValueError(mode)
+
+
+def ref_ell_softmax(scores, mask):
+    """Masked row softmax over an ELL tile layout (GAT edge attention).
+
+    scores/mask [n_pad, width] → attention weights [n_pad, width] with
+    masked slots exactly 0 and each real row summing to 1.
+    """
+    neg = jnp.finfo(scores.dtype).min
+    s = jnp.where(mask, scores, neg)
+    m = jnp.max(s, axis=1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(s - m), 0.0)
+    denom = jnp.sum(e, axis=1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def ref_segment_softmax(scores, segment_ids, num_segments):
+    return segment.segment_softmax(scores, segment_ids, num_segments)
+
+
+def ref_flash_attention(q, k, v, causal: bool = True, scale=None,
+                        chunk: int | None = None):
+    """Plain softmax attention oracle (optionally local/chunked).
+
+    q [B, H, S, D], k/v [B, Hkv, S, D] with H a multiple of Hkv (GQA).
+    ``chunk`` restricts attention to the same chunk of size ``chunk``
+    (llama4-style chunked local attention).
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m = m & (ki <= qi)
+    if chunk is not None:
+        m = m & (qi // chunk == ki // chunk)
+    logits = jnp.where(m, logits, jnp.finfo(logits.dtype).min)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,82 @@
+"""Masked row softmax over the blocked-ELL layout (GAT edge attention).
+
+GAT computes a softmax over each vertex's incoming-edge scores.  In the
+degree-padded ELL layout that is a masked softmax along the slot axis.  The
+slot axis can exceed VMEM for power-law graphs, so the kernel is *online*
+(flash-style) in two passes without materializing exp() over the full row:
+
+  pass 1 (stats):  running (row-max m, row-sumexp s) accumulated across
+                   slot tiles — the classic online-softmax recurrence,
+  pass 2 (norm):   weights = exp(score − m) / s per tile.
+
+Both passes are (BLOCK_V × BLOCK_E) tiles; masked/padded slots produce
+exactly 0 weight (condition-C6 style identity padding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_V = 8
+BLOCK_E = 128
+
+_NEG = -1e30
+
+
+def _stats_kernel(scores_ref, mask_ref, m_ref, s_ref):
+    j = pl.program_id(1)
+    scores = jnp.where(mask_ref[...], scores_ref[...].astype(jnp.float32), _NEG)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    m_old = m_ref[...]
+    m_tile = jnp.max(scores, axis=1)
+    m_new = jnp.maximum(m_old, m_tile)
+    # rescale the running sum, then fold in this tile
+    e = jnp.where(mask_ref[...], jnp.exp(scores - m_new[:, None]), 0.0)
+    s_ref[...] = s_ref[...] * jnp.exp(m_old - m_new) + jnp.sum(e, axis=1)
+    m_ref[...] = m_new
+
+
+def _norm_kernel(scores_ref, mask_ref, m_ref, s_ref, out_ref):
+    scores = scores_ref[...].astype(jnp.float32)
+    e = jnp.exp(scores - m_ref[...][:, None])
+    w = e / jnp.maximum(s_ref[...][:, None], 1e-30)
+    out_ref[...] = jnp.where(mask_ref[...], w, 0.0).astype(out_ref.dtype)
+
+
+def ell_softmax(scores: jnp.ndarray, mask: jnp.ndarray,
+                block_v: int = BLOCK_V, block_e: int = BLOCK_E,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """scores/mask [n_pad, width] → masked row-softmax weights [n_pad, width]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_pad, width = scores.shape
+    block_v = min(block_v, n_pad)
+    block_e = min(block_e, width)
+    assert n_pad % block_v == 0 and width % block_e == 0
+    grid = (n_pad // block_v, width // block_e)
+
+    tile = pl.BlockSpec((block_v, block_e), lambda i, j: (i, j))
+    vrow = pl.BlockSpec((block_v,), lambda i, j: (i,))
+
+    m, s = pl.pallas_call(
+        _stats_kernel, grid=grid,
+        in_specs=[tile, tile], out_specs=(vrow, vrow),
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.float32)),
+        interpret=interpret)(scores, mask)
+
+    out = pl.pallas_call(
+        _norm_kernel, grid=grid,
+        in_specs=[tile, tile, vrow, vrow], out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((n_pad, width), scores.dtype),
+        interpret=interpret)(scores, mask, m, s)
+    return out

@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes and record the roofline inputs.
+
+MUST be imported before any other jax-touching module — the two lines above
+run before ANY other import so the 512 placeholder devices exist when jax
+initializes.  (Do not set that env var globally: smoke tests and benches
+should see 1 device.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # 512-chip
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Each cell writes reports/dryrun/<mesh>/<arch>__<shape>.json with:
+    memory_analysis   bytes per device (args/outputs/temps) — proves it fits
+    cost_analysis     HLO flops / bytes accessed
+    collectives       per-op-kind operand bytes parsed from the SPMD HLO
+    meta              model flops, token counts (for §Roofline)
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing.
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLEE_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s[a-z][\w\-]*\(")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into {computation_name: [op lines]} plus a global
+    {op_name: shape_string} map; returns (computations, entry, shapes).
+
+    Header lines end with '{' and contain '->' (params may nest parens, so
+    the name is just the token before the first '(')."""
+    comps, entry, shapes = {}, None, {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and \
+                ("(" in stripped):
+            head = stripped.split("(")[0].strip()
+            is_entry = head.startswith("ENTRY")
+            name = head.replace("ENTRY", "").strip().lstrip("%")
+            if name:
+                cur = name
+                comps[cur] = []
+                if is_entry:
+                    entry = cur
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+            dm = _DEF_RE.match(stripped)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+    return comps, entry, shapes
+
+
+def _trip_count(cond_lines) -> int:
+    """Static trip count of a while condition: the integer constant it
+    compares the counter against (scan emits `counter < constant(N)`).
+    Dynamic conditions (GraFS fixpoints) have none → multiplier 1."""
+    consts = [int(c) for line in cond_lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind operand bytes from the post-SPMD module
+    (per-device), with while-loop bodies WEIGHTED BY TRIP COUNT — XLA's
+    text lists a scan body once, but the collectives inside it run every
+    iteration (nested whiles multiply).  Operand shapes are resolved
+    through the definition map (optimized HLO omits inline shapes)."""
+    comps, entry, shapes = _parse_computations(hlo_text)
+    # edges: computation → (callee, multiplier)
+    mult = {name: 0 for name in comps}
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is not None:
+        mult[entry] = 1
+    # propagate multipliers (few nesting levels; fixed-point iterate)
+    for _ in range(8):
+        changed = False
+        for name, lines in comps.items():
+            m = mult.get(name, 0)
+            if m == 0:
+                continue
+            for line in lines:
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    for callee, k in ((body, m * trips), (cond, m)):
+                        if mult.get(callee, 0) < k:
+                            mult[callee] = k
+                            changed = True
+                for callee in _CALLEE_RE.findall(line):
+                    if callee in comps and mult.get(callee, 0) < m:
+                        mult[callee] = m
+                        changed = True
+        if not changed:
+            break
+
+    out = {k: {"count": 0, "operand_bytes": 0} for k in _COLL_KINDS}
+    top_ops = []
+    for name, lines in comps.items():
+        m = max(mult.get(name, 0), 1)
+        for line in lines:
+            if "-done" in line:
+                continue
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            kind = cm.group(1)
+            args = line[cm.end():]
+            depth, end = 1, 0
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            ops = args[:end] if end else args
+            # inline shapes if present, else resolve operand names
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(ops))
+            if total == 0:
+                for opname in _NAME_RE.findall(ops):
+                    total += sum(_shape_bytes(d, s) for d, s in
+                                 _SHAPE_RE.findall(shapes.get(opname, "")))
+            out[kind]["count"] += m
+            out[kind]["operand_bytes"] += m * total
+            if total:
+                shp = _SHAPE_RE.search(line)
+                top_ops.append((m * total, kind, m,
+                                shp.group(0) if shp else "?", name[:40]))
+    top_ops.sort(reverse=True)
+    top = [{"bytes": b, "kind": k, "trips": m, "result_shape": s, "comp": c}
+           for b, k, m, s, c in top_ops[:12]]
+    return out, top
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             smoke: bool = False, variant: str = "baseline") -> dict:
+    import jax
+    import numpy as np
+    from repro.launch.mesh import make_production_mesh, mesh_devices
+    from repro.launch.workloads import build_workload
+    import repro.configs as configs
+
+    skip = configs.skip_reason(arch, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": _mesh_tag(multi_pod), "status": None}
+    if skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = skip
+        return rec
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    wl = build_workload(arch, shape, mesh, smoke=smoke, variant=variant)
+    rec["kind"] = wl.kind
+    rec["meta"] = {k: (int(v) if isinstance(v, (int, np.integer)) else v)
+                   for k, v in wl.meta.items()}
+    with mesh:
+        jitted = jax.jit(wl.step_fn, in_shardings=wl.in_shardings,
+                         out_shardings=wl.out_shardings,
+                         donate_argnums=wl.donate)
+        lowered = jitted.lower(*wl.abstract_args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["devices"] = mesh_devices(mesh)
+    mem = _mem_dict(compiled)
+    rec["memory_analysis"] = mem
+    print(f"  memory_analysis: {mem}")
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+    except Exception as ex:                     # pragma: no cover
+        rec["cost_analysis"] = {"error": str(ex)}
+    print(f"  cost_analysis: flops={rec['cost_analysis'].get('flops')} "
+          f"bytes={rec['cost_analysis'].get('bytes accessed')}")
+    hlo = compiled.as_text()
+    rec["collectives"], rec["collective_top_ops"] = collective_bytes(hlo)
+    rec["hlo_bytes"] = len(hlo)
+
+    # exact-FLOP analysis lowering: unrolled loops, single logical device,
+    # lower only (never compiled/allocated) — see workloads.build_workload.
+    try:
+        wl_an = build_workload(arch, shape, mesh, smoke=smoke, analysis=True)
+        an_lowered = jax.jit(wl_an.step_fn).lower(*wl_an.abstract_args)
+        an = an_lowered.cost_analysis()
+        an = an[0] if isinstance(an, (list, tuple)) else an
+        rec["analysis_cost"] = {k: float(v) for k, v in an.items()
+                                if isinstance(v, (int, float))}
+        print(f"  analysis_cost(total): flops={rec['analysis_cost'].get('flops')}")
+    except Exception as ex:
+        rec["analysis_cost"] = {"error": str(ex)[:500]}
+    rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI sanity, not the deliverable)")
+    ap.add_argument("--variant", default="baseline",
+                    help="workload variant (e.g. 'dist' for the shard_map "
+                         "vertex-cut GNN step)")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.launch.workloads import all_cells
+
+    cells = [(a, s, sk) for (a, s, sk) in all_cells()
+             if (args.arch is None or a == args.arch)
+             and (args.shape is None or s == args.shape)]
+    if args.list:
+        for a, s, sk in cells:
+            print(f"{a:28s} {s:16s} {'SKIP: ' + sk if sk else ''}")
+        return 0
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for multi_pod in meshes:
+        tag = _mesh_tag(multi_pod)
+        out_dir = os.path.join(args.out, tag)
+        os.makedirs(out_dir, exist_ok=True)
+        for arch, shape, _ in cells:
+            path = os.path.join(out_dir, f"{arch}__{shape}.json")
+            print(f"[dryrun:{tag}] {arch} × {shape}", flush=True)
+            try:
+                rec = run_cell(arch, shape, multi_pod, out_dir,
+                               smoke=args.smoke, variant=args.variant)
+            except Exception:
+                rec = {"arch": arch, "shape": shape, "mesh": tag,
+                       "status": "error",
+                       "error": traceback.format_exc(limit=20)}
+                failures += 1
+                print(f"  ERROR\n{rec['error']}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"  -> {rec['status']} "
+                  f"(compile {rec.get('compile_s', '-')}s)", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,70 @@
+"""Serving driver: prefill + batched decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \\
+        --prompt-len 16 --decode-steps 8 --batch 2
+
+Production posture: the same prefill/decode step functions the dry-run
+lowers for the (16,16) and (2,16,16) meshes, jit'd here on the host mesh.
+Requests are batched; decode is one token across the whole batch per step.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    import dataclasses as dc
+    import repro.configs as configs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as tf
+
+    entry = configs.get(args.arch)
+    assert entry.family == "lm", "serve.py drives LM archs"
+    cfg = entry.smoke() if args.smoke else entry.full()
+
+    mesh = make_host_mesh(data=1, model=1)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(cfg, key)
+    max_seq = args.prompt_len + args.decode_steps
+    max_seq = 1 << (max_seq - 1).bit_length()          # pow2 cache
+    cache = tf.init_cache(cfg, args.batch, max_seq)
+
+    prefill = jax.jit(lambda p, t, c: tf.prefill(cfg, p, t, c))
+    decode = jax.jit(lambda p, tk, pos, c: tf.decode_step(cfg, p, tk, pos, c))
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, cache)
+    tok = jnp.argmax(logits, axis=-1)
+    out = [tok]
+    for i in range(args.decode_steps - 1):
+        logits, cache = decode(params, tok,
+                               jnp.int32(args.prompt_len + i), cache)
+        tok = jnp.argmax(logits, axis=-1)
+        out.append(tok)
+    toks = jnp.stack(out, axis=1)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    tps = args.batch * args.decode_steps / dt
+    print(f"[serve] arch={args.arch} batch={args.batch} "
+          f"prompt={args.prompt_len} decoded={args.decode_steps} "
+          f"tokens/s={tps:.1f}")
+    print("sampled token ids:", toks[0][:8].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

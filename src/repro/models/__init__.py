@@ -1,0 +1,11 @@
+"""Model zoo: LM transformers (dense + MoE + MLA), GNNs, DLRM.
+
+Params are plain pytrees (nested dicts of jnp arrays); every model exposes
+
+  init_params(cfg, key)     parameter pytree (or eval_shape-able for dry-run)
+  param_specs(cfg)          matching pytree of PartitionSpec (logical axes)
+  loss_fn / apply fns       jit/pjit-ready pure functions
+
+so the launch layer can pjit any architecture against the production mesh
+without model-specific plumbing.
+"""

@@ -1,0 +1,122 @@
+"""DLRM RM2 (arXiv:1906.00091): sparse embedding tables → dot-product
+feature interaction → MLPs.
+
+The embedding lookup is the hot path: JAX has no ``nn.EmbeddingBag``, so the
+lookup is a gather (single-hot fields) or the Pallas ``embedding_bag``
+kernel (multi-hot).  Tables are stacked [n_sparse, vocab, dim] and sharded
+row-wise over the "model" axis (lookup lowers to all-to-all under pjit);
+MLPs are data-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.gnn import _init_mlp, _mlp, _mlp_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab: int = 1_000_000          # rows per table
+    bot_mlp: Sequence[int] = (13, 512, 256, 64)
+    top_mlp_hidden: Sequence[int] = (512, 512, 256, 1)
+    multi_hot: int = 1              # K slots per field (1 = single-hot)
+    dtype: str = "float32"
+
+    @property
+    def n_feats(self) -> int:
+        return self.n_sparse + 1    # embeddings + bottom-MLP output
+
+    @property
+    def d_interact(self) -> int:
+        f = self.n_feats
+        return f * (f - 1) // 2 + self.embed_dim
+
+    def param_count(self) -> int:
+        emb = self.n_sparse * self.vocab * self.embed_dim
+        bot = sum(a * b for a, b in zip(self.bot_mlp[:-1], self.bot_mlp[1:]))
+        dims = [self.d_interact] + list(self.top_mlp_hidden)
+        top = sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+        return emb + bot + top
+
+
+def dlrm_init(cfg: DLRMConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables = (jax.random.normal(
+        k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim), jnp.float32)
+        / math.sqrt(cfg.embed_dim)).astype(jnp.dtype(cfg.dtype))
+    top_dims = [cfg.d_interact] + list(cfg.top_mlp_hidden)
+    return {"tables": tables,
+            "bot": _init_mlp(k2, list(cfg.bot_mlp)),
+            "top": _init_mlp(k3, top_dims)}
+
+
+def dlrm_specs(cfg: DLRMConfig):
+    top_dims = [cfg.d_interact] + list(cfg.top_mlp_hidden)
+    return {"tables": P(None, "model", None),    # row-sharded tables
+            "bot": _mlp_specs(list(cfg.bot_mlp)),
+            "top": _mlp_specs(top_dims)}
+
+
+def _lookup(cfg: DLRMConfig, tables, sparse_idx):
+    """sparse_idx [B, n_sparse] (single-hot) or [B, n_sparse, K] (multi-hot)
+    → [B, n_sparse, D].  vmap over fields keeps one gather per table."""
+    if sparse_idx.ndim == 2:
+        return jax.vmap(lambda t, i: t[i], in_axes=(0, 1), out_axes=1)(
+            tables, sparse_idx)
+    bags = jax.vmap(lambda t, i: t[i].sum(axis=1), in_axes=(0, 1),
+                    out_axes=1)(tables, sparse_idx)
+    return bags
+
+
+def _interact(cfg: DLRMConfig, bot_out, emb):
+    """Dot interaction: pairwise dots of the 27 feature vectors (lower
+    triangle, no diagonal) concatenated with the bottom-MLP output."""
+    b = bot_out.shape[0]
+    z = jnp.concatenate([bot_out[:, None, :], emb], axis=1)   # [B, F, D]
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)                     # [B, F, F]
+    f = z.shape[1]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    dots = zz[:, iu, ju]                                      # [B, F(F-1)/2]
+    return jnp.concatenate([bot_out, dots], axis=-1)
+
+
+def dlrm_forward(cfg: DLRMConfig, params, dense, sparse_idx):
+    """dense [B, 13] float; sparse_idx [B, 26] int32 → logits [B]."""
+    bot = _mlp(params["bot"], dense, final_act=True)
+    emb = _lookup(cfg, params["tables"], sparse_idx).astype(bot.dtype)
+    x = _interact(cfg, bot, emb)
+    out = _mlp(params["top"], x)
+    return out[:, 0]
+
+
+def dlrm_loss(cfg: DLRMConfig, params, batch):
+    logits = dlrm_forward(cfg, params, batch["dense"], batch["sparse"])
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def dlrm_user_vector(cfg: DLRMConfig, params, dense, sparse_idx):
+    """Retrieval tower: the interaction-layer input reduced to embed_dim —
+    used to score candidate item embeddings with one batched dot."""
+    bot = _mlp(params["bot"], dense, final_act=True)
+    emb = _lookup(cfg, params["tables"], sparse_idx).astype(bot.dtype)
+    return bot + emb.mean(axis=1)                             # [B, D]
+
+
+def dlrm_retrieval_scores(cfg: DLRMConfig, params, dense, sparse_idx,
+                          cand_emb):
+    """Score 1 query (or B queries) against n_candidates item embeddings:
+    a single [B, D] × [N, D]ᵀ matmul — batched-dot, never a loop."""
+    u = dlrm_user_vector(cfg, params, dense, sparse_idx)      # [B, D]
+    return u @ cand_emb.T                                     # [B, N]

@@ -1,0 +1,466 @@
+"""GNN architectures: GAT, EGNN, MeshGraphNet, DimeNet.
+
+All message passing is built on the same substrate as the GraFS engines —
+edge-index gathers + ``jax.ops.segment_*`` scatters (JAX has no sparse
+message-passing primitive; this IS the system, kernel_taxonomy §GNN).  The
+three kernel regimes appear explicitly:
+
+  SpMM/SDDMM        GAT (edge scores → segment softmax → weighted aggregate)
+  plain scatter     EGNN / MeshGraphNet (MLP messages → segment_sum)
+  triplet gather    DimeNet (angular basis over (k→j→i) wedge lists)
+
+Every model exposes ``init_params(cfg, key)``, ``param_specs(cfg)``, and a
+pure ``forward``/``loss_fn`` for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.graph import segment
+
+
+# ---------------------------------------------------------------------------
+# Shared MLP helper
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, dims: Sequence[int], dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), jnp.float32)
+                   / math.sqrt(a)).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_specs(dims: Sequence[int], shard_hidden: bool = True):
+    out = []
+    for i in range(len(dims) - 1):
+        # alternate row/col sharding over "model" so TP chains without
+        # resharding (Megatron-style pairs)
+        if not shard_hidden:
+            out.append({"w": P(None, None), "b": P(None)})
+        elif i % 2 == 0:
+            out.append({"w": P(None, "model"), "b": P("model")})
+        else:
+            out.append({"w": P("model", None), "b": P(None)})
+    return out
+
+
+def _mlp(params, x, act=jax.nn.relu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GAT (arXiv:1710.10903) — n_layers=2, d_hidden=8, n_heads=8 on cora.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    dtype: str = "float32"
+
+
+def gat_init(cfg: GATConfig, key):
+    ks = jax.random.split(key, cfg.n_layers)
+    layers = []
+    d_in = cfg.d_in
+    for li in range(cfg.n_layers):
+        last = li == cfg.n_layers - 1
+        h = cfg.n_heads if not last else 1
+        d_out = cfg.d_hidden if not last else cfg.n_classes
+        k1, k2, k3 = jax.random.split(ks[li], 3)
+        layers.append({
+            "w": (jax.random.normal(k1, (d_in, h, d_out), jnp.float32)
+                  / math.sqrt(d_in)),
+            "a_src": jax.random.normal(k2, (h, d_out), jnp.float32) * 0.1,
+            "a_dst": jax.random.normal(k3, (h, d_out), jnp.float32) * 0.1,
+        })
+        d_in = h * d_out if not last else d_out
+    return {"layers": layers}
+
+
+def gat_specs(cfg: GATConfig):
+    return {"layers": [{"w": P(None, "model", None), "a_src": P("model", None),
+                        "a_dst": P("model", None)}
+                       for _ in range(cfg.n_layers)]}
+
+
+def gat_forward(cfg: GATConfig, params, x, src, dst, n: int):
+    """x [n, d_in]; edge lists src/dst [e] (messages flow src→dst)."""
+    for li, p in enumerate(params["layers"]):
+        last = li == len(params["layers"]) - 1
+        h = jnp.einsum("nd,dhk->nhk", x, p["w"])          # [n, H, K]
+        # SDDMM: per-edge attention logits
+        es = jnp.einsum("nhk,hk->nh", h, p["a_src"])[src]
+        ed = jnp.einsum("nhk,hk->nh", h, p["a_dst"])[dst]
+        logits = jax.nn.leaky_relu(es + ed, 0.2)          # [e, H]
+        alpha = jax.vmap(
+            lambda s: segment.segment_softmax(s, dst, n), in_axes=1,
+            out_axes=1)(logits)                           # [e, H]
+        msg = h[src] * alpha[..., None]                   # [e, H, K]
+        agg = jax.ops.segment_sum(msg, dst, n)            # [n, H, K]
+        x = agg.reshape(n, -1) if not last else agg.mean(axis=1)
+        if not last:
+            x = jax.nn.elu(x)
+    return x                                              # [n, n_classes]
+
+
+def gat_loss(cfg: GATConfig, params, batch):
+    logits = gat_forward(cfg, params, batch["x"], batch["src"],
+                         batch["dst"], batch["x"].shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    mask = batch.get("mask", jnp.ones_like(nll))
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# EGNN (arXiv:2102.09844) — n_layers=4, d_hidden=64, E(n)-equivariant.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    d_out: int = 1
+    dtype: str = "float32"
+
+
+def egnn_init(cfg: EGNNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers * 3 + 2)
+    d = cfg.d_hidden
+    layers = []
+    for li in range(cfg.n_layers):
+        layers.append({
+            "phi_e": _init_mlp(ks[3 * li], [2 * d + 1, d, d]),
+            "phi_x": _init_mlp(ks[3 * li + 1], [d, d, 1]),
+            "phi_h": _init_mlp(ks[3 * li + 2], [2 * d, d, d]),
+        })
+    return {"embed": _init_mlp(ks[-2], [cfg.d_in, d]),
+            "layers": layers,
+            "head": _init_mlp(ks[-1], [d, d, cfg.d_out])}
+
+
+def egnn_specs(cfg: EGNNConfig):
+    d = cfg.d_hidden
+    return {"embed": _mlp_specs([cfg.d_in, d]),
+            "layers": [{"phi_e": _mlp_specs([2 * d + 1, d, d]),
+                        "phi_x": _mlp_specs([d, d, 1]),
+                        "phi_h": _mlp_specs([2 * d, d, d])}
+                       for _ in range(cfg.n_layers)],
+            "head": _mlp_specs([d, d, cfg.d_out])}
+
+
+def egnn_forward(cfg: EGNNConfig, params, feats, coords, src, dst, n: int):
+    """feats [n, d_in], coords [n, 3] → (invariant per-node out, coords')."""
+    h = _mlp(params["embed"], feats)
+    x = coords
+    for p in params["layers"]:
+        diff = x[src] - x[dst]                            # [e, 3]
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = _mlp(p["phi_e"], jnp.concatenate(
+            [h[src], h[dst], d2], axis=-1), final_act=True)
+        # coordinate update (equivariant): x_i += mean_j (x_i-x_j)·φ_x(m_ij)
+        w = _mlp(p["phi_x"], m)                           # [e, 1]
+        upd = jax.ops.segment_sum(-diff * w, dst, n)
+        deg = jax.ops.segment_sum(jnp.ones((src.shape[0], 1)), dst, n)
+        x = x + upd / jnp.maximum(deg, 1.0)
+        # invariant update
+        agg = jax.ops.segment_sum(m, dst, n)
+        h = h + _mlp(p["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    out = _mlp(params["head"], h)
+    return out, x
+
+
+def egnn_loss(cfg: EGNNConfig, params, batch):
+    out, x = egnn_forward(cfg, params, batch["feats"], batch["coords"],
+                          batch["src"], batch["dst"],
+                          batch["feats"].shape[0])
+    # per-graph energy regression (segment-sum over graph ids); the graph
+    # count is static from the target shape (jit-safe)
+    gid = batch["graph_id"]
+    ng = batch["target"].shape[0]
+    energy = jax.ops.segment_sum(out[:, 0], gid, ng)
+    return jnp.mean((energy - batch["target"]) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# MeshGraphNet (arXiv:2010.03409) — 15 layers, d=128, sum agg, 2-layer MLPs.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 8
+    d_edge_in: int = 4
+    d_out: int = 2
+    dtype: str = "float32"
+
+
+def _mgn_mlp_dims(cfg: MGNConfig, d_in: int):
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers
+
+
+def mgn_init(cfg: MGNConfig, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 2 * cfg.n_layers + 3)
+    layers = [{"edge_mlp": _init_mlp(ks[2 * i], _mgn_mlp_dims(cfg, 3 * d)),
+               "node_mlp": _init_mlp(ks[2 * i + 1], _mgn_mlp_dims(cfg, 2 * d))}
+              for i in range(cfg.n_layers)]
+    return {"node_enc": _init_mlp(ks[-3], _mgn_mlp_dims(cfg, cfg.d_node_in)),
+            "edge_enc": _init_mlp(ks[-2], _mgn_mlp_dims(cfg, cfg.d_edge_in)),
+            "layers": layers,
+            "decoder": _init_mlp(ks[-1], [d, d, cfg.d_out])}
+
+
+def mgn_specs(cfg: MGNConfig):
+    d = cfg.d_hidden
+    lyr = {"edge_mlp": _mlp_specs(_mgn_mlp_dims(cfg, 3 * d)),
+           "node_mlp": _mlp_specs(_mgn_mlp_dims(cfg, 2 * d))}
+    return {"node_enc": _mlp_specs(_mgn_mlp_dims(cfg, cfg.d_node_in)),
+            "edge_enc": _mlp_specs(_mgn_mlp_dims(cfg, cfg.d_edge_in)),
+            "layers": [lyr for _ in range(cfg.n_layers)],
+            "decoder": _mlp_specs([d, d, cfg.d_out])}
+
+
+def mgn_forward(cfg: MGNConfig, params, node_x, edge_x, src, dst, n: int):
+    h = _mlp(params["node_enc"], node_x, final_act=True)
+    e = _mlp(params["edge_enc"], edge_x, final_act=True)
+    for p in params["layers"]:
+        e = e + _mlp(p["edge_mlp"],
+                     jnp.concatenate([e, h[src], h[dst]], axis=-1))
+        agg = jax.ops.segment_sum(e, dst, n)              # sum aggregator
+        h = h + _mlp(p["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+    return _mlp(params["decoder"], h)
+
+
+def mgn_loss(cfg: MGNConfig, params, batch):
+    out = mgn_forward(cfg, params, batch["node_x"], batch["edge_x"],
+                      batch["src"], batch["dst"], batch["node_x"].shape[0])
+    return jnp.mean((out - batch["target"]) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Distributed (shard_map) MeshGraphNet: dst-block vertex-cut.
+#
+# Under plain pjit, XLA cannot prove the edge→node scatter is local, so the
+# 61M-edge full-graph cells replicate the edge-message tensor (measured:
+# ~40s collective term, EXPERIMENTS.md §Perf B).  Manual vertex-cut:
+# nodes row-sharded; edges partitioned by dst block so every scatter is
+# LOCAL; the only collectives are one all-gather of the [n, d] node states
+# per layer (for h[src]) and the gradient psum.
+# ---------------------------------------------------------------------------
+
+def mgn_forward_dist(cfg: MGNConfig, params, node_x, edge_x, src_g, dst_l,
+                     emask, axes):
+    """Per-shard forward.  node_x [n_loc, ·]; edges local with GLOBAL src
+    ids, LOCAL dst ids, and a validity mask (dst-block partition pads)."""
+    n_loc = node_x.shape[0]
+    h = _mlp(params["node_enc"], node_x, final_act=True)
+    e = _mlp(params["edge_enc"], edge_x, final_act=True)
+    em = emask[:, None].astype(h.dtype)
+    for p in params["layers"]:
+        h_full = jax.lax.all_gather(h, axes, tiled=True) if axes else h
+        e = e + _mlp(p["edge_mlp"],
+                     jnp.concatenate([e, h_full[src_g], h[dst_l]], axis=-1))
+        agg = jax.ops.segment_sum(e * em, dst_l, n_loc)        # local!
+        h = h + _mlp(p["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+    return _mlp(params["decoder"], h)
+
+
+def egnn_forward_dist(cfg: EGNNConfig, params, feats, coords, src_g, dst_l,
+                      emask, axes):
+    """Vertex-cut EGNN: same recipe as mgn_forward_dist — node rows
+    sharded, dst-local edges, one all-gather of (h, x) per layer (the
+    coordinate vector rides along: [n, d+3])."""
+    n_loc = feats.shape[0]
+    h = _mlp(params["embed"], feats)
+    x = coords
+    em = emask[:, None].astype(h.dtype)
+    for p in params["layers"]:
+        hx = jnp.concatenate([h, x], axis=-1)
+        hx_full = jax.lax.all_gather(hx, axes, tiled=True) if axes else hx
+        h_full, x_full = hx_full[:, :-3], hx_full[:, -3:]
+        diff = x_full[src_g] - x[dst_l]
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = _mlp(p["phi_e"], jnp.concatenate(
+            [h_full[src_g], h[dst_l], d2], axis=-1), final_act=True)
+        m = m * em
+        w = _mlp(p["phi_x"], m)
+        upd = jax.ops.segment_sum(-diff * w * em, dst_l, n_loc)
+        deg = jax.ops.segment_sum(em, dst_l, n_loc)
+        x = x + upd / jnp.maximum(deg, 1.0)
+        agg = jax.ops.segment_sum(m, dst_l, n_loc)
+        h = h + _mlp(p["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    return _mlp(params["head"], h), x
+
+
+def egnn_loss_dist(cfg: EGNNConfig, params, batch, axes):
+    """Per-node invariant regression (the full-graph dist cells have one
+    giant graph; the per-graph energy sum of the molecule regime doesn't
+    apply — documented in workloads)."""
+    out, _ = egnn_forward_dist(cfg, params, batch["feats"], batch["coords"],
+                               batch["src"], batch["dst"], batch["emask"],
+                               axes)
+    nmask = batch["nmask"][:, None].astype(out.dtype)
+    sse = jnp.sum(((out - batch["target"]) ** 2) * nmask)
+    cnt = jnp.sum(nmask) * out.shape[-1]
+    if axes:
+        sse = jax.lax.psum(sse, axes)
+        cnt = jax.lax.psum(cnt, axes)
+    return sse / jnp.maximum(cnt, 1.0)
+
+
+def mgn_loss_dist(cfg: MGNConfig, params, batch, axes):
+    """Per-shard loss; psum-normalized so every shard returns the global
+    mean (replicated)."""
+    out = mgn_forward_dist(cfg, params, batch["node_x"], batch["edge_x"],
+                           batch["src"], batch["dst"], batch["emask"],
+                           axes)
+    nmask = batch["nmask"][:, None].astype(out.dtype)
+    sse = jnp.sum(((out - batch["target"]) ** 2) * nmask)
+    cnt = jnp.sum(nmask) * out.shape[-1]
+    if axes:
+        sse = jax.lax.psum(sse, axes)
+        cnt = jax.lax.psum(cnt, axes)
+    return sse / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# DimeNet (arXiv:2003.03123) — 6 blocks, d=128, bilinear 8, sph 7, rad 6.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_species: int = 16
+    d_out: int = 1
+    dtype: str = "float32"
+
+
+def _rbf(d, cfg: DimeNetConfig):
+    """DimeNet radial Bessel basis: sin(nπ d/c) / d, n = 1..n_radial."""
+    n = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(d[:, None], 1e-6)
+    return jnp.sin(n * jnp.pi * d / cfg.cutoff) / d * math.sqrt(2.0 / cfg.cutoff)
+
+
+def _sbf(d, angle, cfg: DimeNetConfig):
+    """Angular × radial basis on triplets.
+
+    TPU adaptation (DESIGN.md): the spherical Bessel roots table of the
+    original is replaced by a cos(ℓα)⊗Bessel-sin product basis of the same
+    rank (n_spherical × n_radial) — same tensor shape and sparsity pattern,
+    table-free so it stays constant-foldable in XLA.
+    """
+    ell = jnp.arange(cfg.n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(angle[:, None] * (ell + 1.0))           # [t, S]
+    rad = _rbf(d, cfg)                                    # [t, R]
+    return (ang[:, :, None] * rad[:, None, :]).reshape(
+        d.shape[0], cfg.n_spherical * cfg.n_radial)
+
+
+def dimenet_init(cfg: DimeNetConfig, key):
+    d = cfg.d_hidden
+    nsr = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, 4 * cfg.n_blocks + 4)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = jax.random.split(ks[i], 6)
+        blocks.append({
+            "w_rbf": (jax.random.normal(k[0], (cfg.n_radial, d)) / math.sqrt(cfg.n_radial)),
+            "w_sbf": (jax.random.normal(k[1], (nsr, cfg.n_bilinear)) / math.sqrt(nsr)),
+            "w_kj": (jax.random.normal(k[2], (d, d)) / math.sqrt(d)),
+            "bilinear": (jax.random.normal(k[3], (d, cfg.n_bilinear, d)) * 0.1
+                         / math.sqrt(d)),
+            "mlp": _init_mlp(k[4], [d, d, d]),
+            "out_mlp": _init_mlp(k[5], [d, d]),
+        })
+    return {"species_emb": jax.random.normal(ks[-4], (cfg.n_species, d)) * 0.1,
+            "edge_emb": _init_mlp(ks[-3], [2 * d + cfg.n_radial, d]),
+            "blocks": blocks,
+            "head": _init_mlp(ks[-2], [d, d, cfg.d_out])}
+
+
+def dimenet_specs(cfg: DimeNetConfig):
+    d = cfg.d_hidden
+    nsr = cfg.n_spherical * cfg.n_radial
+    blk = {"w_rbf": P(None, "model"), "w_sbf": P(None, None),
+           "w_kj": P(None, "model"), "bilinear": P("model", None, None),
+           "mlp": _mlp_specs([d, d, d]), "out_mlp": _mlp_specs([d, d])}
+    return {"species_emb": P(None, "model"),
+            "edge_emb": _mlp_specs([2 * d + cfg.n_radial, d]),
+            "blocks": [blk for _ in range(cfg.n_blocks)],
+            "head": _mlp_specs([d, d, cfg.d_out])}
+
+
+def dimenet_forward(cfg: DimeNetConfig, params, species, coords, src, dst,
+                    t_kj, t_ji, n: int):
+    """Directional message passing.
+
+    species [n] int32; coords [n, 3];
+    edges (j→i): src=j, dst=i, e edges;
+    triplets: t_kj[t], t_ji[t] are EDGE indices with dst(t_kj) == src(t_ji)
+    (wedge k→j→i); angular basis is evaluated on each wedge.
+    """
+    diff = coords[dst] - coords[src]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 1e-12))
+    rbf = _rbf(dist, cfg)                                  # [e, R]
+    z = params["species_emb"][species]
+    m = _mlp(params["edge_emb"],
+             jnp.concatenate([z[src], z[dst], rbf], axis=-1), final_act=True)
+
+    # wedge angle between edge t_kj (k→j) and t_ji (j→i)
+    v1 = -diff[t_kj]                                       # j→k direction
+    v2 = diff[t_ji]                                        # j→i direction
+    cosang = jnp.sum(v1 * v2, axis=-1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-9)
+    ang = jnp.arccos(jnp.clip(cosang, -1.0, 1.0))
+    sbf = _sbf(dist[t_ji], ang, cfg)                       # [t, S·R]
+
+    out_sum = jnp.zeros((n, cfg.d_hidden))
+    e = src.shape[0]
+    for p in params["blocks"]:
+        # triplet gather: messages of incoming edges k→j modulate edge j→i
+        m_kj = (m @ p["w_kj"])[t_kj]                       # [t, d]
+        a = sbf @ p["w_sbf"]                               # [t, B]
+        inter = jnp.einsum("td,dbk,tb->tk", m_kj, p["bilinear"], a)
+        agg = jax.ops.segment_sum(inter, t_ji, e)          # [e, d]
+        m = m + _mlp(p["mlp"], agg + rbf @ p["w_rbf"])
+        out_sum = out_sum + jax.ops.segment_sum(
+            _mlp(p["out_mlp"], m), dst, n)
+    return _mlp(params["head"], out_sum)                   # [n, d_out]
+
+
+def dimenet_loss(cfg: DimeNetConfig, params, batch):
+    out = dimenet_forward(cfg, params, batch["species"], batch["coords"],
+                          batch["src"], batch["dst"], batch["t_kj"],
+                          batch["t_ji"], batch["species"].shape[0])
+    energy = jax.ops.segment_sum(out[:, 0], batch["graph_id"],
+                                 batch["target"].shape[0])
+    return jnp.mean((energy - batch["target"]) ** 2)

@@ -1,0 +1,370 @@
+"""LM transformer: training step, prefill and KV-cache decode.
+
+Layers are stacked ([L, ...] leaves) and executed with ``lax.scan`` so the
+80-layer configs lower to compact HLO; each layer body is rematerialized
+(``jax.checkpoint``) for training.  Supports:
+
+  * GQA attention (llama3 / qwen2 / yi) with optional QKV bias,
+  * MLA latent attention (deepseek-v3) with compressed-KV decode cache,
+  * SwiGLU dense FFN and capacity-based top-k MoE (+ shared experts),
+  * llama4 iRoPE chunked local attention (3 of 4 layers local),
+  * optional depth-1 MTP head (deepseek-v3 multi-token prediction).
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as Lyr
+from repro.models.layers import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + specs
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: LMConfig, key, layer_idx_static: Optional[int] = None):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": Lyr._norm_init(ks[0], (cfg.d_model,), Lyr._pdt(cfg)),
+         "ln2": Lyr._norm_init(ks[1], (cfg.d_model,), Lyr._pdt(cfg))}
+    if cfg.mla is not None:
+        p["attn"] = Lyr.init_mla(cfg, ks[2])
+    else:
+        p["attn"] = Lyr.init_attention(cfg, ks[2])
+    if cfg.moe is not None:
+        # MoE layers carry BOTH a dense and a MoE FFN param set; a static
+        # per-layer flag selects which one runs (keeps scan leaves uniform).
+        p["ffn"] = Lyr.init_swiglu(cfg.d_model, cfg.d_ff, ks[3], Lyr._pdt(cfg))
+        p["moe"] = Lyr.init_moe(cfg, ks[3])
+    else:
+        p["ffn"] = Lyr.init_swiglu(cfg.d_model, cfg.d_ff, ks[3], Lyr._pdt(cfg))
+    return p
+
+
+def init_params(cfg: LMConfig, key):
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    p = {
+        "embed": Lyr._dense_init(ks[1], (cfg.vocab, cfg.d_model),
+                                 Lyr._pdt(cfg), scale=0.02),
+        "layers": layers,
+        "ln_f": Lyr._norm_init(ks[2], (cfg.d_model,), Lyr._pdt(cfg)),
+        "unembed": Lyr._dense_init(ks[3], (cfg.d_model, cfg.vocab),
+                                   Lyr._pdt(cfg)),
+    }
+    if cfg.mtp:
+        mk = jax.random.split(ks[3], 2)
+        p["mtp"] = {"proj": Lyr._dense_init(mk[0], (2 * cfg.d_model,
+                                                    cfg.d_model), Lyr._pdt(cfg)),
+                    "layer": _layer_init(cfg, mk[1])}
+    return p
+
+
+def _layer_specs(cfg: LMConfig, stacked: bool):
+    def add_l(spec):
+        return P(*((None,) + tuple(spec))) if stacked else spec
+
+    attn = Lyr.mla_specs(cfg) if cfg.mla is not None else Lyr.attention_specs(cfg)
+    p = {"ln1": add_l(P(None)), "ln2": add_l(P(None)),
+         "attn": jax.tree.map(add_l, attn,
+                              is_leaf=lambda x: isinstance(x, P)),
+         "ffn": jax.tree.map(add_l, Lyr.swiglu_specs(),
+                             is_leaf=lambda x: isinstance(x, P))}
+    if cfg.moe is not None:
+        p["moe"] = jax.tree.map(add_l, Lyr.moe_specs(cfg),
+                                is_leaf=lambda x: isinstance(x, P))
+    return p
+
+
+def param_specs(cfg: LMConfig):
+    p = {
+        "embed": P("model", "data"),       # vocab over model (TP logits)
+        "layers": _layer_specs(cfg, stacked=True),
+        "ln_f": P(None),
+        "unembed": P("data", "model"),
+    }
+    if cfg.mtp:
+        p["mtp"] = {"proj": P("data", "model"),
+                    "layer": _layer_specs(cfg, stacked=False)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _is_global_layer(cfg: LMConfig, li: int) -> bool:
+    return cfg.attn_chunk is None or (li % cfg.chunk_global_every ==
+                                      cfg.chunk_global_every - 1)
+
+
+def _layer_apply(cfg: LMConfig, p, x, positions, chunk, use_moe: bool,
+                 cache=None):
+    dt = Lyr._dt(cfg)
+    # pin activations batch-sharded at every layer boundary (GSPMD's own
+    # propagation replicates them at scale — see layers.shard_hint)
+    x = Lyr.shard_hint(x, Lyr.BATCH_AXES, None, None, axes=cfg.hint_axes)
+    h = Lyr.rms_norm(x, p["ln1"].astype(dt), cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = Lyr.mla_attention(cfg, p["attn"], h, positions, chunk,
+                                         cache)
+    else:
+        a, new_cache = Lyr.gqa_attention(cfg, p["attn"], h, positions, chunk,
+                                         cache)
+    x = x + a
+    h = Lyr.rms_norm(x, p["ln2"].astype(dt), cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if use_moe:
+        f, aux = Lyr.moe_ffn(cfg, p["moe"], h)
+    else:
+        f = Lyr.swiglu(p["ffn"], h, dt)
+    return x + f, aux, new_cache
+
+
+def _layer_pattern(cfg: LMConfig, li: int):
+    use_moe = cfg.moe is not None and cfg.moe.is_moe_layer(li)
+    return (use_moe, _is_global_layer(cfg, li))
+
+
+def _scan_groups(cfg: LMConfig):
+    """Partition layers into scan groups of statically-identical pattern.
+
+    Layers differ statically in two ways (MoE-vs-dense, local-vs-global
+    attention).  Two strategies keep the HLO O(#patterns) instead of O(L):
+
+      * periodic: if the pattern sequence repeats with period p (llama4's
+        dense/MoE × local/global 4-cycle), scan over n/p macro-steps, each
+        unrolling the p-layer cycle;
+      * consecutive: otherwise group equal consecutive runs (deepseek-v3's
+        3-dense prefix + 58-MoE body).
+
+    Returns ("periodic", p, patterns[:p]) or ("runs", [(lo, hi, pattern)]).
+    """
+    n = cfg.n_layers
+    pats = [_layer_pattern(cfg, li) for li in range(n)]
+    if len(set(pats)) > 1:
+        for p in range(1, 9):
+            if n % p == 0 and pats == pats[:p] * (n // p) and p < n:
+                return ("periodic", p, pats[:p])
+    runs, start = [], 0
+    for li in range(1, n + 1):
+        if li == n or pats[li] != pats[start]:
+            runs.append((start, li, pats[start]))
+            start = li
+    return ("runs", runs)
+
+
+def _scan_layers(cfg: LMConfig, params, x, positions, caches=None):
+    """Run all layers with lax.scan over stacked params (see _scan_groups)."""
+    aux_total = jnp.float32(0.0)
+    plan = _scan_groups(cfg)
+
+    def apply_one(lp, h, aux, pat, c=None):
+        use_moe, glob = pat
+        chunk = None if glob else cfg.attn_chunk
+        h2, a, nc = _layer_apply(cfg, lp, h, positions, chunk, use_moe,
+                                 cache=c)
+        return h2, aux + a, nc
+
+    if cfg.loop_impl == "unroll":
+        # analysis mode: python loop so XLA cost_analysis counts every layer
+        ncs = []
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            c = None if caches is None else \
+                jax.tree.map(lambda a: a[li], caches)
+            fn = functools.partial(apply_one, pat=_layer_pattern(cfg, li),
+                                   c=c)
+            if cfg.remat == "full" and caches is None:
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            x, aux_total, nc = fn(lp, x, aux_total)
+            ncs.append(nc)
+        new_caches = None if caches is None else jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *ncs)
+        return x, aux_total, new_caches
+
+    if plan[0] == "periodic":
+        _, p, pats = plan
+        n_macro = cfg.n_layers // p
+        sub = jax.tree.map(
+            lambda a: a.reshape((n_macro, p) + a.shape[1:]), params["layers"])
+        sub_c = None if caches is None else jax.tree.map(
+            lambda a: a.reshape((n_macro, p) + a.shape[1:]), caches)
+
+        has_cache = caches is not None
+
+        def body(carry, lp_c):
+            h, aux = carry
+            lp, c = lp_c if has_cache else (lp_c, None)
+            ncs = []
+            for k in range(p):
+                lpk = jax.tree.map(lambda a: a[k], lp)
+                ck = None if c is None else jax.tree.map(lambda a: a[k], c)
+                h, aux, nck = apply_one(lpk, h, aux, pats[k], ck)
+                ncs.append(nck)
+            nc = None if c is None else jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *ncs)
+            return (h, aux), nc
+
+        body_fn = jax.checkpoint(body, prevent_cse=False) \
+            if (cfg.remat == "full" and not has_cache) else body
+        (x, aux_total), nc = jax.lax.scan(
+            body_fn, (x, aux_total),
+            (sub, sub_c) if has_cache else sub)
+        new_caches = None if caches is None else jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), nc)
+        return x, aux_total, new_caches
+
+    _, runs = plan
+    new_caches = None if caches is None else []
+    for (lo, hi, pat) in runs:
+        sub = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        if caches is None:
+            def body(carry, lp):
+                h, aux = carry
+                h2, aux2, _ = apply_one(lp, h, aux, pat)
+                return (h2, aux2), None
+
+            body_fn = jax.checkpoint(body, prevent_cse=False) \
+                if cfg.remat == "full" else body
+            (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total), sub)
+        else:
+            sub_c = jax.tree.map(lambda a: a[lo:hi], caches)
+
+            def body(carry, lp_c):
+                h, aux = carry
+                lp, c = lp_c
+                h2, aux2, nc = apply_one(lp, h, aux, pat, c)
+                return (h2, aux2), nc
+
+            (x, aux_total), nc = jax.lax.scan(body, (x, aux_total),
+                                              (sub, sub_c))
+            new_caches.append(nc)
+    if new_caches is not None:
+        new_caches = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_caches) \
+            if len(new_caches) > 1 else new_caches[0]
+    return x, aux_total, new_caches
+
+
+def forward(cfg: LMConfig, params, tokens):
+    """tokens [B, S] → logits [B, S, V] (+ aux loss)."""
+    dt = Lyr._dt(cfg)
+    b, s = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    x, aux, _ = _scan_layers(cfg, params, x, positions)
+    x = Lyr.rms_norm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dt))
+    return logits, aux, x
+
+
+def loss_fn(cfg: LMConfig, params, batch):
+    """Next-token cross entropy (+ MoE aux + optional MTP loss)."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    logits, aux, x_final = forward(cfg, params, tokens)
+    # batch over data axes, vocab over model (vocab-parallel cross-entropy)
+    logits = Lyr.shard_hint(logits, Lyr.BATCH_AXES, None, "model",
+                            axes=cfg.hint_axes)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.mtp:
+        # depth-1 MTP: predict token t+2 from [h_t ; emb(token t+1)]
+        dt = Lyr._dt(cfg)
+        emb_next = params["embed"].astype(dt)[tokens[:, 1:]]
+        h = jnp.concatenate([x_final[:, :-1], emb_next], axis=-1)
+        h = jnp.einsum("bsd,dk->bsk", h, params["mtp"]["proj"].astype(dt))
+        b, s1 = tokens.shape[0], tokens.shape[1] - 1
+        pos = jnp.arange(s1)[None, :].repeat(b, 0)
+        h, _, _ = _layer_apply(cfg, params["mtp"]["layer"], h, pos,
+                               None, use_moe=False)
+        mtp_logits = jnp.einsum("bsd,dv->bsv",
+                                Lyr.rms_norm(h, params["ln_f"].astype(dt),
+                                             cfg.norm_eps),
+                                params["unembed"].astype(dt))
+        mtp_logp = jax.nn.log_softmax(mtp_logits[:, :-1].astype(jnp.float32),
+                                      axis=-1)
+        mtp_tgt = targets[:, 2:] if targets.shape[1] > 2 else targets[:, 1:]
+        mtp_tgt = targets[:, 1:][:, 1:]        # token t+2 stream
+        mtp_nll = -jnp.take_along_axis(
+            mtp_logp[:, :mtp_tgt.shape[1]], mtp_tgt[..., None], axis=-1)[..., 0]
+        mmask = (mtp_tgt >= 0).astype(jnp.float32)
+        loss = loss + 0.1 * jnp.sum(mtp_nll * mmask) / jnp.maximum(
+            jnp.sum(mmask), 1.0)
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or Lyr._dt(cfg)
+    l = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((l, batch, max_seq, m.kv_lora_rank), dtype),
+                "k_r": jnp.zeros((l, batch, max_seq, m.qk_rope_head_dim),
+                                 dtype)}
+    if cfg.kv_quant:
+        shape = (l, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_s": jnp.zeros(shape[:-1], jnp.float32)}
+    return {"k": jnp.zeros((l, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((l, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           dtype)}
+
+
+def cache_specs(cfg: LMConfig, seq_sharded: bool = False):
+    """KV cache sharding: batch over data (decode) or seq over data
+    (long-context single-stream), kv-heads/latent over model."""
+    if cfg.mla is not None:
+        if seq_sharded:
+            return {"c_kv": P(None, None, "data", "model"),
+                    "k_r": P(None, None, "data", None)}
+        return {"c_kv": P(None, "data", None, "model"),
+                "k_r": P(None, "data", None, None)}
+    if seq_sharded:
+        return {"k": P(None, None, "data", "model", None),
+                "v": P(None, None, "data", "model", None)}
+    return {"k": P(None, "data", None, "model", None),
+            "v": P(None, "data", None, "model", None)}
+
+
+def prefill(cfg: LMConfig, params, tokens, cache):
+    """Full-sequence prefill writing the cache; returns (logits_last, cache)."""
+    dt = Lyr._dt(cfg)
+    b, s = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    pos_ids = jnp.arange(s)[None, :].repeat(b, 0)
+    # positions drive rope + causal masking; the cache write offset is
+    # positions[0,0] = 0 (cache slots beyond s stay masked: kpos > q_pos)
+    x, _, new_cache = _scan_layers(cfg, params, x, pos_ids, caches=cache)
+    x = Lyr.rms_norm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"].astype(dt))
+    return logits, new_cache
+
+
+def decode_step(cfg: LMConfig, params, token, pos, cache):
+    """One decode step: token [B], pos scalar int32 (current length).
+
+    Returns (logits [B, V], new cache)."""
+    dt = Lyr._dt(cfg)
+    b = token.shape[0]
+    x = params["embed"].astype(dt)[token][:, None, :]
+    pos_ids = jnp.full((b, 1), pos, jnp.int32)
+    x, _, new_cache = _scan_layers(cfg, params, x, pos_ids, caches=cache)
+    x = Lyr.rms_norm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["unembed"].astype(dt))
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_lr, global_norm)
+from repro.optim.compress import (compress_grads, decompress_grads,
+                                  error_feedback_update, CompressState)

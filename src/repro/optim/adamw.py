@@ -1,0 +1,89 @@
+"""AdamW with global-norm clipping and cosine schedule.
+
+Written directly (no optax dependency) so the optimizer-state dtype is
+controllable per-config: the 671B MoE runs bf16 m/v state (DESIGN.md §5),
+everything else fp32.  State shards exactly like the params (the update is
+elementwise), so ZeRO-style sharding falls out of pjit with the same
+PartitionSpec tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"       # "bfloat16" for the 671B config
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = m32 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(sdt), v32.astype(sdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

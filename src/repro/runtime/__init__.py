@@ -1,0 +1,2 @@
+from repro.runtime.ft import (FTConfig, FaultTolerantDriver, StepStats,
+                              StragglerDetector)

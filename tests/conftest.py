@@ -1,0 +1,30 @@
+import os
+
+# Tests run single-device (the dry-run sets its own 512-device flag in its
+# own process; see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+def norm_inf(x):
+    """Collapse every ⊥-ish value to one token before comparing.
+
+    The engines use finite sentinels (±~1e9 int, ±inf float) for ⊥; the
+    oracle uses IEEE ±inf/nan.  Arithmetic over unreachable vertices may
+    produce any of them (-inf vs nan for -⊥/⊥ etc.) — all mean "undefined"
+    in the paper's domain, so they compare equal."""
+    v = np.asarray(x, dtype=np.float64)
+    return np.where(np.isnan(v) | (np.abs(v) >= 1e8), np.float64(1e9), v)
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    from repro.graph.structure import line_graph, rmat_graph, uniform_graph
+    return {
+        "uniform": uniform_graph(9, 18, seed=3),
+        "uniform2": uniform_graph(12, 30, seed=7),
+        "rmat": rmat_graph(16, 48, seed=5),
+        "line": line_graph(8, weighted=True, seed=2),
+    }

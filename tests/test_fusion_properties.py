@@ -1,0 +1,133 @@
+"""Hypothesis property tests: fusion is semantics-preserving (Thm. 1) on
+RANDOM specifications over random graphs, and the engines agree with the
+oracle on randomly generated spec trees — the paper's core guarantee as a
+property-based test."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, fusion
+from repro.core import lang as L
+from repro.core.lang import paths_semantics
+from repro.graph.structure import uniform_graph
+
+from conftest import norm_inf
+
+# ---------------------------------------------------------------------------
+# random specification generator (core grammar of Fig. 6)
+# ---------------------------------------------------------------------------
+
+_pathfns = st.sampled_from([(L.WEIGHT, "min"), (L.LENGTH, "min"),
+                            (L.CAPACITY, "max"), (L.CAPACITY, "min"),
+                            (L.HEAD, "min")])
+
+
+@st.composite
+def m_terms(draw, depth=0):
+    f, r = draw(_pathfns)
+    src = draw(st.sampled_from([0, 1, None]))
+    if f.kind == "head":
+        src = None
+    base = L.PathReduce(r, f, L.AllPaths(src))
+    if depth >= 2:
+        return base
+    kind = draw(st.sampled_from(["leaf", "nested", "bin"]))
+    if kind == "leaf":
+        return base
+    if kind == "nested" and src is not None:
+        f2, r2 = draw(st.sampled_from([(L.LENGTH, "min"),
+                                       (L.WEIGHT, "min")]))
+        return L.PathReduce(r, f, L.ArgsRestrict(r2, f2, L.AllPaths(src)))
+    op = draw(st.sampled_from(["+", "max", "min"]))
+    return L.MBin(op, base, draw(m_terms(depth + 1)))
+
+
+@st.composite
+def r_terms(draw):
+    m = draw(m_terms())
+    red = draw(st.sampled_from(["min", "max", "sum"]))
+    base = L.VertexReduce(red, m)
+    if draw(st.booleans()):
+        return base
+    op = draw(st.sampled_from(["+", "max", "min"]))
+    return L.RBin(op, base, L.VertexReduce(
+        draw(st.sampled_from(["min", "max"])), draw(m_terms())))
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=m_terms(), seed=st.integers(0, 5))
+def test_random_m_spec_fused_matches_oracle(spec, seed):
+    g = uniform_graph(7, 14, seed=seed)
+    want = paths_semantics(spec, g, max_len=g.n)
+    if hasattr(want, "dtype") and want.dtype == object:
+        want = np.array([float(x) for x in want])
+    got = engine.run_program(g, fusion.fuse(spec), engine="pull").value
+    np.testing.assert_allclose(norm_inf(got), norm_inf(want), atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(spec=r_terms(), seed=st.integers(0, 3))
+def test_random_r_spec_fused_equals_unfused(spec, seed):
+    """Thm. 1 as a property: fused ≡ unfused on random r-terms."""
+    g = uniform_graph(8, 18, seed=seed)
+    fused = engine.run_program(g, fusion.fuse(spec), engine="pull").value
+    unfused = engine.run_program(g, fusion.lower_unfused(spec),
+                                 engine="pull").value
+    np.testing.assert_allclose(norm_inf(fused), norm_inf(unfused), atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=m_terms(), seed=st.integers(0, 3))
+def test_random_spec_engines_agree(spec, seed):
+    g = uniform_graph(7, 16, seed=seed)
+    prog = fusion.fuse(spec)
+    a = engine.run_program(g, prog, engine="pull").value
+    b = engine.run_program(g, prog, engine="push").value
+    c = engine.run_program(g, prog, engine="dense").value
+    np.testing.assert_allclose(norm_inf(a), norm_inf(b), atol=1e-3)
+    np.testing.assert_allclose(norm_inf(a), norm_inf(c), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# segment/scatter substrate invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7),
+                          st.floats(-100, 100, allow_nan=False)),
+                min_size=1, max_size=40),
+       st.sampled_from(["min", "max", "sum"]))
+def test_segment_reduce_matches_numpy(pairs, op):
+    import jax.numpy as jnp
+    from repro.graph import segment
+    ids = np.array([p[0] for p in pairs], np.int32)
+    vals = np.array([p[1] for p in pairs], np.float32)
+    got = np.asarray(segment.segment_reduce(op, jnp.asarray(vals),
+                                            jnp.asarray(ids), 8))
+    for s in range(8):
+        sel = vals[ids == s]
+        if sel.size == 0:
+            want = float(segment.identity(op, np.float32))
+        else:
+            want = {"min": np.min, "max": np.max, "sum": np.sum}[op](sel)
+        assert np.isclose(got[s], want, rtol=1e-5, atol=1e-5), (s, op)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["min", "max", "sum", "or", "and"]),
+       st.lists(st.floats(-50, 50, allow_nan=False), min_size=2,
+                max_size=16))
+def test_scatter_and_combine_agree(op, vals):
+    import jax.numpy as jnp
+    from repro.graph import segment
+    x = jnp.asarray(np.array(vals, np.float32))
+    if op in ("or", "and"):
+        x = (x > 0).astype(jnp.float32)
+    ident = segment.identity(op, jnp.float32)
+    init = jnp.full((1,), ident)
+    ids = jnp.zeros(x.shape[0], jnp.int32)
+    a = segment.scatter_reduce(op, init, x, ids)[0]
+    b = x[0]
+    for i in range(1, x.shape[0]):
+        b = segment.combine(op, b, x[i])
+    assert np.isclose(float(a), float(b), rtol=1e-5, atol=1e-5)

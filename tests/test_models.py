@@ -1,0 +1,243 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + finite values, plus model-specific invariants
+(flash≡naive attention, MLA cache equivalence, EGNN equivariance, MoE
+routing mass, DLRM retrieval)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.data import graphs as dg
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf
+
+KEY = jax.random.PRNGKey(0)
+LM_ARCHS = ["llama3.2-3b", "qwen2-72b", "yi-9b", "deepseek-v3-671b",
+            "llama4-maverick-400b-a17b"]
+
+
+def _lm_batch(cfg, b=2, s=16):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    return {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = configs.get(arch).smoke()
+    params = tf.init_params(cfg, KEY)
+    batch = _lm_batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: tf.loss_fn(cfg, p, batch)))(params)
+    assert np.isfinite(float(loss))
+    gn = jax.tree.reduce(lambda a, x: a + float(jnp.sum(x * x)), grads, 0.0)
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_serve(arch):
+    cfg = configs.get(arch).smoke()
+    params = tf.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    cache = tf.init_cache(cfg, 2, 32)
+    logits, cache = jax.jit(
+        lambda p, t, c: tf.prefill(cfg, p, t, c))(params, toks, cache)
+    assert logits.shape == (2, cfg.vocab)
+    lg, cache = jax.jit(
+        lambda p, tk, pos, c: tf.decode_step(cfg, p, tk, pos, c))(
+            params, toks[:, -1], jnp.int32(16), cache)
+    assert lg.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_prefill_matches_forward(arch):
+    """Serving path ≡ training forward at the last prompt position."""
+    cfg = configs.get(arch).smoke()
+    params = tf.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    cache = tf.init_cache(cfg, 2, 32)
+    lg, _ = tf.prefill(cfg, params, toks, cache)
+    fw, _, _ = tf.forward(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(fw[:, -1]),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-v3-671b",
+                                  "llama4-maverick-400b-a17b"])
+def test_flash_attention_equals_naive(arch):
+    """The custom-VJP chunked attention must equal naive attention in both
+    the loss and the gradients."""
+    cfg = configs.get(arch).smoke()
+    ncfg = dataclasses.replace(cfg, attn_impl="naive")
+    params = tf.init_params(cfg, KEY)
+    batch = _lm_batch(cfg)
+    l1, g1 = jax.jit(jax.value_and_grad(
+        lambda p: tf.loss_fn(cfg, p, batch)))(params)
+    l2, g2 = jax.jit(jax.value_and_grad(
+        lambda p: tf.loss_fn(ncfg, p, batch)))(params)
+    assert abs(float(l1 - l2)) < 1e-4
+    md = jax.tree.reduce(
+        max, jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), g1, g2))
+    assert md < 5e-3
+
+
+def test_decode_matches_forward_next_token():
+    """Greedy decode after prefill ≡ forward over the extended sequence."""
+    cfg = configs.get("llama3.2-3b").smoke()
+    params = tf.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 17), 0, cfg.vocab)
+    cache = tf.init_cache(cfg, 2, 32)
+    _, cache = tf.prefill(cfg, params, toks[:, :16], cache)
+    lg, _ = tf.decode_step(cfg, params, toks[:, 16], jnp.int32(16), cache)
+    fw, _, _ = tf.forward(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(fw[:, -1]),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_moe_routing_mass_and_aux():
+    from repro.models.layers import moe_ffn
+    cfg = configs.get("deepseek-v3-671b").smoke()
+    params = tf.init_params(cfg, KEY)
+    moe_p = jax.tree.map(lambda a: a[1], params["layers"]["moe"])
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    y, aux = moe_ffn(cfg, moe_p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux)) and float(aux) >= 0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_scan_groups_periodic_for_llama4():
+    cfg = configs.get("llama4-maverick-400b-a17b").full()
+    plan = tf._scan_groups(cfg)
+    assert plan[0] == "periodic"
+    assert plan[1] == 4            # dense/MoE × local/global 4-cycle
+
+
+def test_scan_groups_runs_for_deepseek():
+    cfg = configs.get("deepseek-v3-671b").full()
+    plan = tf._scan_groups(cfg)
+    assert plan[0] == "runs"
+    assert len(plan[1]) == 2       # 3-dense prefix + 58-MoE body
+
+
+# --- GNN smokes --------------------------------------------------------------
+
+def test_gat_smoke():
+    cfg = configs.get("gat-cora").smoke()
+    b = dg.cora_batch(n=64, e=256, d_feat=cfg.d_in)
+    p = gnn_mod.gat_init(cfg, KEY)
+    out = gnn_mod.gat_forward(cfg, p, b["x"], b["src"], b["dst"], 64)
+    assert out.shape == (64, cfg.n_classes)
+    loss = jax.jit(lambda p, b: gnn_mod.gat_loss(cfg, p, b))(p, b)
+    assert np.isfinite(float(loss))
+
+
+def test_egnn_smoke_and_equivariance():
+    cfg = configs.get("egnn").smoke()
+    b = dg.egnn_batch(n_graphs=4, n_atoms=10)
+    p = gnn_mod.egnn_init(cfg, KEY)
+    n = b["feats"].shape[0]
+    out, x1 = gnn_mod.egnn_forward(cfg, p, b["feats"], b["coords"],
+                                   b["src"], b["dst"], n)
+    assert out.shape == (n, cfg.d_out)
+    th = 0.7
+    R = jnp.asarray(np.array([[np.cos(th), -np.sin(th), 0],
+                              [np.sin(th), np.cos(th), 0],
+                              [0, 0, 1]], np.float32))
+    out2, x2 = gnn_mod.egnn_forward(cfg, p, b["feats"], b["coords"] @ R.T,
+                                    b["src"], b["dst"], n)
+    np.testing.assert_allclose(out, out2, atol=1e-4)          # invariant
+    np.testing.assert_allclose(x1 @ R.T, x2, atol=1e-4)       # equivariant
+
+
+def test_mgn_smoke():
+    cfg = configs.get("meshgraphnet").smoke()
+    b = dg.mesh_batch(rows=6, cols=6, d_node_in=cfg.d_node_in,
+                      d_edge_in=cfg.d_edge_in, d_out=cfg.d_out)
+    p = gnn_mod.mgn_init(cfg, KEY)
+    loss = jax.jit(lambda p, b: gnn_mod.mgn_loss(cfg, p, b))(p, b)
+    assert np.isfinite(float(loss))
+
+
+def test_dimenet_smoke():
+    cfg = configs.get("dimenet").smoke()
+    b = dg.molecule_batch(n_graphs=4, n_atoms=8, n_species=cfg.n_species)
+    b.pop("n_graphs")
+    p = gnn_mod.dimenet_init(cfg, KEY)
+    loss = jax.jit(lambda p, b: gnn_mod.dimenet_loss(cfg, p, b))(p, b)
+    assert np.isfinite(float(loss))
+
+
+def test_dimenet_rotation_invariance():
+    """DimeNet consumes distances/angles only — energy is rotation
+    invariant."""
+    cfg = configs.get("dimenet").smoke()
+    b = dg.molecule_batch(n_graphs=2, n_atoms=8, n_species=cfg.n_species)
+    p = gnn_mod.dimenet_init(cfg, KEY)
+    n = b["species"].shape[0]
+    out1 = gnn_mod.dimenet_forward(cfg, p, b["species"], b["coords"],
+                                   b["src"], b["dst"], b["t_kj"],
+                                   b["t_ji"], n)
+    th = 1.1
+    R = jnp.asarray(np.array([[np.cos(th), -np.sin(th), 0],
+                              [np.sin(th), np.cos(th), 0],
+                              [0, 0, 1]], np.float32))
+    out2 = gnn_mod.dimenet_forward(cfg, p, b["species"], b["coords"] @ R.T,
+                                   b["src"], b["dst"], b["t_kj"],
+                                   b["t_ji"], n)
+    np.testing.assert_allclose(out1, out2, atol=1e-3)
+
+
+def test_triplets_are_wedges():
+    b = dg.molecule_batch(n_graphs=2, n_atoms=6)
+    src, dst = np.asarray(b["src"]), np.asarray(b["dst"])
+    t_kj, t_ji = np.asarray(b["t_kj"]), np.asarray(b["t_ji"])
+    # dst of edge (k→j) must equal src of edge (j→i)
+    ok = dst[t_kj] == src[t_ji]
+    assert ok.mean() > 0.95        # (degenerate pad triplet allowed)
+
+
+# --- DLRM --------------------------------------------------------------------
+
+def test_dlrm_smoke_and_shapes():
+    cfg = configs.get("dlrm-rm2").smoke()
+    b = dg.dlrm_batch(cfg, 64)
+    p = dlrm_mod.dlrm_init(cfg, KEY)
+    logits = dlrm_mod.dlrm_forward(cfg, p, b["dense"], b["sparse"])
+    assert logits.shape == (64,)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: dlrm_mod.dlrm_loss(cfg, p, b)))(p)
+    assert np.isfinite(float(loss))
+
+
+def test_dlrm_interaction_feature_count():
+    cfg = configs.get("dlrm-rm2").full()
+    f = cfg.n_sparse + 1
+    assert cfg.d_interact == f * (f - 1) // 2 + cfg.embed_dim == 415
+
+
+def test_dlrm_retrieval_is_batched_dot():
+    cfg = configs.get("dlrm-rm2").smoke()
+    b = dg.dlrm_batch(cfg, 4)
+    p = dlrm_mod.dlrm_init(cfg, KEY)
+    cand = jax.random.normal(KEY, (1000, cfg.embed_dim))
+    sc = dlrm_mod.dlrm_retrieval_scores(cfg, p, b["dense"], b["sparse"], cand)
+    assert sc.shape == (4, 1000)
+    u = dlrm_mod.dlrm_user_vector(cfg, p, b["dense"], b["sparse"])
+    np.testing.assert_allclose(sc, u @ cand.T, atol=1e-5)
+
+
+def test_embedding_bag_kernel_matches_dlrm_lookup():
+    """The Pallas embedding-bag kernel computes the same bags as the model's
+    gather path (single table, multi-hot)."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 64, size=(128, 4)).astype(np.int32))
+    got = ops.embedding_bag(table, idx, mode="sum")
+    want = table[idx].sum(axis=1)
+    np.testing.assert_allclose(got, want, atol=1e-5)

