@@ -17,6 +17,10 @@ import numpy as np
 from repro.graph.structure import rmat_graph, undirected, uniform_graph
 
 BENCH_GRAPHS = {
+    # XS regime for the interpret-mode pallas engine on CPU CI (the Pallas
+    # interpreter steps the grid in Python; 2k-vertex graphs take ~10 s/query)
+    "RM-XS": lambda weighted: rmat_graph(400, 3_200, seed=11,
+                                         weighted=weighted),
     "RM-S": lambda weighted: rmat_graph(2_000, 16_000, seed=11,
                                         weighted=weighted),
     "RM-M": lambda weighted: rmat_graph(10_000, 80_000, seed=12,

@@ -1,23 +1,79 @@
 """Paper Fig. 13 (WSP/NWR/RADIUS) + Fig. 14/Table 3 (DRR/Trust/RDS):
 fused vs unfused edge-work ratio and wall time, weighted and unweighted
-graphs.
+graphs — now including the pallas engine with kernel-launch counting.
 
 Theoretical bounds reproduced: simple pair fusions bound at 50% (two
 passes → one), 4-reduction fusions at 25%, RDS at 50% (4 rounds → 2).
+
+For the pallas engine two extra columns track the execution layer
+(DESIGN.md §2/§7): ``launches`` is the measured number of ``pallas_call``
+launches per engine iteration (trace-time count over all rounds) and
+``seed_sweeps`` the per-iteration sweep count of the pre-fusion execution
+model (one launch per lex level per plan, plus one has-pred probe per
+component on pull− rounds) — the quantity the single-pass fused sweep
+collapses to one launch per round.  ``--engines pallas`` additionally
+writes machine-readable ``BENCH_pallas.json`` next to the repo root so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):           # `python benchmarks/fusion_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    try:
+        import repro                    # noqa: F401  (pip install -e .)
+    except ImportError:                 # fall back to the source tree
+        sys.path.insert(0, os.path.join(_root, "src"))
 
 from benchmarks.common import BENCH_GRAPHS, emit, timed
 from repro.core import engine, fusion
 from repro.core import usecases as U
+from repro.core.iterate import plan_idempotent
+from repro.kernels.ops import _plan_levels
 
 SIMPLE = ["WSP", "NWR", "RADIUS"]
 MULTI = ["DRR", "Trust", "RDS"]
 
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pallas.json")
+
+
+def seed_sweeps_per_iter(prog) -> int:
+    """Per-iteration edge-sweep count of the one-launch-per-level execution
+    model this PR replaced (summed over the program's iteration rounds)."""
+    total = 0
+    for _name, round_ in prog.rounds:
+        if not round_.leaves:
+            continue
+        plans = [leaf.plan for leaf in round_.leaves]
+        idempotent = all(plan_idempotent(p) for p in plans)
+        for p in plans:
+            levels = _plan_levels(p)
+            total += len(levels)
+            if not idempotent:
+                total += len(levels)        # one has-pred probe per component
+    return total
+
+
+def measured_launches(g, prog):
+    """Cold-build the pallas executors and count pallas_call launches per
+    iteration (the while_loop body traces each sweep exactly once)."""
+    from repro.kernels import edge_reduce as er
+    engine.clear_program_caches()
+    er.reset_sweep_stats()
+    engine.run_program(g, prog, engine="pallas")
+    return er.SWEEP_STATS["launches"]
+
 
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
-        engines=("pull", "push")):
+        engines=("pull", "push"), json_out: bool = True):
     rows = []
+    json_rows = []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -26,21 +82,57 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                     spec = U.ALL_SPECS[name]()
                     fprog = fusion.fuse(spec)
                     uprog = fusion.lower_unfused(spec)
+                    launches = ""
+                    if eng == "pallas":
+                        launches = measured_launches(g, fprog)
                     t_f, rf = timed(lambda: engine.run_program(
                         g, fprog, engine=eng), repeats=3)
                     t_u, ru = timed(lambda: engine.run_program(
                         g, uprog, engine=eng), repeats=3)
                     ratio = rf.stats.edge_work / max(ru.stats.edge_work, 1.0)
-                    rows.append([
-                        gname, "w" if weighted else "unw", eng, name,
-                        round(ratio, 4),
-                        round(t_u / max(t_f, 1e-9), 3),
-                        rf.stats.rounds, ru.stats.rounds,
-                        round(t_f * 1e3, 1), round(t_u * 1e3, 1)])
-    return emit(rows, ["graph", "weights", "engine", "usecase",
-                       "edge_work_ratio", "speedup", "rounds_fused",
-                       "rounds_unfused", "t_fused_ms", "t_unfused_ms"])
+                    row = [gname, "w" if weighted else "unw", eng, name,
+                           round(ratio, 4),
+                           round(t_u / max(t_f, 1e-9), 3),
+                           rf.stats.rounds, ru.stats.rounds,
+                           round(t_f * 1e3, 1), round(t_u * 1e3, 1),
+                           launches, seed_sweeps_per_iter(fprog)]
+                    rows.append(row)
+                    if eng == "pallas":
+                        json_rows.append({
+                            "graph": gname, "weighted": weighted,
+                            "usecase": name,
+                            "edge_work_ratio": float(ratio),
+                            "t_fused_ms": t_f * 1e3,
+                            "t_unfused_ms": t_u * 1e3,
+                            "rounds_fused": rf.stats.rounds,
+                            "iterations_fused": rf.stats.iterations,
+                            "launches_per_iter": launches,
+                            "seed_sweeps_per_iter":
+                                seed_sweeps_per_iter(fprog)})
+    header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
+              "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
+              "t_unfused_ms", "launches", "seed_sweeps"]
+    out = emit(rows, header)
+    if json_rows and json_out:
+        with open(_JSON_PATH, "w") as f:
+            json.dump({"bench": "fusion_bench", "engine": "pallas",
+                       "rows": json_rows}, f, indent=1)
+        print(f"wrote {_JSON_PATH}")
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--engines", default="pull,push",
+                    help="comma list: pull,push,dense,adaptive,pallas")
+    ap.add_argument("--graphs", default=None,
+                    help=f"comma list from {sorted(BENCH_GRAPHS)}; defaults "
+                         "to RM-S, or RM-XS when pallas is benchmarked "
+                         "(interpret-mode grids step in Python on CPU)")
+    ap.add_argument("--usecases", default=",".join(SIMPLE + MULTI))
+    args = ap.parse_args()
+    engines = tuple(args.engines.split(","))
+    graphs = args.graphs or ("RM-XS" if "pallas" in engines else "RM-S")
+    run(graph_names=tuple(graphs.split(",")),
+        usecases=tuple(args.usecases.split(",")),
+        engines=engines)

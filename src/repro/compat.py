@@ -1,0 +1,26 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+``jax.shard_map`` graduated out of ``jax.experimental`` only after the
+version baked into the CI image; import it from here so every engine works
+on both sides of the move.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                  # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, **kwargs):
+        # the replication check was renamed check_vma -> check_rep backwards
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        # the pre-graduation replication checker rejects valid collective
+        # patterns inside while_loop bodies (it suggests disabling itself);
+        # the graduated jax.shard_map path above keeps its checker on
+        kwargs.setdefault("check_rep", False)
+        return _shard_map(f, **kwargs)
+
+__all__ = ["shard_map"]

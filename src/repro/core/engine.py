@@ -30,6 +30,35 @@ from repro.core.synthesis import DirectKernels, synthesize_round
 _BOT_CUTOFF = 1e8
 
 
+def clear_program_caches():
+    """Drop every layer of the compiled-program cache: synthesized round
+    kernels, blocked-ELL layouts, and jitted pallas executors.  Mostly for
+    tests and benchmarks that need cold-start numbers; normal callers keep
+    the caches warm across rounds, repeated queries and repeats."""
+    from repro.core import synthesis
+    from repro.graph import structure
+    synthesis._ROUND_CACHE.clear()
+    structure._ELL_CACHE.clear()
+    try:
+        from repro.kernels import ops as kops
+        kops.clear_executor_cache()
+    except ImportError:                 # pallas backend unavailable
+        pass
+
+
+def program_cache_stats() -> dict:
+    from repro.core import synthesis
+    from repro.graph import structure
+    out = {"synth_rounds": len(synthesis._ROUND_CACHE),
+           "ell_layouts": len(structure._ELL_CACHE)}
+    try:
+        from repro.kernels import ops as kops
+        out["pallas_executors"] = kops.executor_cache_size()
+    except ImportError:
+        out["pallas_executors"] = 0
+    return out
+
+
 @dataclasses.dataclass
 class ExecStats:
     rounds: int = 0
@@ -155,6 +184,10 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
         res = iterate.iterate_distributed(g, [comp], plans, mesh, axes=axes,
                                           model="pull-", max_iter=dk.max_iter,
                                           tol=dk.tol)
+    elif engine == "pallas":
+        from repro.kernels import ops as kops
+        res = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
+                                  tol=dk.tol)
     else:
         raise ValueError(engine)
     stats = ExecStats(rounds=1, iterations=res.iterations, edge_work=res.edge_work)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.core.fusion import FusedRound, Lex, Prim
 from repro.graph import segment
 from repro.graph.partition import partition_edges
@@ -564,9 +565,9 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
         return state, k[None], work[None]
 
     pspec = P(axes)
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(pspec, pspec, pspec, pspec, pspec),
-                       out_specs=(tuple(P() for _ in comps), P(axes), P(axes)))
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(pspec, pspec, pspec, pspec, pspec),
+                   out_specs=(tuple(P() for _ in comps), P(axes), P(axes)))
     state, k, work = fn(part.src, part.dst, part.weight, part.capacity, part.mask)
     return IterationResult(state=state, iterations=int(np.asarray(k)[0]),
                            edge_work=float(np.asarray(work)[0]))

@@ -107,12 +107,12 @@ def synthesize_component(f: L.PathFn, rop: str,
     return out
 
 
-def synthesize_round(round_) -> dict:
-    """Synthesize kernels for every component of a FusedRound.
+_ROUND_CACHE: dict = {}
 
-    Returns {comp_idx: (p_fn, init_fn)} for iterate.comp_runtimes, plus the
-    SynthesizedKernels records under key ("kernels", idx)."""
-    from repro.core.fusion import Lex, Prim
+
+def _plan_position_ops(round_) -> dict:
+    """{comp idx: monoid} from each leaf plan's lex-level positions."""
+    from repro.core.fusion import Lex
 
     ops = {}
 
@@ -123,12 +123,40 @@ def synthesize_round(round_) -> dict:
 
     for leaf in round_.leaves:
         walk(leaf.plan)
+    return ops
 
+
+def round_structure_key(round_) -> tuple:
+    """Structural identity of a round's iteration part: component path
+    functions, sources and plan-position monoids.  Two rounds with the same
+    key synthesize (and compile) the same kernel closures, so downstream
+    compiled-executor caches key on the closure identities this memo keeps
+    stable (DESIGN.md §8)."""
+    ops = _plan_position_ops(round_)
+    return tuple((comp.idx, comp.f.kind, comp.source, ops[comp.idx])
+                 for comp in round_.components)
+
+
+def synthesize_round(round_) -> dict:
+    """Synthesize kernels for every component of a FusedRound.
+
+    Returns {comp_idx: (p_fn, init_fn)} for iterate.comp_runtimes, plus the
+    SynthesizedKernels records under key ("kernels", idx).  Memoized per
+    round structure so the compiled per-component closures (and with them
+    every downstream executor cache entry) are reused across rounds,
+    repeated queries and benchmark repeats."""
+    key = round_structure_key(round_)
+    hit = _ROUND_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    ops = _plan_position_ops(round_)
     out = {}
     for comp in round_.components:
         sk = synthesize_component(comp.f, ops[comp.idx])
         out[comp.idx] = (sk.p_fn(), sk.init_fn())
         out[("kernels", comp.idx)] = sk
+    _ROUND_CACHE[key] = out
     return out
 
 

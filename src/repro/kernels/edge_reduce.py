@@ -15,10 +15,22 @@ slots)`` tile in VMEM:
   4. accumulate across slot-tiles in the output block (the grid's minor
      axis walks the slot tiles, so ``out_ref`` accumulation is safe).
 
-Lexicographic plans (fused nested reductions, rule FPNEST) run one kernel
-invocation per lex level: later levels recompute the earlier levels'
-propagated values and mask to tie slots — the classic two-pass trick, kept
-on-chip per tile.
+Two sweep entry points:
+
+``fused_ell_sweep`` — the single-pass engine sweep (DESIGN.md §2).  ONE
+``pallas_call`` evaluates every plan of the fused round: each tile gathers
+each component's state once, applies all propagation functions, performs the
+full lexicographic reduction chain on-chip, and emits per-tile candidate
+blocks (plus, optionally, the fused has-predecessor probe of the pull−
+models).  Cross-tile lexicographic ties are resolved by a short jnp pass
+over the ``[n_pad, width/BLOCK_E]`` candidate arrays — no second kernel
+launch.  Tiles whose ``tile_act`` bit is 0 (no real slots, or no frontier-
+active source) short-circuit via ``pl.when`` and contribute exactly the
+reduction identities.
+
+``ell_level_reduce`` — the original one-launch-per-lex-level sweep, kept as
+a reference path and for kernel-level tests; later levels recompute the
+earlier levels' propagated values and mask to tie slots.
 
 Padding slots and frontier-inactive sources carry the reduction identity
 (condition C6 makes that sound).  Tiles default to (8, 128): the VPU lane
@@ -41,6 +53,15 @@ BLOCK_E = 128
 # boolean monoids run as int32 min/max inside the kernel
 _INT_OP = {"or": "max", "and": "min"}
 
+# trace-time kernel-launch counter: each pallas_call issued per engine
+# iteration increments "launches" exactly once (the while_loop body traces
+# once), so tests and benchmarks read sweeps-per-iteration directly.
+SWEEP_STATS = {"launches": 0}
+
+
+def reset_sweep_stats():
+    SWEEP_STATS["launches"] = 0
+
 
 def _combine(op: str, a, b):
     return {"min": jnp.minimum, "max": jnp.maximum,
@@ -50,6 +71,182 @@ def _combine(op: str, a, b):
 def _row_reduce(op: str, x, axis):
     return {"min": jnp.min, "max": jnp.max, "sum": jnp.sum,
             "prod": jnp.prod}[op](x, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass sweep: all plans × lex levels (+ has-pred) in one launch.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(tile_act_ref, srcs_ref, w_ref, c_ref, mask_ref, active_ref,
+                  outdeg_ref, *rest, n_comps, plan_specs, hp_positions,
+                  p_fns, idents, nv, block_v):
+    """One (BLOCK_V, BLOCK_E) tile of the fused sweep.
+
+    ``rest`` = the per-component state vectors (``n_comps`` of them) followed
+    by the output refs: one [block_v, 1] candidate block per plan per lex
+    level, then one [block_v, 1] has-pred block per entry of
+    ``hp_positions``.  ``plan_specs`` is static: per plan a tuple of
+    (state position, monoid) levels, primary first.
+
+    Every output block is owned by exactly one grid step — no cross-step
+    accumulation — so cross-tile lexicographic resolution can run outside
+    the kernel on the [n_pad, n_tiles] candidates.
+    """
+    i = pl.program_id(0)
+    state_refs = rest[:n_comps]
+    out_refs = rest[n_comps:]
+
+    # Identity-fill every output first: tiles skipped below contribute ⊥
+    # (= the identity, C6) bit-for-bit.
+    oi = 0
+    for spec in plan_specs:
+        for (pos, _op) in spec:
+            out_refs[oi][...] = jnp.full(out_refs[oi].shape, idents[pos],
+                                         out_refs[oi].dtype)
+            oi += 1
+    for _pos in hp_positions:
+        out_refs[oi][...] = jnp.zeros(out_refs[oi].shape, out_refs[oi].dtype)
+        oi += 1
+
+    @pl.when(tile_act_ref[0, 0] != 0)
+    def _tile_body():
+        srcs = srcs_ref[...]
+        raw_mask = mask_ref[...]
+        mask = raw_mask & (active_ref[...][srcs] != 0)
+        rows = i * block_v + jax.lax.broadcasted_iota(jnp.int32, srcs.shape, 0)
+        env = {"w": w_ref[...], "c": c_ref[...], "esrc": srcs, "edst": rows,
+               "outdeg": outdeg_ref[...][srcs], "nv": jnp.float32(nv)}
+        gathered, props = [], []
+        for k in range(n_comps):                 # ONE gather per component
+            nvals = state_refs[k][...][srcs]
+            p = jnp.asarray(p_fns[k]({"n": nvals, **env}), nvals.dtype)
+            gathered.append(nvals)
+            props.append(jnp.where(nvals == idents[k], idents[k], p))
+        oi = 0
+        for spec in plan_specs:
+            tie = mask
+            for l, (pos, op) in enumerate(spec):
+                ident = jnp.asarray(idents[pos], props[pos].dtype)
+                vals = jnp.where(tie, props[pos], ident)
+                best = _row_reduce(op, vals, axis=1)
+                out_refs[oi][...] = best[:, None].astype(out_refs[oi].dtype)
+                oi += 1
+                if l + 1 < len(spec):
+                    tie = tie & (props[pos] == best[:, None])
+        for pos in hp_positions:                 # fused has-pred probe
+            nb = (raw_mask & (gathered[pos] != idents[pos])).astype(jnp.int32)
+            out_refs[oi][...] = jnp.max(nb, axis=1)[:, None]
+            oi += 1
+
+
+def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
+                    outdeg, *, plans, idents, p_fns, nv,
+                    need_haspred: bool = False,
+                    block_v: int = BLOCK_V, block_e: int = BLOCK_E,
+                    interpret: Optional[bool] = None,
+                    return_candidates: bool = False):
+    """Single-launch fused edge sweep over every plan of a fused round.
+
+    srcs/weight/capacity/mask   [n_pad, width] blocked-ELL arrays
+    tile_act  [n_pad/block_v, width/block_e] int32 — 0 short-circuits a tile
+    states    {comp: [n_pad] value vector}
+    active    [n_pad] int32 frontier (1 = source eligible)
+    outdeg    [n_pad] float32 (gathered per edge into the P environment)
+    plans     static: per plan a tuple of (comp, op) lex levels, primary first
+    idents    {comp: identity scalar};  p_fns {comp: propagation closure}
+
+    Returns ``(red, hp)``: ``red[comp]`` is the [n_pad] cross-tile-resolved
+    reduction of that level, ``hp[comp]`` the [n_pad] bool has-pred vector
+    (empty dict unless ``need_haspred``).  With ``return_candidates`` the raw
+    per-tile candidate arrays are appended: ``(red, hp, cands)``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    comps_order = []
+    for spec in plans:
+        for c, _op in spec:
+            if c not in comps_order:
+                comps_order.append(c)
+    pos_of = {c: k for k, c in enumerate(comps_order)}
+
+    def _scalar(c):
+        i = idents[c]
+        return int(i) if jnp.issubdtype(states[c].dtype, jnp.integer) else float(i)
+
+    ident_scalars = tuple(_scalar(c) for c in comps_order)
+    plan_specs = tuple(tuple((pos_of[c], _INT_OP.get(op, op)) for c, op in spec)
+                       for spec in plans)
+    hp_positions = tuple(range(len(comps_order))) if need_haspred else ()
+
+    n_pad, width = srcs.shape
+    n_i, n_j = n_pad // block_v, width // block_e
+    grid = (n_i, n_j)
+
+    tile = pl.BlockSpec((block_v, block_e), lambda i, j: (i, j))
+    one = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
+    cand = pl.BlockSpec((block_v, 1), lambda i, j: (i, j))
+
+    args = [tile_act, srcs, weight, capacity, mask,
+            jnp.asarray(active, jnp.int32), outdeg]
+    specs = [one, tile, tile, tile, tile, full(active), full(outdeg)]
+    for c in comps_order:
+        args.append(states[c])
+        specs.append(full(states[c]))
+
+    out_shapes, out_specs = [], []
+    for spec in plans:
+        for c, _op in spec:
+            out_shapes.append(jax.ShapeDtypeStruct((n_pad, n_j),
+                                                   states[c].dtype))
+            out_specs.append(cand)
+    for _ in hp_positions:
+        out_shapes.append(jax.ShapeDtypeStruct((n_pad, n_j), jnp.int32))
+        out_specs.append(cand)
+
+    kern = functools.partial(
+        _fused_kernel, n_comps=len(comps_order), plan_specs=plan_specs,
+        hp_positions=hp_positions,
+        p_fns=tuple(p_fns[c] for c in comps_order),
+        idents=ident_scalars, nv=float(nv), block_v=block_v)
+
+    SWEEP_STATS["launches"] += 1
+    outs = pl.pallas_call(
+        kern, grid=grid, in_specs=specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret)(*args)
+    outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+
+    # Cross-tile lexicographic resolution (the "short second pass"): a fold
+    # of the plan_merge recurrence over the tile axis, in plain jnp — zero
+    # extra kernel launches.
+    red, oi = {}, 0
+    for spec, mapped in zip(plans, plan_specs):
+        tie = jnp.ones(outs[oi].shape, bool)
+        for (c, _op), (pos, op) in zip(spec, mapped):
+            ident = jnp.asarray(ident_scalars[pos], outs[oi].dtype)
+            vals = jnp.where(tie, outs[oi], ident)
+            best = _row_reduce(op, vals, axis=1)
+            red[c] = best
+            tie = tie & (vals == best[:, None])
+            oi += 1
+    hp = {}
+    if need_haspred:
+        for k, c in enumerate(comps_order):
+            hp[c] = jnp.max(outs[oi + k], axis=1) > 0
+    if return_candidates:
+        return red, hp, outs
+    return red, hp
+
+
+def tile_activity(srcs, mask, tile_nnz, active_i32, block_v: int, block_e: int):
+    """Frontier-aware per-tile activity bitmap: a tile runs iff it has real
+    slots AND at least one frontier-active source.  One gather + block
+    reduction in XLA — far cheaper than the propagation work it skips."""
+    n_i, n_j = tile_nnz.shape
+    act = (active_i32[srcs] != 0) & mask
+    any_act = act.reshape(n_i, block_v, n_j, block_e).any(axis=(1, 3))
+    return ((tile_nnz > 0) & any_act).astype(jnp.int32)
 
 
 def _level_kernel(srcs_ref, w_ref, c_ref, mask_ref, active_ref, outdeg_ref,
@@ -168,4 +365,5 @@ def ell_level_reduce(ell, op: str, p_fns: Sequence[Callable],
         out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
         interpret=interpret,
     )
+    SWEEP_STATS["launches"] += 1
     return fn(*args)

@@ -2,21 +2,30 @@
 
 ``iterate_pallas`` is the GraphIt-analogue engine (DESIGN.md §2): the same
 fixpoint semantics as ``iterate.iterate_graph`` but with every edge sweep
-executed by the blocked-ELL Pallas kernel.  The other wrappers expose the
-embedding-bag and ELL-softmax kernels behind plain jit'd functions that the
-models call.
+executed by the blocked-ELL Pallas kernel.  One engine iteration issues
+exactly ONE ``pallas_call`` — ``fused_ell_sweep`` evaluates every plan of
+the fused round (all lexicographic levels plus, for the pull− models, the
+has-predecessor probe) in a single launch, and cross-tile lexicographic
+ties resolve in a short jnp pass over the per-tile candidates.
+
+The fixpoint itself is compiled once per (plan structure, kernel set,
+graph shape) and memoized in ``_EXEC_CACHE``: repeated queries, multi-round
+programs (RDS, Trust) and benchmark repeats reuse the traced
+``lax.while_loop`` instead of rebuilding it per call (DESIGN.md §8).
+
+The other wrappers expose the embedding-bag and ELL-softmax kernels behind
+plain jit'd functions that the models call.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import iterate
-from repro.core.fusion import Lex, Prim
-from repro.graph.structure import Graph, to_blocked_ell
+from repro.core.fusion import Lex
+from repro.graph.structure import Graph, blocked_ell_cached
 from repro.kernels import edge_reduce as _er
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import segment_softmax as _ss
@@ -38,105 +47,138 @@ def _plan_levels(plan):
     return levels
 
 
+# ---------------------------------------------------------------------------
+# Compiled-executor cache.
+# ---------------------------------------------------------------------------
+
+_EXEC_CACHE: dict = {}
+_EXEC_CACHE_MAX = 128
+
+
+def clear_executor_cache():
+    _EXEC_CACHE.clear()
+
+
+def executor_cache_size() -> int:
+    return len(_EXEC_CACHE)
+
+
+def _comps_key(comps):
+    """Kernel-set identity: stable across calls because synthesize_round
+    memoizes its compiled closures per round structure."""
+    return tuple((cr.idx, cr.op, str(cr.dtype), cr.source,
+                  id(cr.p_fn), id(cr.init_fn),
+                  None if cr.e_fn is None else id(cr.e_fn)) for cr in comps)
+
+
+def _build_pallas_executor(comps, plans, n, max_iter, tol,
+                           block_v, block_e, interpret):
+    """Trace + jit the whole fixpoint once.  The returned function takes the
+    blocked-ELL arrays and out-degrees as arguments (NOT closure constants),
+    so one compiled executor serves every graph with the same padded shape."""
+    comps_by_idx = {cr.idx: cr for cr in comps}
+    plan_levels = tuple(tuple(_plan_levels(p)) for p in plans)
+    idempotent = all(iterate.plan_idempotent(p) for p in plans)
+    comps_order = []
+    for spec in plan_levels:
+        for c, _op in spec:
+            if c not in comps_order:
+                comps_order.append(c)
+    idents = {c: comps_by_idx[c].ident for c in comps_order}
+    p_fns = {c: comps_by_idx[c].p_fn for c in comps_order}
+
+    def run(srcs, weight, capacity, mask, tile_nnz, out_deg):
+        n_pad = srcs.shape[0]
+        out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
+            jnp.maximum(out_deg, 1).astype(jnp.float32))
+        out_deg_real = jnp.zeros(n_pad, jnp.float32).at[:n].set(
+            out_deg.astype(jnp.float32))
+        num_edges = jnp.sum(mask.astype(jnp.float32))
+        tiles_static = (tile_nnz > 0).astype(jnp.int32)
+        ones_act = jnp.ones(n_pad, jnp.int32)
+
+        def pad_state(x, ident):
+            return jnp.full((n_pad,), ident, x.dtype).at[:n].set(x)
+
+        def init_state():
+            base = iterate._init_state(comps, n)
+            return tuple(pad_state(s, cr.ident)
+                         for s, cr in zip(base, comps))
+
+        def sweep(state_d, active_i32, tile_act, need_hp):
+            states = {c: state_d[c] for c in comps_order}
+            return _er.fused_ell_sweep(
+                srcs, weight, capacity, mask, tile_act, states, active_i32,
+                out_deg_pad, plans=plan_levels, idents=idents, p_fns=p_fns,
+                nv=float(n), need_haspred=need_hp,
+                block_v=block_v, block_e=block_e, interpret=interpret)
+
+        def body(carry):
+            state, active, k, work = carry
+            state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
+            if idempotent:
+                # pull+: frontier-masked; skip tiles with no active source.
+                active_i32 = active.astype(jnp.int32)
+                work = work + jnp.sum(out_deg_real
+                                      * active.astype(jnp.float32))
+                tile_act = _er.tile_activity(srcs, mask, tile_nnz,
+                                             active_i32, block_v, block_e)
+                red, _ = sweep(state_d, active_i32, tile_act, False)
+                new_d = {}
+                for p in plans:
+                    new_d.update(iterate.plan_merge(p, state_d, red,
+                                                    comps_by_idx))
+            else:
+                # pull−: full recompute; has-pred probe fused in the same
+                # launch; only all-padding tiles skip.
+                work = work + num_edges
+                red, hp = sweep(state_d, ones_act, tiles_static, True)
+                red = iterate._apply_epilogue(comps, red)
+                new_d = iterate._recompute_merge(plans, comps_by_idx,
+                                                 state_d, red, hp)
+            new = tuple(new_d[cr.idx] for cr in comps)
+            ch = iterate._changed(comps, new, state, tol)
+            return new, ch, k + 1, work
+
+        def cond(carry):
+            _, active, k, _ = carry
+            return jnp.any(active) & (k < max_iter)
+
+        state0 = init_state()
+        state, active, k, work = jax.lax.while_loop(
+            cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
+                         jnp.float32(0)))
+        return state, k, work
+
+    return jax.jit(run)
+
+
 def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    tol: float = 0.0, block_v: int = 8, block_e: int = 128,
                    interpret: Optional[bool] = None) -> iterate.IterationResult:
-    """Fixpoint of the fused reduction with Pallas edge sweeps.
+    """Fixpoint of the fused reduction with single-launch Pallas edge sweeps.
 
     Semantics match the pull model (Def. 1 / Def. 2): idempotent plans run
     frontier-masked (pull+), non-idempotent plans run full-recompute (pull−),
     per-level lexicographic reductions per fused plan.
     """
     n = g.n
-    ell = to_blocked_ell(g, block_v=block_v, block_e=block_e)
-    n_pad = ell.n_pad
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     max_iter = max_iter if max_iter is not None else 2 * n + 4
-    idempotent = all(iterate.plan_idempotent(p) for p in plans)
-    comps_by_idx = {cr.idx: cr for cr in comps}
-    out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
-        jnp.maximum(g.out_deg, 1).astype(jnp.float32))
-    out_deg_real = jnp.zeros(n_pad, jnp.float32).at[:n].set(
-        g.out_deg.astype(jnp.float32))
-
-    def pad_state(x, ident):
-        return jnp.full((n_pad,), ident, x.dtype).at[:n].set(x)
-
-    def init_state():
-        base = iterate._init_state(comps, n)
-        return tuple(pad_state(s, cr.ident) for s, cr in zip(base, comps))
-
-    def run_plan(plan, state_d, active_i32):
-        levels = _plan_levels(plan)
-        bests, out = [], {}
-        for l, (cidx, op) in enumerate(levels):
-            lv = [levels[i][0] for i in range(l + 1)]
-            red = _er.ell_level_reduce(
-                ell, op,
-                p_fns=[comps_by_idx[c].p_fn for c in lv],
-                states=[state_d[c] for c in lv],
-                idents=[comps_by_idx[c].ident for c in lv],
-                active=active_i32, outdeg=out_deg_pad,
-                bests=bests, block_v=block_v, block_e=block_e,
-                interpret=interpret)
-            out[cidx] = red
-            bests.append(red)
-        return out
-
-    def has_pred_of(plan, state_d, active_i32):
-        levels = _plan_levels(plan)
-        out = {}
-        for l, (cidx, _) in enumerate(levels):
-            lv = [levels[i][0] for i in range(l + 1)]
-            hp = _er.ell_level_reduce(
-                ell, "max",
-                p_fns=[comps_by_idx[c].p_fn for c in lv],
-                states=[state_d[c] for c in lv],
-                idents=[comps_by_idx[c].ident for c in lv],
-                active=active_i32, outdeg=out_deg_pad,
-                bests=[], mode="nonbot", block_v=block_v, block_e=block_e,
-                interpret=interpret)
-            out[cidx] = hp.astype(bool)
-        return out
-
-    ones_active = jnp.ones(n_pad, jnp.int32)
-
-    def body(carry):
-        state, active, k, work = carry
-        state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
-        if idempotent:
-            active_i32 = active.astype(jnp.int32)
-            work = work + jnp.sum(out_deg_real * active.astype(jnp.float32))
-            red = {}
-            for p in plans:
-                red.update(run_plan(p, state_d, active_i32))
-            new_d = {}
-            for p in plans:
-                new_d.update(iterate.plan_merge(p, state_d, red, comps_by_idx))
-        else:
-            work = work + jnp.float32(g.num_edges)
-            red = {}
-            for p in plans:
-                red.update(run_plan(p, state_d, ones_active))
-            red = iterate._apply_epilogue(comps, red)
-            has_pred = {}
-            for p in plans:
-                for cidx, _ in _plan_levels(p):
-                    has_pred.update(has_pred_of(Prim("max", cidx), state_d,
-                                                ones_active))
-            new_d = iterate._recompute_merge(plans, comps_by_idx, state_d,
-                                             red, has_pred)
-        new = tuple(new_d[cr.idx] for cr in comps)
-        ch = iterate._changed(comps, new, state, tol)
-        return new, ch, k + 1, work
-
-    def cond(carry):
-        _, active, k, _ = carry
-        return jnp.any(active) & (k < max_iter)
-
-    state0 = init_state()
-    state, active, k, work = jax.lax.while_loop(
-        cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
-                     jnp.float32(0)))
+    ell = blocked_ell_cached(g, block_v=block_v, block_e=block_e)
+    key = (n, tuple(tuple(_plan_levels(p)) for p in plans), _comps_key(comps),
+           max_iter, tol, block_v, block_e, interpret)
+    run = _EXEC_CACHE.get(key)
+    if run is None:
+        while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:     # evict oldest entry
+            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+        run = _build_pallas_executor(comps, plans, n, max_iter, tol,
+                                     block_v, block_e, interpret)
+        _EXEC_CACHE[key] = run
+    state, k, work = run(ell.srcs, ell.weight, ell.capacity, ell.mask,
+                         ell.tile_nnz, g.out_deg)
     return iterate.IterationResult(
-        state=tuple(s[:n] for s in state), iterations=int(k),
-        edge_work=float(work))
+        state=tuple(s[:n] for s in state),
+        iterations=iterate._host(k, int),
+        edge_work=iterate._host(work, float))

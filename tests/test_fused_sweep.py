@@ -1,0 +1,231 @@
+"""The fused single-launch Pallas sweep (DESIGN.md §2).
+
+Covers the acceptance contract of the fused execution layer:
+
+* multi-level lexicographic plans (WSP/DRR-style) on the pallas engine are
+  bit-compatible with the pull engine and the dense oracle engine,
+* one engine iteration of ANY fused plan issues ≤ 2 ``pallas_call``
+  launches — exactly 1 for Prim-only plans, the pull− has-pred probe
+  included (launch-counted at trace time via ``SWEEP_STATS``),
+* frontier-skipped tiles (no active source) return identities bit-for-bit,
+* cross-tile lexicographic resolution on graphs whose padded width spans
+  several slot tiles,
+* the compiled-executor cache reuses traced fixpoints across repeats.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine, fusion
+from repro.core import usecases as U
+from repro.graph import segment
+from repro.graph.structure import (blocked_ell_cached, from_edges, rmat_graph,
+                                   to_blocked_ell, uniform_graph)
+from repro.kernels import edge_reduce as er
+
+MULTI_LEVEL = ["WSP", "NSP", "Trust", "DRR", "RDS"]
+PRIM_ONLY = ["SSSP", "BFS", "WP", "REACH"]
+
+
+def _run(g, name, eng):
+    prog = fusion.fuse(U.ALL_SPECS[name]())
+    return engine.run_program(g, prog, engine=eng)
+
+
+def _cold():
+    engine.clear_program_caches()
+    er.reset_sweep_stats()
+
+
+# ---------------------------------------------------------------------------
+# multi-level lex plans: pallas ≡ pull ≡ dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MULTI_LEVEL)
+def test_fused_lex_matches_pull_and_dense(name, small_graphs):
+    g = small_graphs["rmat"]
+    a = _run(g, name, "pull").value
+    b = _run(g, name, "pallas").value
+    c = _run(g, name, "dense").value
+    np.testing.assert_allclose(np.asarray(a, np.float64),
+                               np.asarray(b, np.float64), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c, np.float64),
+                               np.asarray(b, np.float64), atol=1e-4)
+
+
+def test_fused_lex_cross_tile_resolution():
+    """Hub graph: one vertex with 300 predecessors ⇒ width spans 3 slot
+    tiles, so lexicographic ties must resolve across tile boundaries."""
+    rng = np.random.default_rng(7)
+    src = np.concatenate([np.arange(1, 301), np.ones(150, np.int64), [0]])
+    dst = np.concatenate([np.zeros(300, np.int64), np.arange(2, 152), [301]])
+    w = rng.integers(1, 9, size=src.shape[0]).astype(np.float32)
+    c = rng.integers(1, 9, size=src.shape[0]).astype(np.float32)
+    g = from_edges(302, src, dst, w, c)
+    assert to_blocked_ell(g).width > 128
+    for name in ("SSSP", "WSP", "NSP", "Trust"):
+        a = _run(g, name, "pull").value
+        b = _run(g, name, "pallas").value
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# launch counting: ≤ 2 per iteration, exactly 1 for Prim-only plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", PRIM_ONLY)
+def test_prim_only_plans_single_launch(name, small_graphs):
+    """BFS/SSSP/WP/REACH: exactly ONE pallas_call per engine iteration.
+
+    The while_loop body traces once, so trace-time launch counts ARE the
+    per-iteration launch counts."""
+    _cold()
+    res = _run(small_graphs["rmat"], name, "pallas")
+    assert res.stats.rounds == 1
+    assert er.SWEEP_STATS["launches"] == 1
+
+
+@pytest.mark.parametrize("name", MULTI_LEVEL)
+def test_fused_plans_at_most_two_launches_per_round(name, small_graphs):
+    """Any fused plan (multi-level lex, non-idempotent with has-pred probe,
+    multi-plan rounds like Trust's 4 reductions) costs ≤ 2 launches per
+    iteration — the fused sweep actually achieves 1 per round."""
+    _cold()
+    res = _run(small_graphs["rmat"], name, "pallas")
+    assert er.SWEEP_STATS["launches"] <= 2 * res.stats.rounds
+    assert er.SWEEP_STATS["launches"] == res.stats.rounds
+
+
+def test_haspred_probe_is_fused(small_graphs):
+    """NSP's secondary is a non-idempotent sum ⇒ pull− model with the
+    has-pred probe — still one launch per iteration."""
+    _cold()
+    _run(small_graphs["rmat"], "NSP", "pallas")
+    assert er.SWEEP_STATS["launches"] == 1
+
+
+def test_pagerank_direct_pallas_single_launch(small_graphs):
+    """PageRank (non-idempotent sum + epilogue, Fig. 4b direct kernels):
+    pull− recompute with the fused has-pred probe — one launch, matching
+    the pull engine."""
+    from repro.core.synthesis import pagerank_kernels
+    g = small_graphs["rmat"]
+    dk = pagerank_kernels(g.n)
+    a = engine.run_direct(g, dk, engine="pull").value
+    _cold()
+    b = engine.run_direct(g, dk, engine="pallas").value
+    assert er.SWEEP_STATS["launches"] == 1
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_all_specs_match_pull(small_graphs):
+    """The full use-case suite: pallas ≡ pull bit-for-bit through norm_inf."""
+    from conftest import norm_inf
+    from repro.graph.structure import undirected
+    for name in U.ALL_SPECS:
+        g = small_graphs["uniform"]
+        g = undirected(g) if name == "CC" else g
+        a = _run(g, name, "pull").value
+        b = _run(g, name, "pallas").value
+        np.testing.assert_allclose(norm_inf(a), norm_inf(b), atol=1e-4,
+                                   err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# frontier-aware tile skipping
+# ---------------------------------------------------------------------------
+
+def test_frontier_skipped_tiles_return_identities():
+    """Tiles with zero active sources must emit the reduction identities
+    bit-for-bit (the pl.when short-circuit path)."""
+    g = uniform_graph(48, 300, seed=2)
+    ell = to_blocked_ell(g)
+    rng = np.random.default_rng(2)
+    state = jnp.asarray(rng.uniform(1, 9, ell.n_pad).astype(np.float32))
+    ident = float(segment.identity("min", jnp.float32))
+    outdeg = jnp.ones(ell.n_pad, jnp.float32)
+
+    # no active sources at all: every tile must short-circuit
+    active = jnp.zeros(ell.n_pad, jnp.int32)
+    tile_act = er.tile_activity(ell.srcs, ell.mask, ell.tile_nnz, active,
+                                ell.block_v, ell.block_e)
+    assert not np.asarray(tile_act).any()
+    red, _, cands = er.fused_ell_sweep(
+        ell.srcs, ell.weight, ell.capacity, ell.mask, tile_act,
+        {0: state}, active, outdeg, plans=(((0, "min"),),), idents={0: ident},
+        p_fns={0: lambda env: env["n"] + env["w"]}, nv=g.n,
+        return_candidates=True)
+    assert np.all(np.asarray(cands[0]) == np.float32(ident))
+    assert np.all(np.asarray(red[0]) == np.float32(ident))
+
+
+def test_frontier_partial_skip_matches_full_sweep():
+    """A sparse frontier must give the same reduction as running every tile
+    (identity contributions are absorbed by the monoid)."""
+    g = uniform_graph(64, 400, seed=5)
+    ell = to_blocked_ell(g)
+    rng = np.random.default_rng(5)
+    state = jnp.asarray(rng.uniform(1, 9, ell.n_pad).astype(np.float32))
+    ident = float(segment.identity("min", jnp.float32))
+    outdeg = jnp.ones(ell.n_pad, jnp.float32)
+    active = jnp.asarray((rng.random(ell.n_pad) < 0.1).astype(np.int32))
+    kw = dict(plans=(((0, "min"),),), idents={0: ident},
+              p_fns={0: lambda env: env["n"] + env["w"]}, nv=g.n)
+    tile_act = er.tile_activity(ell.srcs, ell.mask, ell.tile_nnz, active,
+                                ell.block_v, ell.block_e)
+    red_skip, _ = er.fused_ell_sweep(ell.srcs, ell.weight, ell.capacity,
+                                     ell.mask, tile_act, {0: state}, active,
+                                     outdeg, **kw)
+    all_tiles = jnp.ones_like(ell.tile_nnz, jnp.int32)
+    red_full, _ = er.fused_ell_sweep(ell.srcs, ell.weight, ell.capacity,
+                                     ell.mask, all_tiles, {0: state}, active,
+                                     outdeg, **kw)
+    np.testing.assert_array_equal(np.asarray(red_skip[0]),
+                                  np.asarray(red_full[0]))
+
+
+def test_tile_nnz_marks_padding_tiles():
+    g = rmat_graph(64, 256, seed=3)          # power-law: padded tail tiles
+    ell = to_blocked_ell(g)
+    nnz = np.asarray(ell.tile_nnz)
+    mask = np.asarray(ell.mask)
+    n_i, n_j = nnz.shape
+    want = mask.reshape(n_i, ell.block_v, n_j, ell.block_e).sum(axis=(1, 3))
+    np.testing.assert_array_equal(nnz, want)
+
+
+# ---------------------------------------------------------------------------
+# compiled-program cache
+# ---------------------------------------------------------------------------
+
+def test_executor_cache_reused_across_repeats(small_graphs):
+    from repro.kernels import ops as kops
+    _cold()
+    g = small_graphs["rmat"]
+    r1 = _run(g, "WSP", "pallas")
+    n_exec = kops.executor_cache_size()
+    launches = er.SWEEP_STATS["launches"]
+    assert n_exec >= 1
+    r2 = _run(g, "WSP", "pallas")            # repeat: no new trace
+    assert kops.executor_cache_size() == n_exec
+    assert er.SWEEP_STATS["launches"] == launches
+    np.testing.assert_array_equal(np.asarray(r1.value), np.asarray(r2.value))
+
+
+def test_ell_cache_keyed_on_graph_identity(small_graphs):
+    g1 = small_graphs["rmat"]
+    g2 = small_graphs["uniform"]
+    assert blocked_ell_cached(g1) is blocked_ell_cached(g1)
+    assert blocked_ell_cached(g1) is not blocked_ell_cached(g2)
+
+
+def test_cache_stats_and_clear(small_graphs):
+    _cold()
+    assert engine.program_cache_stats()["pallas_executors"] == 0
+    _run(small_graphs["rmat"], "SSSP", "pallas")
+    stats = engine.program_cache_stats()
+    assert stats["pallas_executors"] >= 1 and stats["synth_rounds"] >= 1
+    engine.clear_program_caches()
+    assert engine.program_cache_stats()["pallas_executors"] == 0

@@ -4,6 +4,8 @@ oracle on randomly generated spec trees — the paper's core guarantee as a
 property-based test."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import engine, fusion

@@ -11,8 +11,10 @@ from repro.graph.structure import undirected, uniform_graph
 
 from conftest import norm_inf
 
-USECASES = ["SSSP", "CC", "BFS", "WP", "WSP", "NSP", "NWR", "Trust",
-            "RADIUS", "DRR", "DS", "RDS"]
+# CC runs on the symmetrized graph, where the path-enumeration oracle
+# dominates wall time (~25 s per engine) — slow-marked for the CI fast lane.
+USECASES = ["SSSP", pytest.param("CC", marks=pytest.mark.slow), "BFS", "WP",
+            "WSP", "NSP", "NWR", "Trust", "RADIUS", "DRR", "DS", "RDS"]
 ENGINES = ["pull", "push", "dense", "pallas"]
 
 

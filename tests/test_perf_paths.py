@@ -15,6 +15,7 @@ from repro.models.layers import moe_ffn
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_moe_grouped_dispatch_equals_flat():
     """A3: grouped-local dispatch ≡ flat dispatch (same caps ⇒ same drops)."""
     for arch in ("deepseek-v3-671b", "llama4-maverick-400b-a17b"):
@@ -64,6 +65,7 @@ def test_absorbed_mla_equals_expanded_decode():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_microbatched_train_step_equals_flat():
     """Gradient accumulation over strided microbatches ≡ one big batch
     (loss linearity; bf16-grad roundoff tolerance)."""

@@ -2,7 +2,20 @@
 hypothesis property tests of the verified conditions."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                     # deterministic tests still run
+    _HAVE_HYPOTHESIS = False
+
+    class _St:                          # placeholder strategies; the skip
+        def __getattr__(self, name):    # below fires before they are drawn
+            return lambda *a, **k: None
+
+    st = _St()
+    given = lambda *a, **k: pytest.mark.skip(reason="needs hypothesis")
+    settings = lambda *a, **k: (lambda f: f)
 
 from repro.core import conditions as C
 from repro.core import lang as L

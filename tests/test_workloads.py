@@ -114,7 +114,9 @@ def test_smoke_dryrun_cells_compile():
                             out_shardings=wl.out_shardings,
                             donate_argnums=wl.donate).lower(
                                 *wl.abstract_args).compile()
-            done[f"{arch}:{shape}"] = c.cost_analysis().get("flops", 0) > 0
+            ca = c.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            done[f"{arch}:{shape}"] = ca.get("flops", 0) > 0
         print(json.dumps(done))
     """
     env = dict(os.environ)
