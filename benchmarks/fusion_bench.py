@@ -1,19 +1,27 @@
 """Paper Fig. 13 (WSP/NWR/RADIUS) + Fig. 14/Table 3 (DRR/Trust/RDS):
 fused vs unfused edge-work ratio and wall time, weighted and unweighted
-graphs — now including the pallas engine with kernel-launch counting.
+graphs — including the direction-optimized pallas engine with kernel-launch
+counting and push/pull direction accounting.
 
-Theoretical bounds reproduced: simple pair fusions bound at 50% (two
-passes → one), 4-reduction fusions at 25%, RDS at 50% (4 rounds → 2).
+For the pallas engine extra columns track the execution layer (DESIGN.md
+§2/§7): ``launches`` is the number of ``pallas_call``s appearing in the
+traced program per engine iteration (a direction-optimized round traces one
+pull and one push sweep; exactly one executes per iteration), ``push/pull``
+the runtime per-direction iteration counts, and ``seed_sweeps`` the
+per-iteration sweep count of the pre-fusion execution model (one launch per
+lex level per plan, plus one has-pred probe per component on pull− rounds).
 
-For the pallas engine two extra columns track the execution layer
-(DESIGN.md §2/§7): ``launches`` is the measured number of ``pallas_call``
-launches per engine iteration (trace-time count over all rounds) and
-``seed_sweeps`` the per-iteration sweep count of the pre-fusion execution
-model (one launch per lex level per plan, plus one has-pred probe per
-component on pull− rounds) — the quantity the single-pass fused sweep
-collapses to one launch per round.  ``--engines pallas`` additionally
-writes machine-readable ``BENCH_pallas.json`` next to the repo root so
-the perf trajectory is tracked across PRs.
+``--engines pallas`` additionally benchmarks the direction switch itself on
+the frontier workloads (BFS/SSSP): total edge work and sweep executions of
+the adaptive engine vs the pull-only engine — the quantity the
+direction-optimized engine must keep ≤ pull — and writes machine-readable
+``BENCH_pallas.json`` so the perf trajectory is tracked across PRs.
+
+``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
+fresh run, which is never written over it) and fails (exit 1) if the fresh
+run regresses on traced launches, the fused/unfused edge-work ratio, or
+the push-vs-pull work advantage — the one comparison path shared by the CI
+bench-smoke gate and local runs.
 """
 from __future__ import annotations
 
@@ -38,14 +46,21 @@ from repro.kernels.ops import _plan_levels
 
 SIMPLE = ["WSP", "NWR", "RADIUS"]
 MULTI = ["DRR", "Trust", "RDS"]
+DIRECTION = ["BFS", "SSSP"]             # sparse-frontier direction workloads
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_pallas.json")
 
+# tolerance for ratio comparisons against the baseline: iteration counts and
+# edge work are deterministic on the seeded graphs, but leave headroom for
+# jax-version differences in while_loop/cond accounting
+_BASELINE_RTOL = 0.05
+
 
 def seed_sweeps_per_iter(prog) -> int:
     """Per-iteration edge-sweep count of the one-launch-per-level execution
-    model this PR replaced (summed over the program's iteration rounds)."""
+    model the fused sweep replaced (summed over the program's iteration
+    rounds)."""
     total = 0
     for _name, round_ in prog.rounds:
         if not round_.leaves:
@@ -60,20 +75,47 @@ def seed_sweeps_per_iter(prog) -> int:
     return total
 
 
-def measured_launches(g, prog):
-    """Cold-build the pallas executors and count pallas_call launches per
-    iteration (the while_loop body traces each sweep exactly once)."""
+def pallas_run_stats(g, prog, model=None):
+    """Cold-build the pallas executors, run once, and return (result, sweep
+    stats): trace-time launch counts plus runtime direction counts."""
     from repro.kernels import edge_reduce as er
     engine.clear_program_caches()
     er.reset_sweep_stats()
-    engine.run_program(g, prog, engine="pallas")
-    return er.SWEEP_STATS["launches"]
+    res = engine.run_program(g, prog, engine="pallas", model=model)
+    return res, dict(er.SWEEP_STATS)
+
+
+def bench_direction(g, gname: str, weighted: bool, name: str) -> dict:
+    """Adaptive (direction-optimized) vs pull-only pallas on one frontier
+    workload: the acceptance quantity is edge work and sweep executions of
+    adaptive ≤ pull-only (DESIGN.md §2/§7)."""
+    prog = fusion.fuse(U.ALL_SPECS[name]())
+    res_auto, s_auto = pallas_run_stats(g, prog, model=None)
+    res_pull, s_pull = pallas_run_stats(g, prog, model="pull")
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "iterations": res_auto.stats.iterations,
+        "edge_work_auto": float(res_auto.stats.edge_work),
+        "edge_work_pull": float(res_pull.stats.edge_work),
+        "sweeps_auto": s_auto["pull_iters"] + s_auto["push_iters"],
+        "sweeps_pull": s_pull["pull_iters"] + s_pull["push_iters"],
+        "push_iters": s_auto["push_iters"],
+        "pull_iters": s_auto["pull_iters"],
+        "launches_traced_auto": s_auto["launches"],
+        "launches_traced_pull": s_pull["launches"],
+    }
 
 
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
-        engines=("pull", "push"), json_out: bool = True):
+        engines=("pull", "push"), json_out=None, direction_usecases=None):
     rows = []
     json_rows = []
+    direction_rows = []
+    if direction_usecases and "pallas" not in engines:
+        raise ValueError("direction_usecases bench the pallas engine's "
+                         "push/pull switch; add 'pallas' to engines")
+    if direction_usecases is None:
+        direction_usecases = DIRECTION if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -84,7 +126,8 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                     uprog = fusion.lower_unfused(spec)
                     launches = ""
                     if eng == "pallas":
-                        launches = measured_launches(g, fprog)
+                        _res, sweep = pallas_run_stats(g, fprog)
+                        launches = sweep["launches"]
                     t_f, rf = timed(lambda: engine.run_program(
                         g, fprog, engine=eng), repeats=3)
                     t_u, ru = timed(lambda: engine.run_program(
@@ -106,19 +149,108 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                             "t_unfused_ms": t_u * 1e3,
                             "rounds_fused": rf.stats.rounds,
                             "iterations_fused": rf.stats.iterations,
-                            "launches_per_iter": launches,
+                            # pallas_calls in the traced program, summed
+                            # over the program's rounds (≤ 2 per round:
+                            # one per lax.cond direction branch)
+                            "launches_traced": launches,
+                            "push_iters": sweep["push_iters"],
+                            "pull_iters": sweep["pull_iters"],
                             "seed_sweeps_per_iter":
                                 seed_sweeps_per_iter(fprog)})
+            if "pallas" in engines:
+                for name in direction_usecases:
+                    direction_rows.append(
+                        bench_direction(g, gname, weighted, name))
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
     out = emit(rows, header)
-    if json_rows and json_out:
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"bench": "fusion_bench", "engine": "pallas",
-                       "rows": json_rows}, f, indent=1)
-        print(f"wrote {_JSON_PATH}")
-    return out
+    if direction_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["iterations"], round(r["edge_work_auto"], 1),
+               round(r["edge_work_pull"], 1), r["push_iters"],
+               r["pull_iters"], r["sweeps_auto"], r["sweeps_pull"]]
+              for r in direction_rows],
+             ["graph", "weights", "usecase", "iters", "work_auto",
+              "work_pull", "push_iters", "pull_iters", "sweeps_auto",
+              "sweeps_pull"])
+    doc = {"bench": "fusion_bench", "engine": "pallas",
+           "rows": json_rows, "direction_rows": direction_rows,
+           "table": out}
+    if json_rows or direction_rows:
+        path = json_out or _JSON_PATH
+        with open(path, "w") as f:
+            json.dump({k: v for k, v in doc.items() if k != "table"},
+                      f, indent=1)
+        print(f"wrote {path}")
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# Baseline regression gate (shared by CI bench-smoke and local runs).
+# ---------------------------------------------------------------------------
+
+def _row_key(r):
+    return (r["graph"], r["weighted"], r["usecase"])
+
+
+def compare_baseline(current: dict, baseline: dict,
+                     rtol: float = _BASELINE_RTOL) -> list:
+    """Regressions of ``current`` against ``baseline``; empty list = pass.
+
+    Gated quantities are the deterministic execution-layer metrics —
+    launches per iteration, fused/unfused edge-work ratio, and the
+    direction engine's work advantage — never wall time (machine noise).
+    Comparison is over the intersection of rows: a smoke run may bench a
+    subset of the baseline's usecases (the workflow controls coverage)."""
+    errors = []
+    cur_rows = {_row_key(r): r for r in current.get("rows", [])}
+    base_rows = {_row_key(r): r for r in baseline.get("rows", [])}
+    for key, b in base_rows.items():
+        r = cur_rows.get(key)
+        if r is None:
+            continue
+        # strict on purpose: a +1 here is exactly the "extra kernel launch
+        # snuck in" regression this gate exists for.  Trace-time counts are
+        # jax-version-sensitive in principle; if a jax upgrade changes how
+        # often bodies trace, regenerate the baseline deliberately.
+        if r["launches_traced"] > b["launches_traced"]:
+            errors.append(
+                f"{key}: traced launches {r['launches_traced']} > baseline "
+                f"{b['launches_traced']}")
+        if r["edge_work_ratio"] > b["edge_work_ratio"] * (1 + rtol):
+            errors.append(
+                f"{key}: edge_work_ratio {r['edge_work_ratio']:.4f} > "
+                f"baseline {b['edge_work_ratio']:.4f} (+{rtol:.0%})")
+    base_dir = {_row_key(r): r for r in baseline.get("direction_rows", [])}
+    for r in current.get("direction_rows", []):
+        key = _row_key(r)
+        # The acceptance property on the committed direction workloads:
+        # adaptive must not do more (tile-counted) work or more sweep
+        # executions than pull-only.  NOT a theorem of the heuristic —
+        # tile granularity can overcount a push block whose sparse
+        # frontier is co-blocked with hubs — so the work check carries
+        # the shared tolerance; treat a trip on a new workload as "tune
+        # the threshold or drop the workload", not as noise.
+        if r["edge_work_auto"] > r["edge_work_pull"] * (1 + rtol):
+            errors.append(
+                f"{key}: adaptive work {r['edge_work_auto']:.0f} > pull-only "
+                f"{r['edge_work_pull']:.0f} (+{rtol:.0%})")
+        if r["sweeps_auto"] > r["sweeps_pull"]:
+            errors.append(
+                f"{key}: adaptive sweeps {r['sweeps_auto']} > pull-only "
+                f"{r['sweeps_pull']}")
+        b = base_dir.get(key)
+        if b is None:
+            continue
+        if b["edge_work_pull"] and r["edge_work_pull"]:
+            adv_now = r["edge_work_auto"] / r["edge_work_pull"]
+            adv_base = b["edge_work_auto"] / b["edge_work_pull"]
+            if adv_now > adv_base * (1 + rtol):
+                errors.append(
+                    f"{key}: push/pull work advantage regressed "
+                    f"{adv_now:.3f} > baseline {adv_base:.3f} (+{rtol:.0%})")
+    return errors
 
 
 if __name__ == "__main__":
@@ -130,9 +262,42 @@ if __name__ == "__main__":
                          "to RM-S, or RM-XS when pallas is benchmarked "
                          "(interpret-mode grids step in Python on CPU)")
     ap.add_argument("--usecases", default=",".join(SIMPLE + MULTI))
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="where to write the machine-readable results "
+                         f"(default {_JSON_PATH})")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed BENCH_pallas.json to diff against; "
+                         "regressions exit 1 (the CI perf gate)")
     args = ap.parse_args()
     engines = tuple(args.engines.split(","))
     graphs = args.graphs or ("RM-XS" if "pallas" in engines else "RM-S")
-    run(graph_names=tuple(graphs.split(",")),
-        usecases=tuple(args.usecases.split(",")),
-        engines=engines)
+    baseline = None
+    json_out = args.json_out
+    if args.baseline:
+        # read the baseline BEFORE running, and never write the fresh run
+        # over it: `--baseline BENCH_pallas.json` without --json-out must
+        # compare fresh-vs-committed, not fresh-vs-itself
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        if json_out is None and os.path.realpath(args.baseline) == \
+                os.path.realpath(_JSON_PATH):
+            json_out = _JSON_PATH.replace(".json", ".fresh.json")
+            print(f"baseline is the default output path; writing fresh "
+                  f"results to {json_out}")
+    result = run(graph_names=tuple(graphs.split(",")),
+                 usecases=tuple(u for u in args.usecases.split(",") if u),
+                 engines=engines, json_out=json_out)
+    if baseline is not None:
+        if not (result["rows"] or result["direction_rows"]):
+            print("--baseline requires the pallas engine in --engines "
+                  "(no gated rows were produced)")
+            sys.exit(2)
+        errors = compare_baseline(result, baseline)
+        if errors:
+            print("PERF REGRESSION vs baseline:")
+            for e in errors:
+                print("  -", e)
+            sys.exit(1)
+        print(f"baseline check OK ({args.baseline}: "
+              f"{len(baseline.get('rows', []))} rows, "
+              f"{len(baseline.get('direction_rows', []))} direction rows)")

@@ -4,8 +4,11 @@ Runs a ``FusedProgram`` (from fusion.fuse or fusion.lower_unfused) on a
 graph under one of the five engines:
 
   pull | push   sparse frontier engines (iterate.iterate_graph)
+  adaptive      Gemini-style per-iteration push/pull switch (segment ops)
   dense         dense edge-matrix reference engine
-  pallas        blocked-ELL TPU kernel engine (repro.kernels)
+  pallas        direction-optimized blocked-ELL TPU kernel engine
+                (repro.kernels; ``model`` forces "pull"/"push", default
+                picks per iteration by frontier density)
   distributed   shard_map vertex-cut engine (needs a mesh)
 
 The three primitives map exactly as §5 prescribes: the fused ilet runs as an
@@ -74,6 +77,18 @@ class ExecResult:
     stats: ExecStats
 
 
+def _pallas_direction(model) -> str:
+    """Map run_program's ``model`` to the pallas engine's sweep direction:
+    None/"auto" → per-iteration heuristic, "pull"/"pull+"/"pull−" → pull
+    sweeps only, "push"/… → push sweeps only."""
+    if model in (None, "auto"):
+        return "auto"
+    base = str(model).rstrip("+-")
+    if base in ("pull", "push"):
+        return base
+    raise ValueError(f"pallas engine: unknown model {model!r}")
+
+
 def _valid_mask(x):
     xf = x.astype(jnp.float32)
     return jnp.isfinite(xf) & (jnp.abs(xf) < _BOT_CUTOFF)
@@ -111,7 +126,8 @@ def _run_iteration(g, round_: FusedRound, engine: str, model: str,
                                           max_iter=max_iter, tol=tol)
     elif engine == "pallas":
         from repro.kernels import ops as kops
-        res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol)
+        res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol,
+                                  direction=_pallas_direction(model))
     else:
         raise ValueError(f"unknown engine {engine}")
     return res, comps
@@ -160,7 +176,8 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
 # ---------------------------------------------------------------------------
 
 def run_direct(g, dk: DirectKernels, engine: str = "pull",
-               mesh=None, axes=("data",)) -> ExecResult:
+               mesh=None, axes=("data",),
+               model: Optional[str] = None) -> ExecResult:
     from repro.core.fusion import Component, FusedRound, Leaf, Prim
     from repro.core.lang import PATH_FNS, WEIGHT
 
@@ -187,7 +204,8 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
     elif engine == "pallas":
         from repro.kernels import ops as kops
         res = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
-                                  tol=dk.tol)
+                                  tol=dk.tol,
+                                  direction=_pallas_direction(model))
     else:
         raise ValueError(engine)
     stats = ExecStats(rounds=1, iterations=res.iterations, edge_work=res.edge_work)

@@ -76,46 +76,74 @@ def from_edges(n: int, src, dst, weight=None, capacity=None) -> Graph:
 
 @dataclasses.dataclass(frozen=True)
 class BlockedELL:
-    """Degree-padded predecessor lists.
+    """Degree-padded neighbour lists in one direction.
 
-    ``srcs[v, k]`` is the k-th predecessor of vertex v (or 0 where padded),
-    ``mask[v, k]`` marks real slots.  ``n_pad`` and ``width`` are multiples of
-    the requested tile sizes so a Pallas grid covers the arrays exactly.
+    With ``direction="in"`` (the pull layout) row v holds the predecessors of
+    v: ``nbrs[v, k]`` is the k-th *source* of an in-edge of v.  With
+    ``direction="out"`` (the push layout) row v holds the successors:
+    ``nbrs[v, k]`` is the k-th *destination* of an out-edge of v.  ``mask[v,
+    k]`` marks real slots.  ``n_pad`` and ``width`` are multiples of the
+    requested tile sizes so a Pallas grid covers the arrays exactly.
 
     ``tile_nnz[i, j]`` counts the real slots inside grid tile (i, j) for the
     layout's own (block_v, block_e); power-law degree distributions leave most
-    tail column-tiles fully padded, and the fused sweep skips those tiles
-    before gathering anything (DESIGN.md §2).
+    tail column-tiles fully padded, and the fused sweeps skip those tiles
+    before doing any work (DESIGN.md §2).
     """
     n: int                  # logical vertex count
     n_pad: int
-    width: int              # padded max in-degree
+    width: int              # padded max degree (in- or out-, per direction)
     block_v: int            # tile sizes the layout was built for
     block_e: int
-    srcs: jnp.ndarray       # [n_pad, width] int32
+    nbrs: jnp.ndarray       # [n_pad, width] int32 neighbour vertex ids
     weight: jnp.ndarray     # [n_pad, width] float32
     capacity: jnp.ndarray   # [n_pad, width] float32
     mask: jnp.ndarray       # [n_pad, width] bool
     tile_nnz: jnp.ndarray   # [n_pad/block_v, width/block_e] int32
+    direction: str = "in"   # "in" (rows = dst, pull) | "out" (rows = src, push)
+
+    @property
+    def srcs(self) -> jnp.ndarray:
+        """Pull-layout alias: with ``direction="in"`` the neighbour ids ARE
+        the edge sources (kept for the original pull-sweep call sites).
+        Guarded so an out-layout can never leak destination ids under the
+        name ``srcs`` into gather-side code."""
+        if self.direction != "in":
+            raise AttributeError(
+                "BlockedELL.srcs is only meaningful on the pull layout "
+                f"(direction='in'); this layout is direction={self.direction!r}"
+                " — use .nbrs")
+        return self.nbrs
 
 
-def to_blocked_ell(g: Graph, block_v: int = 8, block_e: int = 128) -> BlockedELL:
+def to_blocked_ell(g: Graph, block_v: int = 8, block_e: int = 128,
+                   direction: str = "in") -> BlockedELL:
+    """Build the blocked-ELL layout keyed by dst (``direction="in"``, the
+    pull sweep's predecessor lists) or by src (``direction="out"``, the push
+    sweep's successor lists).  Both directions carry the same per-edge
+    weight/capacity so the synthesized P functions see identical edges."""
     src, dst, w, c = g.host_edges()
     n = g.n
-    deg = np.bincount(dst, minlength=n)
+    if direction == "in":
+        row_of, nbr_of = dst, src
+    elif direction == "out":
+        row_of, nbr_of = src, dst
+    else:
+        raise ValueError(f"direction must be 'in' or 'out', got {direction!r}")
+    deg = np.bincount(row_of, minlength=n)
     width = int(max(1, deg.max() if deg.size else 1))
     width = ((width + block_e - 1) // block_e) * block_e
     n_pad = ((n + block_v - 1) // block_v) * block_v
-    srcs = np.zeros((n_pad, width), dtype=np.int32)
+    nbrs = np.zeros((n_pad, width), dtype=np.int32)
     ws = np.zeros((n_pad, width), dtype=np.float32)
     cs = np.zeros((n_pad, width), dtype=np.float32)
     mask = np.zeros((n_pad, width), dtype=bool)
     slot = np.zeros(n, dtype=np.int64)
-    # dst-sorted edges fill rows left to right
+    # edges fill their row left to right
     for i in range(src.shape[0]):
-        v = dst[i]
+        v = row_of[i]
         k = slot[v]
-        srcs[v, k] = src[i]
+        nbrs[v, k] = nbr_of[i]
         ws[v, k] = w[i]
         cs[v, k] = c[i]
         mask[v, k] = True
@@ -125,29 +153,32 @@ def to_blocked_ell(g: Graph, block_v: int = 8, block_e: int = 128) -> BlockedELL
         .sum(axis=(1, 3)).astype(np.int32)
     return BlockedELL(n=n, n_pad=n_pad, width=width,
                       block_v=block_v, block_e=block_e,
-                      srcs=jnp.asarray(srcs), weight=jnp.asarray(ws),
+                      nbrs=jnp.asarray(nbrs), weight=jnp.asarray(ws),
                       capacity=jnp.asarray(cs), mask=jnp.asarray(mask),
-                      tile_nnz=jnp.asarray(tile_nnz))
+                      tile_nnz=jnp.asarray(tile_nnz), direction=direction)
 
 
 _ELL_CACHE: dict = {}
 
 
-def blocked_ell_cached(g: Graph, block_v: int = 8,
-                       block_e: int = 128) -> BlockedELL:
+def blocked_ell_cached(g: Graph, block_v: int = 8, block_e: int = 128,
+                       direction: str = "in") -> BlockedELL:
     """Memoized ``to_blocked_ell``: the padded layout is immutable per graph,
     so repeated queries / rounds / benchmark repeats reuse one conversion.
+    The pull ("in") and push ("out") layouts of one graph are separate
+    entries, so a direction-optimized executor can hold both at once.
 
     Keyed on object identity; a weakref guards against id() reuse, and a
     finalizer drops the entry when the graph is garbage-collected so dead
     layouts never pin their padded arrays."""
-    key = (id(g), block_v, block_e)
+    key = (id(g), block_v, block_e, direction)
     hit = _ELL_CACHE.get(key)
     if hit is not None:
         ref, ell = hit
         if ref() is g:
             return ell
-    ell = to_blocked_ell(g, block_v=block_v, block_e=block_e)
+    ell = to_blocked_ell(g, block_v=block_v, block_e=block_e,
+                         direction=direction)
     _ELL_CACHE[key] = (weakref.ref(g), ell)
     weakref.finalize(g, _ELL_CACHE.pop, key, None)
     return ell

@@ -15,9 +15,9 @@ slots)`` tile in VMEM:
   4. accumulate across slot-tiles in the output block (the grid's minor
      axis walks the slot tiles, so ``out_ref`` accumulation is safe).
 
-Two sweep entry points:
+Three sweep entry points:
 
-``fused_ell_sweep`` — the single-pass engine sweep (DESIGN.md §2).  ONE
+``fused_ell_sweep`` — the single-pass PULL engine sweep (DESIGN.md §2).  ONE
 ``pallas_call`` evaluates every plan of the fused round: each tile gathers
 each component's state once, applies all propagation functions, performs the
 full lexicographic reduction chain on-chip, and emits per-tile candidate
@@ -28,9 +28,18 @@ launch.  Tiles whose ``tile_act`` bit is 0 (no real slots, or no frontier-
 active source) short-circuit via ``pl.when`` and contribute exactly the
 reduction identities.
 
-``ell_level_reduce`` — the original one-launch-per-lex-level sweep, kept as
-a reference path and for kernel-level tests; later levels recompute the
-earlier levels' propagated values and mask to tie slots.
+``fused_ell_push_sweep`` — the single-pass PUSH sweep (Defs. 3/4) over the
+out-edge (source-keyed successor) layout.  ONE ``pallas_call`` applies every
+propagation function across the frontier-active source tiles — state is read
+per ROW (no gather), and a sparse frontier skips whole row blocks, which is
+what makes BFS/SSSP iteration cost scale with the frontier instead of the
+graph — then the dst-keyed lexicographic reduction resolves as a scatter
+pass in plain jnp, feeding the same ``plan_merge`` contract as the pull
+sweep (bit-for-bit ⊥-as-identity, C6).
+
+``ell_level_reduce`` — the original one-launch-per-lex-level pull sweep,
+kept as a reference path and for kernel-level tests; later levels recompute
+the earlier levels' propagated values and mask to tie slots.
 
 Padding slots and frontier-inactive sources carry the reduction identity
 (condition C6 makes that sound).  Tiles default to (8, 128): the VPU lane
@@ -53,14 +62,46 @@ BLOCK_E = 128
 # boolean monoids run as int32 min/max inside the kernel
 _INT_OP = {"or": "max", "and": "min"}
 
-# trace-time kernel-launch counter: each pallas_call issued per engine
-# iteration increments "launches" exactly once (the while_loop body traces
-# once), so tests and benchmarks read sweeps-per-iteration directly.
-SWEEP_STATS = {"launches": 0}
+# Sweep statistics.  "launches"/"pull_launches"/"push_launches" are
+# trace-time counters: each pallas_call issued during tracing increments
+# them exactly once (the while_loop body traces once), so for a pull- or
+# push-only executor they ARE sweeps-per-iteration; a direction-optimized
+# executor traces BOTH branches of its lax.cond, so it counts one pull and
+# one push launch per round while executing exactly one per iteration.
+# "pull_iters"/"push_iters" are runtime counters, filled in by
+# ops.iterate_pallas from the while-loop carry after the fixpoint runs:
+# they record which direction each executed iteration actually took.
+SWEEP_STATS = {"launches": 0, "pull_launches": 0, "push_launches": 0,
+               "pull_iters": 0, "push_iters": 0}
 
 
 def reset_sweep_stats():
-    SWEEP_STATS["launches"] = 0
+    for k in SWEEP_STATS:
+        SWEEP_STATS[k] = 0
+
+
+def comps_in_plan_order(plans):
+    """Component ids in first-appearance order over the static plan specs
+    ((comp, op) lex levels, primary first).  Every layer that walks a fused
+    round — both sweeps and the executor's state tuple — derives its
+    component ordering from this one function so kernel argument order can
+    never desynchronize from the executor's state order."""
+    order = []
+    for spec in plans:
+        for c, _op in spec:
+            if c not in order:
+                order.append(c)
+    return order
+
+
+def _ident_scalars(comps_order, states, idents):
+    """Identities as Python scalars (Pallas kernels may not close over
+    traced constants), coerced to the component state dtype's kind."""
+    def scalar(c):
+        i = idents[c]
+        return int(i) if jnp.issubdtype(states[c].dtype, jnp.integer) \
+            else float(i)
+    return tuple(scalar(c) for c in comps_order)
 
 
 def _combine(op: str, a, b):
@@ -163,18 +204,9 @@ def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    comps_order = []
-    for spec in plans:
-        for c, _op in spec:
-            if c not in comps_order:
-                comps_order.append(c)
+    comps_order = comps_in_plan_order(plans)
     pos_of = {c: k for k, c in enumerate(comps_order)}
-
-    def _scalar(c):
-        i = idents[c]
-        return int(i) if jnp.issubdtype(states[c].dtype, jnp.integer) else float(i)
-
-    ident_scalars = tuple(_scalar(c) for c in comps_order)
+    ident_scalars = _ident_scalars(comps_order, states, idents)
     plan_specs = tuple(tuple((pos_of[c], _INT_OP.get(op, op)) for c, op in spec)
                        for spec in plans)
     hp_positions = tuple(range(len(comps_order))) if need_haspred else ()
@@ -212,6 +244,7 @@ def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
         idents=ident_scalars, nv=float(nv), block_v=block_v)
 
     SWEEP_STATS["launches"] += 1
+    SWEEP_STATS["pull_launches"] += 1
     outs = pl.pallas_call(
         kern, grid=grid, in_specs=specs, out_specs=out_specs,
         out_shape=out_shapes, interpret=interpret)(*args)
@@ -247,6 +280,170 @@ def tile_activity(srcs, mask, tile_nnz, active_i32, block_v: int, block_e: int):
     act = (active_i32[srcs] != 0) & mask
     any_act = act.reshape(n_i, block_v, n_j, block_e).any(axis=(1, 3))
     return ((tile_nnz > 0) & any_act).astype(jnp.int32)
+
+
+def tile_activity_push(tile_nnz, active_i32, block_v: int):
+    """Push-side activity bitmap over the out-edge (source-keyed) layout.
+
+    Rows ARE sources, so a tile is active iff its row block contains a
+    frontier-active vertex — no gather at all, just a block-any over the
+    frontier, and work scales with the number of active *source rows*
+    rather than "tiles that happen to contain an active source" (the pull
+    criterion, which a sparse frontier of hub predecessors still lights up
+    almost everywhere).  This asymmetry is why the push direction wins the
+    sparse tail of BFS/SSSP (DESIGN.md §2)."""
+    n_i, _n_j = tile_nnz.shape
+    row_act = (active_i32.reshape(n_i, block_v) != 0).any(axis=1)
+    return ((tile_nnz > 0) & row_act[:, None]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused push sweep: frontier-active source tiles → per-edge candidates →
+# dst-keyed lexicographic scatter resolution.
+# ---------------------------------------------------------------------------
+
+
+def _push_kernel(tile_act_ref, dsts_ref, w_ref, c_ref, mask_ref, active_ref,
+                 outdeg_ref, *rest, n_comps, p_fns, idents, nv, block_v):
+    """One (BLOCK_V sources × BLOCK_E successor slots) tile of the push sweep.
+
+    ``rest`` = the per-component state row blocks (``n_comps`` of them,
+    [block_v] slices — push reads its OWN row's state, no gather) followed by
+    one [block_v, block_e] per-edge candidate output per component.
+
+    The kernel's job is the propagation half of Defs. 3/4: apply every
+    synthesized P to the row's state across the row's out-edges, masking
+    frontier-inactive sources and padding slots to the reduction identity
+    (C6) so the dst-keyed scatter outside absorbs them as no-ops.  Inactive
+    tiles short-circuit via ``pl.when`` and emit identities bit-for-bit."""
+    i = pl.program_id(0)
+    state_refs = rest[:n_comps]
+    out_refs = rest[n_comps:]
+
+    for k in range(n_comps):
+        out_refs[k][...] = jnp.full(out_refs[k].shape, idents[k],
+                                    out_refs[k].dtype)
+
+    @pl.when(tile_act_ref[0, 0] != 0)
+    def _tile_body():
+        dsts = dsts_ref[...]
+        mask = mask_ref[...] & (active_ref[...][:, None] != 0)
+        rows = i * block_v + jax.lax.broadcasted_iota(jnp.int32, dsts.shape, 0)
+        env = {"w": w_ref[...], "c": c_ref[...], "esrc": rows, "edst": dsts,
+               "outdeg": jnp.broadcast_to(outdeg_ref[...][:, None],
+                                          dsts.shape),
+               "nv": jnp.float32(nv)}
+        for k in range(n_comps):
+            nvals = jnp.broadcast_to(state_refs[k][...][:, None], dsts.shape)
+            ident = jnp.asarray(idents[k], nvals.dtype)
+            p = jnp.asarray(p_fns[k]({"n": nvals, **env}), nvals.dtype)
+            p = jnp.where(nvals == ident, ident, p)        # C3: ⊥ stays ⊥
+            out_refs[k][...] = jnp.where(mask, p, ident).astype(
+                out_refs[k].dtype)
+
+
+def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
+                         active, outdeg, *, plans, idents, p_fns, nv,
+                         need_haspred: bool = False,
+                         block_v: int = BLOCK_V, block_e: int = BLOCK_E,
+                         interpret: Optional[bool] = None,
+                         return_candidates: bool = False):
+    """Single-launch fused PUSH edge sweep over every plan of a fused round.
+
+    dsts/weight/capacity/mask  [n_pad, width] out-edge blocked-ELL arrays
+                               (``to_blocked_ell(..., direction="out")``:
+                               rows are sources, slots hold destinations)
+    tile_act  [n_pad/block_v, width/block_e] int32 — 0 short-circuits a tile
+    states    {comp: [n_pad] value vector}
+    active    [n_pad] int32 frontier (1 = source eligible; push+ masks
+              inactive sources, push− passes all-ones)
+    plans     static: per plan a tuple of (comp, op) lex levels, primary first
+    idents    {comp: identity scalar};  p_fns {comp: propagation closure}
+
+    Contract (DESIGN.md §2): ONE ``pallas_call`` applies every synthesized P
+    over the frontier-active source tiles and emits per-edge *candidates*
+    (identity-filled where inactive, per C6).  The dst-keyed lexicographic
+    reduction then runs as a scatter pass in plain jnp — the push analogue
+    of the pull sweep's cross-tile resolution fold, producing exactly the
+    identity-initialised reduction that ``iterate.plan_merge`` resolves
+    against the old state, so push and pull rounds share one merge contract
+    bit-for-bit.
+
+    Returns ``(red, hp)`` like ``fused_ell_sweep``: ``red[comp]`` is the
+    [n_pad] dst-keyed reduction of that level over the candidates, ``hp``
+    the has-predecessor vectors of the push− models (scattered from the
+    non-⊥ source states — no extra launch).  ``return_candidates`` appends
+    the raw [n_pad, width] per-edge candidate arrays.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    comps_order = comps_in_plan_order(plans)
+    pos_of = {c: k for k, c in enumerate(comps_order)}
+    ident_scalars = _ident_scalars(comps_order, states, idents)
+
+    n_pad, width = dsts.shape
+    n_i, n_j = n_pad // block_v, width // block_e
+    grid = (n_i, n_j)
+
+    tile = pl.BlockSpec((block_v, block_e), lambda i, j: (i, j))
+    one = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    vrow = pl.BlockSpec((block_v,), lambda i, j: (i,))
+
+    args = [tile_act, dsts, weight, capacity, mask,
+            jnp.asarray(active, jnp.int32), outdeg]
+    specs = [one, tile, tile, tile, tile, vrow, vrow]
+    for c in comps_order:
+        args.append(states[c])
+        specs.append(vrow)
+
+    out_shapes = [jax.ShapeDtypeStruct((n_pad, width), states[c].dtype)
+                  for c in comps_order]
+    out_specs = [tile for _ in comps_order]
+
+    kern = functools.partial(
+        _push_kernel, n_comps=len(comps_order),
+        p_fns=tuple(p_fns[c] for c in comps_order),
+        idents=ident_scalars, nv=float(nv), block_v=block_v)
+
+    SWEEP_STATS["launches"] += 1
+    SWEEP_STATS["push_launches"] += 1
+    outs = pl.pallas_call(
+        kern, grid=grid, in_specs=specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret)(*args)
+    outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+
+    # Dst-keyed lexicographic scatter resolution: the push analogue of the
+    # pull sweep's cross-tile fold.  Identity-initialised (NOT onto the old
+    # state) so the result obeys the same plan_merge contract as the pull
+    # reduction; ties mask the next level to identity exactly like
+    # plan_segment_reduce does on the pull side.
+    flat_dst = dsts.reshape(-1)
+    flat = {c: outs[pos_of[c]].reshape(-1) for c in comps_order}
+    red = {}
+    for spec in plans:
+        tie = jnp.ones_like(flat_dst, dtype=bool)
+        for l, (c, op) in enumerate(spec):
+            ident = jnp.asarray(ident_scalars[pos_of[c]], flat[c].dtype)
+            init = jnp.full((n_pad,), ident, flat[c].dtype)
+            vals = jnp.where(tie, flat[c], ident)
+            prim = segment.scatter_reduce(op, init, vals, flat_dst)
+            red[c] = prim
+            if l + 1 < len(spec):
+                tie = tie & (vals == prim[flat_dst])
+
+    hp = {}
+    if need_haspred:
+        # Def. 4's CPreds ≠ ∅ probe: scatter-OR of "source state non-⊥" over
+        # real out-edges.  Pure jnp on data already resident — no launch.
+        for c in comps_order:
+            ident = jnp.asarray(ident_scalars[pos_of[c]], states[c].dtype)
+            nonbot = (mask & (states[c][:, None] != ident)).astype(jnp.int32)
+            hp[c] = segment.scatter_reduce(
+                "or", jnp.zeros((n_pad,), jnp.int32), nonbot.reshape(-1),
+                flat_dst) > 0
+    if return_candidates:
+        return red, hp, outs
+    return red, hp
 
 
 def _level_kernel(srcs_ref, w_ref, c_ref, mask_ref, active_ref, outdeg_ref,

@@ -1,16 +1,22 @@
 """Jit'd dispatch wrappers around the Pallas kernels.
 
-``iterate_pallas`` is the GraphIt-analogue engine (DESIGN.md §2): the same
-fixpoint semantics as ``iterate.iterate_graph`` but with every edge sweep
-executed by the blocked-ELL Pallas kernel.  One engine iteration issues
-exactly ONE ``pallas_call`` — ``fused_ell_sweep`` evaluates every plan of
-the fused round (all lexicographic levels plus, for the pull− models, the
-has-predecessor probe) in a single launch, and cross-tile lexicographic
-ties resolve in a short jnp pass over the per-tile candidates.
+``iterate_pallas`` is the direction-optimized GraphIt/Gemini-analogue engine
+(DESIGN.md §2): the same fixpoint semantics as ``iterate.iterate_graph`` but
+with every edge sweep executed by a blocked-ELL Pallas kernel.  One engine
+iteration executes exactly ONE ``pallas_call`` — either the pull sweep
+(``fused_ell_sweep``: dst-keyed gather over predecessor tiles) or the push
+sweep (``fused_ell_push_sweep``: source-keyed propagate over frontier-active
+row tiles) — chosen per iteration by a Gemini-style frontier-density
+heuristic when ``direction="auto"``.  Both sweeps produce the identity-
+initialised per-plan reduction that ``iterate.plan_merge`` resolves against
+the old state, so the direction switch is invisible to the plan algebra.
+Non-idempotent rounds always run the pull− full recompute (has-pred probe
+fused in the same launch) unless the push direction is forced, in which
+case the push− scatter recompute runs instead.
 
 The fixpoint itself is compiled once per (plan structure, kernel set,
-graph shape) and memoized in ``_EXEC_CACHE``: repeated queries, multi-round
-programs (RDS, Trust) and benchmark repeats reuse the traced
+graph shape, direction) and memoized in ``_EXEC_CACHE``: repeated queries,
+multi-round programs (RDS, Trust) and benchmark repeats reuse the traced
 ``lax.while_loop`` instead of rebuilding it per call (DESIGN.md §8).
 
 The other wrappers expose the embedding-bag and ELL-softmax kernels behind
@@ -71,30 +77,51 @@ def _comps_key(comps):
                   None if cr.e_fn is None else id(cr.e_fn)) for cr in comps)
 
 
-def _build_pallas_executor(comps, plans, n, max_iter, tol,
-                           block_v, block_e, interpret):
+DENSE_FRONTIER = 0.05      # Gemini switch point: frontier fraction above
+                           # which the pull sweep wins (dense reads beat
+                           # frontier-proportional row skipping)
+
+
+def _directions_used(direction: str, idempotent: bool):
+    """Which sweep layouts an executor needs.  The heuristic only arbitrates
+    idempotent (+model) rounds — Gemini's precondition: both directions must
+    be admissible, which the push+/push− conditions (Defs. 3/4, checked by
+    core/conditions via the shared plan algebra) grant exactly when pull's
+    are.  Non-idempotent rounds run one full-recompute direction."""
+    if direction == "auto":
+        return ("pull", "push") if idempotent else ("pull",)
+    if direction == "pull":
+        return ("pull",)
+    if direction == "push":
+        return ("push",)
+    raise ValueError(f"direction must be auto|pull|push, got {direction!r}")
+
+
+def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
+                           interpret, use, dense_threshold):
     """Trace + jit the whole fixpoint once.  The returned function takes the
-    blocked-ELL arrays and out-degrees as arguments (NOT closure constants),
-    so one compiled executor serves every graph with the same padded shape."""
+    blocked-ELL arrays (one 5-tuple per direction in ``use``, pull first)
+    and out-degrees as arguments (NOT closure constants), so one compiled
+    executor serves every graph with the same padded shapes.
+
+    ``use`` = ("pull",) | ("push",) | ("pull", "push"); with both, each
+    iteration picks its sweep by frontier density via ``lax.cond`` — both
+    branches trace (two pallas_calls appear in the HLO) but exactly one
+    executes per iteration at runtime."""
     comps_by_idx = {cr.idx: cr for cr in comps}
     plan_levels = tuple(tuple(_plan_levels(p)) for p in plans)
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
-    comps_order = []
-    for spec in plan_levels:
-        for c, _op in spec:
-            if c not in comps_order:
-                comps_order.append(c)
+    comps_order = _er.comps_in_plan_order(plan_levels)
     idents = {c: comps_by_idx[c].ident for c in comps_order}
     p_fns = {c: comps_by_idx[c].p_fn for c in comps_order}
 
-    def run(srcs, weight, capacity, mask, tile_nnz, out_deg):
-        n_pad = srcs.shape[0]
+    def run(*arrays):
+        ell = {d: arrays[5 * i:5 * i + 5] for i, d in enumerate(use)}
+        out_deg = arrays[5 * len(use)]
+        n_pad = ell[use[0]][0].shape[0]
         out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
             jnp.maximum(out_deg, 1).astype(jnp.float32))
-        out_deg_real = jnp.zeros(n_pad, jnp.float32).at[:n].set(
-            out_deg.astype(jnp.float32))
-        num_edges = jnp.sum(mask.astype(jnp.float32))
-        tiles_static = (tile_nnz > 0).astype(jnp.int32)
+        num_edges = jnp.sum(ell[use[0]][3].astype(jnp.float32))
         ones_act = jnp.ones(n_pad, jnp.int32)
 
         def pad_state(x, ident):
@@ -105,80 +132,139 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol,
             return tuple(pad_state(s, cr.ident)
                          for s, cr in zip(base, comps))
 
-        def sweep(state_d, active_i32, tile_act, need_hp):
+        def sweep(d, state_d, active_i32, tile_act, need_hp):
+            nbrs, weight, capacity, mask, _nnz = ell[d]
+            fn = _er.fused_ell_sweep if d == "pull" else _er.fused_ell_push_sweep
             states = {c: state_d[c] for c in comps_order}
-            return _er.fused_ell_sweep(
-                srcs, weight, capacity, mask, tile_act, states, active_i32,
-                out_deg_pad, plans=plan_levels, idents=idents, p_fns=p_fns,
-                nv=float(n), need_haspred=need_hp,
-                block_v=block_v, block_e=block_e, interpret=interpret)
+            return fn(nbrs, weight, capacity, mask, tile_act, states,
+                      active_i32, out_deg_pad, plans=plan_levels,
+                      idents=idents, p_fns=p_fns, nv=float(n),
+                      need_haspred=need_hp, block_v=block_v, block_e=block_e,
+                      interpret=interpret)
+
+        def masked_branch(d):
+            """One frontier-masked (+model) sweep in direction ``d``; edge
+            work is the real slots inside the tiles actually processed."""
+            def branch(args):
+                state_d, active_i32 = args
+                nbrs, _w, _c, mask, tile_nnz = ell[d]
+                if d == "pull":
+                    tile_act = _er.tile_activity(nbrs, mask, tile_nnz,
+                                                 active_i32, block_v, block_e)
+                else:
+                    tile_act = _er.tile_activity_push(tile_nnz, active_i32,
+                                                      block_v)
+                red, _ = sweep(d, state_d, active_i32, tile_act, False)
+                w_inc = jnp.sum((tile_nnz * tile_act)).astype(jnp.float32)
+                return tuple(red[c] for c in comps_order), w_inc
+            return branch
 
         def body(carry):
-            state, active, k, work = carry
+            state, active, k, work, pushes = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             if idempotent:
-                # pull+: frontier-masked; skip tiles with no active source.
                 active_i32 = active.astype(jnp.int32)
-                work = work + jnp.sum(out_deg_real
-                                      * active.astype(jnp.float32))
-                tile_act = _er.tile_activity(srcs, mask, tile_nnz,
-                                             active_i32, block_v, block_e)
-                red, _ = sweep(state_d, active_i32, tile_act, False)
+                if len(use) == 2:
+                    # Gemini heuristic: sparse frontier → push (work ∝
+                    # active rows), dense frontier → pull (gather tiles).
+                    # Density over the LOGICAL vertex count — padding rows
+                    # (never active after iteration 1) must not dilute it.
+                    frac = jnp.sum(active.astype(jnp.float32)) / n
+                    use_push = frac <= dense_threshold
+                    red_t, w_inc = jax.lax.cond(
+                        use_push, masked_branch("push"), masked_branch("pull"),
+                        (state_d, active_i32))
+                    pushes = pushes + use_push.astype(jnp.int32)
+                else:
+                    red_t, w_inc = masked_branch(use[0])((state_d, active_i32))
+                    pushes = pushes + (1 if use[0] == "push" else 0)
+                red = {c: red_t[i] for i, c in enumerate(comps_order)}
+                work = work + w_inc
                 new_d = {}
                 for p in plans:
                     new_d.update(iterate.plan_merge(p, state_d, red,
                                                     comps_by_idx))
             else:
-                # pull−: full recompute; has-pred probe fused in the same
+                # full recompute (− models): has-pred probe in the same
                 # launch; only all-padding tiles skip.
+                d = use[0]
                 work = work + num_edges
-                red, hp = sweep(state_d, ones_act, tiles_static, True)
+                tiles_static = (ell[d][4] > 0).astype(jnp.int32)
+                red, hp = sweep(d, state_d, ones_act, tiles_static, True)
                 red = iterate._apply_epilogue(comps, red)
                 new_d = iterate._recompute_merge(plans, comps_by_idx,
                                                  state_d, red, hp)
+                pushes = pushes + (1 if d == "push" else 0)
             new = tuple(new_d[cr.idx] for cr in comps)
             ch = iterate._changed(comps, new, state, tol)
-            return new, ch, k + 1, work
+            return new, ch, k + 1, work, pushes
 
         def cond(carry):
-            _, active, k, _ = carry
+            _, active, k, _, _ = carry
             return jnp.any(active) & (k < max_iter)
 
         state0 = init_state()
-        state, active, k, work = jax.lax.while_loop(
+        state, active, k, work, pushes = jax.lax.while_loop(
             cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
-                         jnp.float32(0)))
-        return state, k, work
+                         jnp.float32(0), jnp.int32(0)))
+        return state, k, work, pushes
 
     return jax.jit(run)
 
 
 def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    tol: float = 0.0, block_v: int = 8, block_e: int = 128,
-                   interpret: Optional[bool] = None) -> iterate.IterationResult:
+                   interpret: Optional[bool] = None, direction: str = "auto",
+                   dense_threshold: float = DENSE_FRONTIER) -> iterate.IterationResult:
     """Fixpoint of the fused reduction with single-launch Pallas edge sweeps.
 
-    Semantics match the pull model (Def. 1 / Def. 2): idempotent plans run
-    frontier-masked (pull+), non-idempotent plans run full-recompute (pull−),
-    per-level lexicographic reductions per fused plan.
+    ``direction`` selects the sweep model per DESIGN.md §2:
+
+      "auto"  (default) Gemini-style: idempotent rounds pick push vs pull
+              per iteration from the frontier density; non-idempotent
+              rounds run pull− full recompute.
+      "pull"  dst-keyed gather sweeps only (Def. 1 / Def. 2).
+      "push"  src-keyed scatter sweeps only (Def. 3 / Def. 4).
+
+    The returned result carries ``pull_iters``/``push_iters`` — the runtime
+    per-direction iteration counts — which are also accumulated into
+    ``edge_reduce.SWEEP_STATS`` for benchmarks.
     """
     n = g.n
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     max_iter = max_iter if max_iter is not None else 2 * n + 4
-    ell = blocked_ell_cached(g, block_v=block_v, block_e=block_e)
+    idempotent = all(iterate.plan_idempotent(p) for p in plans)
+    use = _directions_used(direction, idempotent)
+    ells = {"pull": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
+                                       direction="in") if "pull" in use else None,
+            "push": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
+                                       direction="out") if "push" in use else None}
     key = (n, tuple(tuple(_plan_levels(p)) for p in plans), _comps_key(comps),
-           max_iter, tol, block_v, block_e, interpret)
+           max_iter, tol, block_v, block_e, interpret, use, dense_threshold)
     run = _EXEC_CACHE.get(key)
     if run is None:
         while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:     # evict oldest entry
             _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
         run = _build_pallas_executor(comps, plans, n, max_iter, tol,
-                                     block_v, block_e, interpret)
+                                     block_v, block_e, interpret, use,
+                                     dense_threshold)
         _EXEC_CACHE[key] = run
-    state, k, work = run(ell.srcs, ell.weight, ell.capacity, ell.mask,
-                         ell.tile_nnz, g.out_deg)
-    return iterate.IterationResult(
+    args = []
+    for d in use:
+        e = ells[d]
+        args += [e.nbrs, e.weight, e.capacity, e.mask, e.tile_nnz]
+    args.append(g.out_deg)
+    state, k, work, pushes = run(*args)
+    k_i = iterate._host(k, int)
+    p_i = iterate._host(pushes, int)
+    if isinstance(k_i, int) and isinstance(p_i, int):
+        _er.SWEEP_STATS["push_iters"] += p_i
+        _er.SWEEP_STATS["pull_iters"] += k_i - p_i
+    res = iterate.IterationResult(
         state=tuple(s[:n] for s in state),
-        iterations=iterate._host(k, int),
+        iterations=k_i,
         edge_work=iterate._host(work, float))
+    res.push_iters = p_i
+    res.pull_iters = k_i - p_i        # valid for ints and tracers alike
+    return res

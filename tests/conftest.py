@@ -19,6 +19,18 @@ def norm_inf(x):
     return np.where(np.isnan(v) | (np.abs(v) >= 1e8), np.float64(1e9), v)
 
 
+@pytest.fixture(autouse=True)
+def _fresh_program_caches():
+    """Drop every compiled-program cache layer after each test so
+    ``_EXEC_CACHE`` / ``blocked_ell_cached`` / ``synthesize_round`` state —
+    and in particular the id()-reuse hazard of identity-keyed caches when a
+    test's graph is garbage-collected — can never leak across tests.  Tests
+    that assert warm-cache behaviour do so within a single test body."""
+    yield
+    from repro.core import engine
+    engine.clear_program_caches()
+
+
 @pytest.fixture(scope="session")
 def small_graphs():
     from repro.graph.structure import line_graph, rmat_graph, uniform_graph

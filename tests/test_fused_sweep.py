@@ -4,9 +4,11 @@ Covers the acceptance contract of the fused execution layer:
 
 * multi-level lexicographic plans (WSP/DRR-style) on the pallas engine are
   bit-compatible with the pull engine and the dense oracle engine,
-* one engine iteration of ANY fused plan issues ≤ 2 ``pallas_call``
-  launches — exactly 1 for Prim-only plans, the pull− has-pred probe
-  included (launch-counted at trace time via ``SWEEP_STATS``),
+* one engine iteration of ANY fused plan executes exactly ONE
+  ``pallas_call`` at runtime; a forced direction traces exactly 1 per
+  round, the direction-optimized default traces 2 (one per lax.cond
+  branch) while still executing one per iteration (``SWEEP_STATS``
+  trace-time launch counters + runtime direction counters),
 * frontier-skipped tiles (no active source) return identities bit-for-bit,
 * cross-tile lexicographic resolution on graphs whose padded width spans
   several slot tiles,
@@ -77,24 +79,47 @@ def test_fused_lex_cross_tile_resolution():
 
 @pytest.mark.parametrize("name", PRIM_ONLY)
 def test_prim_only_plans_single_launch(name, small_graphs):
-    """BFS/SSSP/WP/REACH: exactly ONE pallas_call per engine iteration.
+    """BFS/SSSP/WP/REACH with a forced direction: exactly ONE pallas_call
+    per engine iteration (the while_loop body traces once, so trace-time
+    launch counts ARE the per-iteration launch counts)."""
+    for model, counter in (("pull", "pull_launches"), ("push", "push_launches")):
+        _cold()
+        prog = fusion.fuse(U.ALL_SPECS[name]())
+        res = engine.run_program(small_graphs["rmat"], prog, engine="pallas",
+                                 model=model)
+        assert res.stats.rounds == 1
+        assert er.SWEEP_STATS["launches"] == 1
+        assert er.SWEEP_STATS[counter] == 1
 
-    The while_loop body traces once, so trace-time launch counts ARE the
-    per-iteration launch counts."""
+
+@pytest.mark.parametrize("name", PRIM_ONLY)
+def test_prim_only_auto_traces_one_sweep_per_direction(name, small_graphs):
+    """The direction-optimized default traces BOTH lax.cond branches — one
+    pull and one push pallas_call per round — but executes exactly one sweep
+    per iteration at runtime (pull_iters + push_iters == iterations)."""
     _cold()
     res = _run(small_graphs["rmat"], name, "pallas")
     assert res.stats.rounds == 1
-    assert er.SWEEP_STATS["launches"] == 1
+    assert er.SWEEP_STATS["launches"] == 2
+    assert er.SWEEP_STATS["pull_launches"] == 1
+    assert er.SWEEP_STATS["push_launches"] == 1
+    assert (er.SWEEP_STATS["pull_iters"] + er.SWEEP_STATS["push_iters"]
+            == res.stats.iterations)
 
 
 @pytest.mark.parametrize("name", MULTI_LEVEL)
 def test_fused_plans_at_most_two_launches_per_round(name, small_graphs):
     """Any fused plan (multi-level lex, non-idempotent with has-pred probe,
-    multi-plan rounds like Trust's 4 reductions) costs ≤ 2 launches per
-    iteration — the fused sweep actually achieves 1 per round."""
+    multi-plan rounds like Trust's 4 reductions) traces ≤ 2 launches per
+    round — one per admissible direction; non-idempotent rounds keep the
+    single pull− sweep.  A forced direction is always exactly 1 per round."""
     _cold()
     res = _run(small_graphs["rmat"], name, "pallas")
     assert er.SWEEP_STATS["launches"] <= 2 * res.stats.rounds
+    _cold()
+    res = engine.run_program(small_graphs["rmat"],
+                             fusion.fuse(U.ALL_SPECS[name]()),
+                             engine="pallas", model="pull")
     assert er.SWEEP_STATS["launches"] == res.stats.rounds
 
 
