@@ -17,11 +17,20 @@ the adaptive engine vs the pull-only engine — the quantity the
 direction-optimized engine must keep ≤ pull — and writes machine-readable
 ``BENCH_pallas.json`` so the perf trajectory is tracked across PRs.
 
+``--engines pallas`` also runs the batched-throughput section (DESIGN.md
+§9): a B-source sweep of one query shape served sequentially (the source
+is a traced executor argument, so the sweep must hold ONE executor-cache
+entry and re-trace nothing after the first query) against one
+``run_program_batch`` vmapped launch (B queries per launch).  Gated
+quantities: executor-cache entries of the sequential sweep (the
+retrace-per-source regression this section exists for) and traced launch
+counts, never wall time.
+
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
-run regresses on traced launches, the fused/unfused edge-work ratio, or
-the push-vs-pull work advantage — the one comparison path shared by the CI
-bench-smoke gate and local runs.
+run regresses on traced launches, the fused/unfused edge-work ratio, the
+push-vs-pull work advantage, or the batched executor/retrace counts — the
+one comparison path shared by the CI bench-smoke gate and local runs.
 """
 from __future__ import annotations
 
@@ -47,6 +56,9 @@ from repro.kernels.ops import _plan_levels
 SIMPLE = ["WSP", "NWR", "RADIUS"]
 MULTI = ["DRR", "Trust", "RDS"]
 DIRECTION = ["BFS", "SSSP"]             # sparse-frontier direction workloads
+BATCHED = ["BFS", "SSSP"]               # single-source batched-query sweeps
+_BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
+_BATCH_B = 8                            # sources per batched sweep
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_pallas.json")
@@ -106,16 +118,73 @@ def bench_direction(g, gname: str, weighted: bool, name: str) -> dict:
     }
 
 
+def bench_batched(g, gname: str, weighted: bool, name: str,
+                  batch: int = _BATCH_B) -> dict:
+    """Batched-throughput section (DESIGN.md §9): B single-source queries of
+    one shape, sequential (source as traced executor argument) vs one
+    vmapped launch.  The gated quantities are the executor-cache entry count
+    and traced launches of the sequential sweep — the per-source-retrace
+    regression this PR class exists to prevent — plus the batched launch
+    count (B queries : 1 executor)."""
+    from repro.kernels import edge_reduce as er
+    from repro.kernels import ops as kops
+    spec_fn = _BATCHED_SPECS[name]
+    srcs = list(range(min(batch, g.n)))
+    prog = fusion.fuse(spec_fn(srcs[0]))
+
+    def seq():
+        # fresh spec per source: the exact shape that used to retrace
+        return [engine.run_program(g, fusion.fuse(spec_fn(s)),
+                                   engine="pallas") for s in srcs]
+
+    engine.clear_program_caches()
+    er.reset_sweep_stats()
+    res_seq = seq()
+    exec_seq = kops.executor_cache_size()
+    launches_seq = er.SWEEP_STATS["launches"]       # trace-time = retraces
+    t_seq, _ = timed(seq, repeats=1)
+
+    def bat():
+        return engine.run_program_batch(g, prog, sources=srcs,
+                                        engine="pallas")
+
+    engine.clear_program_caches()
+    er.reset_sweep_stats()
+    res_bat = bat()
+    exec_bat = kops.executor_cache_size()
+    launches_bat = er.SWEEP_STATS["launches"]
+    t_bat, _ = timed(bat, repeats=1)
+    assert all(int(a.stats.iterations) == int(b.stats.iterations)
+               for a, b in zip(res_seq, res_bat))
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "batch": len(srcs),
+        "exec_entries_seq": exec_seq,
+        "exec_entries_batched": exec_bat,
+        "launches_traced_seq": launches_seq,
+        "launches_traced_batched": launches_bat,
+        "t_seq_ms": t_seq * 1e3, "t_batched_ms": t_bat * 1e3,
+        "queries_per_launch": len(srcs) / max(launches_bat, 1),
+    }
+
+
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
-        engines=("pull", "push"), json_out=None, direction_usecases=None):
+        engines=("pull", "push"), json_out=None, direction_usecases=None,
+        batched_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
+    batched_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
+    if batched_usecases and "pallas" not in engines:
+        raise ValueError("batched_usecases bench the pallas engine's "
+                         "vmapped executors; add 'pallas' to engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
+    if batched_usecases is None:
+        batched_usecases = BATCHED if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -161,6 +230,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                 for name in direction_usecases:
                     direction_rows.append(
                         bench_direction(g, gname, weighted, name))
+                for name in batched_usecases:
+                    batched_rows.append(
+                        bench_batched(g, gname, weighted, name))
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
@@ -174,10 +246,21 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
              ["graph", "weights", "usecase", "iters", "work_auto",
               "work_pull", "push_iters", "pull_iters", "sweeps_auto",
               "sweeps_pull"])
+    if batched_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["batch"], r["exec_entries_seq"], r["exec_entries_batched"],
+               r["launches_traced_seq"], r["launches_traced_batched"],
+               round(r["queries_per_launch"], 2),
+               round(r["t_seq_ms"], 1), round(r["t_batched_ms"], 1)]
+              for r in batched_rows],
+             ["graph", "weights", "usecase", "batch", "exec_seq",
+              "exec_batched", "traced_seq", "traced_batched",
+              "queries_per_launch", "t_seq_ms", "t_batched_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
+           "batched_rows": batched_rows,
            "table": out}
-    if json_rows or direction_rows:
+    if json_rows or direction_rows or batched_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -250,6 +333,29 @@ def compare_baseline(current: dict, baseline: dict,
                 errors.append(
                     f"{key}: push/pull work advantage regressed "
                     f"{adv_now:.3f} > baseline {adv_base:.3f} (+{rtol:.0%})")
+    base_batched = {_row_key(r): r for r in baseline.get("batched_rows", [])}
+    for r in current.get("batched_rows", []):
+        key = _row_key(r)
+        # Standing properties of the source-parameterized executors
+        # (DESIGN.md §8/§9), not just diffs: a B-source sequential sweep
+        # holds ONE executor entry, and the batched run ONE vmapped entry.
+        # A 2 here is exactly the retrace-per-source regression.
+        if r["exec_entries_seq"] > 1:
+            errors.append(
+                f"{key}: sequential {r['batch']}-source sweep holds "
+                f"{r['exec_entries_seq']} executor entries (want 1 — "
+                "the source is being baked into the trace again)")
+        if r["exec_entries_batched"] > 1:
+            errors.append(
+                f"{key}: batched sweep holds {r['exec_entries_batched']} "
+                "executor entries (want 1)")
+        b = base_batched.get(key)
+        if b is None:
+            continue
+        for field in ("launches_traced_seq", "launches_traced_batched"):
+            if r[field] > b[field]:
+                errors.append(f"{key}: {field} {r[field]} > baseline "
+                              f"{b[field]} (a retrace snuck in)")
     return errors
 
 
@@ -262,6 +368,10 @@ if __name__ == "__main__":
                          "to RM-S, or RM-XS when pallas is benchmarked "
                          "(interpret-mode grids step in Python on CPU)")
     ap.add_argument("--usecases", default=",".join(SIMPLE + MULTI))
+    ap.add_argument("--batched", default=None, metavar="NAMES",
+                    help="comma list of batched-sweep workloads "
+                         f"(default {','.join(BATCHED)} when pallas is "
+                         "benchmarked; pass '' to skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
                          f"(default {_JSON_PATH})")
@@ -284,11 +394,15 @@ if __name__ == "__main__":
             json_out = _JSON_PATH.replace(".json", ".fresh.json")
             print(f"baseline is the default output path; writing fresh "
                   f"results to {json_out}")
+    batched = None if args.batched is None else \
+        tuple(u for u in args.batched.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
-                 engines=engines, json_out=json_out)
+                 engines=engines, json_out=json_out,
+                 batched_usecases=batched)
     if baseline is not None:
-        if not (result["rows"] or result["direction_rows"]):
+        if not (result["rows"] or result["direction_rows"]
+                or result["batched_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -300,4 +414,5 @@ if __name__ == "__main__":
             sys.exit(1)
         print(f"baseline check OK ({args.baseline}: "
               f"{len(baseline.get('rows', []))} rows, "
-              f"{len(baseline.get('direction_rows', []))} direction rows)")
+              f"{len(baseline.get('direction_rows', []))} direction rows, "
+              f"{len(baseline.get('batched_rows', []))} batched rows)")

@@ -20,7 +20,8 @@ excluded from vertex reductions per C6 (R(n, ⊥) = n).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -67,7 +68,10 @@ class ExecStats:
     rounds: int = 0
     iterations: int = 0
     edge_work: float = 0.0
-    synth_ms: float = 0.0
+    synth_ms: float = 0.0           # wall time inside synthesize_round
+                                    # (~0 on round-cache hits)
+    push_iters: int = 0             # runtime per-direction iteration counts
+    pull_iters: int = 0             # (direction-aware engines; 0 elsewhere)
 
 
 @dataclasses.dataclass
@@ -104,71 +108,188 @@ def _vertex_reduce(op: str, vals, mask):
     return fn(masked)
 
 
-def _run_iteration(g, round_: FusedRound, engine: str, model: str,
-                   mesh, axes, max_iter, tol, synth_override=None):
-    synth = synth_override if synth_override is not None else synthesize_round(round_)
+def _source_overrides(round_, source) -> Optional[dict]:
+    """{comp idx: source} re-sourcing every SOURCED component of a round to
+    one query source (single-source programs: BFS/SSSP/WP/…).  Sourceless
+    components (Paths(v)) are untouched — sourced-ness is structural."""
+    if source is None:
+        return None
+    return {comp.idx: int(source) for comp in round_.components
+            if comp.source is not None}
+
+
+def _synthesize_timed(round_, synth_override=None):
+    """(synth dict, wall ms spent synthesizing) — cache hits report ~0."""
+    if synth_override is not None:
+        return synth_override, 0.0
+    t0 = time.perf_counter()
+    synth = synthesize_round(round_)
+    return synth, (time.perf_counter() - t0) * 1e3
+
+
+def _round_runtime(round_, synth):
     comps = iterate.comp_runtimes(round_, {k: v for k, v in synth.items()
                                            if not isinstance(k, tuple)})
     plans = [leaf.plan for leaf in round_.leaves]
+    return comps, plans
+
+
+def _run_iteration(g, round_: FusedRound, engine: str, model: str,
+                   mesh, axes, max_iter, tol, synth_override=None,
+                   source=None):
+    synth, synth_ms = _synthesize_timed(round_, synth_override)
+    comps, plans = _round_runtime(round_, synth)
+    sources = _source_overrides(round_, source)
     if engine in ("pull", "push"):
         m = model or ("pull+" if engine == "pull" else "push+")
         res = iterate.iterate_graph(g, comps, plans, model=m,
-                                    max_iter=max_iter, tol=tol)
+                                    max_iter=max_iter, tol=tol,
+                                    sources=sources)
     elif engine == "adaptive":
         res = iterate.iterate_adaptive(g, comps, plans, max_iter=max_iter,
-                                       tol=tol)
+                                       tol=tol, sources=sources)
     elif engine == "dense":
-        res = iterate.iterate_dense(g, comps, plans, max_iter=max_iter, tol=tol)
+        res = iterate.iterate_dense(g, comps, plans, max_iter=max_iter,
+                                    tol=tol, sources=sources)
     elif engine == "distributed":
         assert mesh is not None, "distributed engine needs a mesh"
         res = iterate.iterate_distributed(g, comps, plans, mesh, axes=axes,
                                           model=model or "pull+",
-                                          max_iter=max_iter, tol=tol)
+                                          max_iter=max_iter, tol=tol,
+                                          sources=sources)
     elif engine == "pallas":
         from repro.kernels import ops as kops
         res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol,
-                                  direction=_pallas_direction(model))
+                                  direction=_pallas_direction(model),
+                                  sources=sources)
     else:
         raise ValueError(f"unknown engine {engine}")
-    return res, comps
+    return res, comps, synth_ms
+
+
+def _finish_round(g, round_: FusedRound, env: dict):
+    """mlet (vectorized per-vertex maps) + rlet (masked vertex reductions) +
+    the round's output expression, over an env already holding the leaf
+    results.  Shared by the sequential and batched program runners."""
+    for name, expr in round_.maps:
+        env[name] = eval_expr(expr, env, jnp)
+    for name, op, m_name, cond_name in round_.vreduces:
+        vals = jnp.asarray(env[m_name])
+        vals = jnp.broadcast_to(vals, (g.n,)) if vals.ndim == 0 else vals
+        mask = _valid_mask(vals)
+        if cond_name is not None:
+            cond = jnp.asarray(env[cond_name])
+            mask = mask & jnp.broadcast_to(cond.astype(bool), (g.n,))
+        env[name] = _vertex_reduce(op, vals, mask)
+    return eval_expr(round_.out, env, jnp)
+
+
+def _accumulate(stats: ExecStats, res, synth_ms: float) -> None:
+    stats.rounds += 1
+    stats.iterations += res.iterations
+    stats.edge_work += res.edge_work
+    stats.synth_ms += synth_ms
+    pi = getattr(res, "push_iters", 0)
+    li = getattr(res, "pull_iters", 0)
+    if isinstance(pi, int):
+        stats.push_iters += pi
+    if isinstance(li, int):
+        stats.pull_iters += li
 
 
 def run_program(g, prog: FusedProgram, engine: str = "pull",
                 model: Optional[str] = None, mesh=None, axes=("data",),
-                max_iter: Optional[int] = None, tol: float = 0.0) -> ExecResult:
+                max_iter: Optional[int] = None, tol: float = 0.0,
+                source: Optional[int] = None) -> ExecResult:
+    """Execute a fused program.  ``source`` optionally re-sources every
+    sourced component to one query source — the program (and with it every
+    compiled-executor cache entry) is source-generic, so querying another
+    source never re-fuses, re-synthesizes or retraces (DESIGN.md §8)."""
     stats = ExecStats()
     named: dict = {}
     final = None
     for bind_name, round_ in prog.rounds:
-        env: dict = {}
-        for key, val in named.items():
-            env[key] = val
+        env: dict = dict(named)
         if round_.leaves:
-            res, comps = _run_iteration(g, round_, engine, model, mesh, axes,
-                                        max_iter, tol)
-            stats.rounds += 1
-            stats.iterations += res.iterations
-            stats.edge_work += res.edge_work
+            res, comps, synth_ms = _run_iteration(g, round_, engine, model,
+                                                  mesh, axes, max_iter, tol,
+                                                  source=source)
+            _accumulate(stats, res, synth_ms)
             for leaf in round_.leaves:
                 env[leaf.name] = res.state[plan_output(leaf.plan)]
-        # mlet: vectorized per-vertex map
-        for name, expr in round_.maps:
-            env[name] = eval_expr(expr, env, jnp)
-        # rlet: masked vertex reductions
-        for name, op, m_name, cond_name in round_.vreduces:
-            vals = jnp.asarray(env[m_name])
-            vals = jnp.broadcast_to(vals, (g.n,)) if vals.ndim == 0 else vals
-            mask = _valid_mask(vals)
-            if cond_name is not None:
-                cond = jnp.asarray(env[cond_name])
-                mask = mask & jnp.broadcast_to(cond.astype(bool), (g.n,))
-            env[name] = _vertex_reduce(op, vals, mask)
-        out = eval_expr(round_.out, env, jnp)
+        out = _finish_round(g, round_, env)
         if bind_name is not None:
             prefix = "$vec:" if round_.out_kind == "vertex" else "$scalar:"
             named[prefix + bind_name] = out
         final = out
     return ExecResult(value=final, named=named, stats=stats)
+
+
+def run_program_batch(g, prog: FusedProgram, sources: Sequence,
+                      engine: str = "pallas", model: Optional[str] = None,
+                      mesh=None, axes=("data",),
+                      max_iter: Optional[int] = None,
+                      tol: float = 0.0) -> list:
+    """Serve B concurrent single-source queries of one program in ONE
+    compiled launch per round (DESIGN.md §9).
+
+    ``sources`` is a [B] sequence of query sources; every sourced component
+    of every round is re-sourced per batch element (single-source programs —
+    BFS/SSSP/WP sweeps and friends).  On the pallas engine the iteration
+    rounds run as ``jax.vmap``-batched fixpoints over the shared blocked-ELL
+    layout — per-query convergence via the active mask, results bit-identical
+    to B sequential ``run_program(..., source=s)`` calls, and ONE executor
+    cache entry regardless of B.  Other engines fall back to the sequential
+    loop (the reference semantics this path is tested against).
+
+    Returns a list of B ``ExecResult``s, each with its own per-query stats
+    (iterations, edge work, push/pull split; ``synth_ms`` is the shared
+    per-round synthesis cost, reported on each)."""
+    src_arr = np.asarray(sources)
+    if src_arr.ndim != 1:
+        raise ValueError(
+            f"run_program_batch sources must be a [B] vector of query "
+            f"sources, got shape {src_arr.shape}; per-component [B, n_comps] "
+            "batching is the kernels-layer iterate_pallas_batch API")
+    src_list = [int(s) for s in src_arr]
+    B = len(src_list)
+    if engine != "pallas":
+        return [run_program(g, prog, engine=engine, model=model, mesh=mesh,
+                            axes=axes, max_iter=max_iter, tol=tol, source=s)
+                for s in src_list]
+    from repro.kernels import ops as kops
+    stats = [ExecStats() for _ in range(B)]
+    named: list = [{} for _ in range(B)]
+    finals: list = [None] * B
+    for bind_name, round_ in prog.rounds:
+        envs = [dict(nm) for nm in named]
+        if round_.leaves:
+            synth, synth_ms = _synthesize_timed(round_)
+            comps, plans = _round_runtime(round_, synth)
+            res = kops.iterate_pallas_batch(
+                g, comps, plans, src_list, max_iter=max_iter, tol=tol,
+                direction=_pallas_direction(model))
+            iters = np.asarray(res.iterations)
+            works = np.asarray(res.edge_work)
+            pushes = np.asarray(res.push_iters)
+            for b in range(B):
+                st = stats[b]
+                st.rounds += 1
+                st.iterations += int(iters[b])
+                st.edge_work += float(works[b])
+                st.synth_ms += synth_ms
+                st.push_iters += int(pushes[b])
+                st.pull_iters += int(iters[b]) - int(pushes[b])
+                for leaf in round_.leaves:
+                    envs[b][leaf.name] = res.state[plan_output(leaf.plan)][b]
+        for b in range(B):
+            out = _finish_round(g, round_, envs[b])
+            if bind_name is not None:
+                prefix = "$vec:" if round_.out_kind == "vertex" else "$scalar:"
+                named[b][prefix + bind_name] = out
+            finals[b] = out
+    return [ExecResult(value=finals[b], named=named[b], stats=stats[b])
+            for b in range(B)]
 
 
 # ---------------------------------------------------------------------------
@@ -177,36 +298,89 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
 
 def run_direct(g, dk: DirectKernels, engine: str = "pull",
                mesh=None, axes=("data",),
-               model: Optional[str] = None) -> ExecResult:
-    from repro.core.fusion import Component, FusedRound, Leaf, Prim
-    from repro.core.lang import PATH_FNS, WEIGHT
+               model: Optional[str] = None,
+               source: Optional[int] = None,
+               sources: Optional[Sequence] = None):
+    """Execute a direct kernel set on one engine.
+
+    ``model`` optionally pins the pallas sweep direction ("pull"/"push");
+    the default is the engine's documented behaviour — the per-iteration
+    frontier-density heuristic for idempotent kernels, full-recompute for
+    the rest — NOT a forced direction.  ``source`` overrides ``dk.source``
+    for one query; ``sources`` runs a [B] batch of queries (one vmapped
+    launch on the pallas engine, a sequential loop elsewhere) and returns a
+    list of per-query ``ExecResult``s.  Both need a source-generic kernel
+    set (``dk.source`` not None)."""
+    from repro.core.fusion import Prim
+
+    if (source is not None or sources is not None) and dk.source is None:
+        raise ValueError(
+            "run_direct source overrides need a source-generic DirectKernels "
+            "(init_fn(v, s) with source=...); this kernel set is sourceless "
+            "or bakes its source into the init closure")
+    if dk.source is not None and iterate._init_arity(dk.init_fn) < 2:
+        raise ValueError(
+            "DirectKernels.source requires a source-generic init_fn(v, s); "
+            "a single-argument closure bakes its own source, so re-sourcing "
+            "would move the ⊥-mask without moving the init value")
+    if sources is not None:
+        if engine == "pallas":
+            from repro.kernels import ops as kops
+            comp = iterate.CompRuntime(
+                idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
+                p_fn=dk.p_fn, init_fn=dk.init_fn, source=dk.source,
+                e_fn=dk.e_fn)
+            res = kops.iterate_pallas_batch(
+                g, [comp], [Prim(dk.rop, 0)], sources,
+                max_iter=dk.max_iter, tol=dk.tol,
+                direction=_pallas_direction(model))
+            iters = np.asarray(res.iterations)
+            works = np.asarray(res.edge_work)
+            pushes = np.asarray(res.push_iters)
+            return [ExecResult(
+                value=res.state[0][b], named={},
+                stats=ExecStats(rounds=1, iterations=int(iters[b]),
+                                edge_work=float(works[b]),
+                                push_iters=int(pushes[b]),
+                                pull_iters=int(iters[b]) - int(pushes[b])))
+                for b in range(len(iters))]
+        return [run_direct(g, dk, engine=engine, mesh=mesh, axes=axes,
+                           model=model, source=int(s)) for s in sources]
 
     comp = iterate.CompRuntime(
         idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
-        p_fn=dk.p_fn, init_fn=dk.init_fn, source=None, e_fn=dk.e_fn)
+        p_fn=dk.p_fn, init_fn=dk.init_fn, source=dk.source, e_fn=dk.e_fn)
     plans = [Prim(dk.rop, 0)]
+    src_over = None if source is None else {0: int(source)}
     # frontier-masked (+) models for idempotent kernels (BFS/CC/SSSP/WP);
     # full-recompute (−) for non-idempotent / epilogue kernels (PageRank)
     idempotent = dk.rop in iterate._IDEMPOTENT_OPS and dk.e_fn is None
     pull_like = engine in ("pull", "dense", "distributed")
-    model = ("pull+" if pull_like else "push+") if idempotent else \
+    eng_model = ("pull+" if pull_like else "push+") if idempotent else \
         ("pull-" if pull_like else "push-")
     if engine in ("pull", "push"):
-        res = iterate.iterate_graph(g, [comp], plans, model=model,
-                                    max_iter=dk.max_iter, tol=dk.tol)
+        res = iterate.iterate_graph(g, [comp], plans, model=eng_model,
+                                    max_iter=dk.max_iter, tol=dk.tol,
+                                    sources=src_over)
     elif engine == "dense":
         res = iterate.iterate_dense(g, [comp], plans, max_iter=dk.max_iter,
-                                    tol=dk.tol)
+                                    tol=dk.tol, sources=src_over)
     elif engine == "distributed":
         res = iterate.iterate_distributed(g, [comp], plans, mesh, axes=axes,
                                           model="pull-", max_iter=dk.max_iter,
-                                          tol=dk.tol)
+                                          tol=dk.tol, sources=src_over)
     elif engine == "pallas":
+        # The engine's documented default: per-iteration direction heuristic
+        # for idempotent kernels (pull− recompute otherwise), forced only by
+        # an explicit model — NOT derived from pull_like, which omits pallas
+        # and used to pin push for every direct kernel.
         from repro.kernels import ops as kops
         res = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
                                   tol=dk.tol,
-                                  direction=_pallas_direction(model))
+                                  direction=_pallas_direction(model),
+                                  sources=src_over)
     else:
         raise ValueError(engine)
-    stats = ExecStats(rounds=1, iterations=res.iterations, edge_work=res.edge_work)
+    stats = ExecStats()
+    _accumulate(stats, res, 0.0)
     return ExecResult(value=res.state[0], named={}, stats=stats)

@@ -23,6 +23,7 @@ Pallas engine lives in repro.kernels and reuses this plan algebra.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Optional
 
 import jax
@@ -42,12 +43,19 @@ _IDEMPOTENT_OPS = ("min", "max", "or", "and")
 
 @dataclasses.dataclass(frozen=True)
 class CompRuntime:
-    """Everything an engine needs for one component of the fused tuple."""
+    """Everything an engine needs for one component of the fused tuple.
+
+    ``source`` is the component's *default* query source from the spec; the
+    engines treat the value as runtime data (``_init_state`` accepts per-call
+    overrides, the pallas executor takes it as a traced argument), so only
+    ``source is not None`` — whether the initial state is ⊥-masked to one
+    vertex at all — is structural."""
     idx: int
     op: str                          # monoid from its plan position
     dtype: object                    # jnp dtype
     p_fn: Callable                   # env → propagated value (synthesized P)
-    init_fn: Callable                # (v_ids) → initial value (synthesized I)
+    init_fn: Callable                # (v_ids, src) → initial value (synthesized
+                                     # I; legacy single-arg closures accepted)
     source: Optional[int]
     e_fn: Optional[Callable] = None  # epilogue (PageRank); None = identity
 
@@ -190,14 +198,42 @@ class IterationResult:
     edge_work: float
 
 
-def _init_state(comps, n: int):
+def _init_arity(init_fn) -> int:
+    """Positional arity of an init kernel: 2 for the source-generic form
+    ``init_fn(v, src)``, 1 for legacy closures that bake the source in."""
+    try:
+        params = inspect.signature(init_fn).parameters.values()
+    except (TypeError, ValueError):          # builtins / odd callables
+        return 1
+    n_pos = sum(p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+                for p in params)
+    return 2 if n_pos >= 2 else 1
+
+
+def _init_state(comps, n: int, sources: Optional[dict] = None):
+    """Initial per-component state (condition C1/C2): the synthesized I on
+    the source vertex, ⊥ everywhere else; sourceless components initialize
+    every vertex.
+
+    ``sources`` optionally overrides ``cr.source`` per component index with a
+    runtime value — a Python int or a TRACED scalar.  Tracing through the
+    source (rather than closing over it) is what lets one compiled executor
+    serve every query source (DESIGN.md §8); overrides only apply to
+    components that are sourced in the spec (sourced-ness is structural)."""
     v = jnp.arange(n, dtype=jnp.int32)
     state = []
     for cr in comps:
-        vals = jnp.asarray(cr.init_fn(v), dtype=cr.dtype)
+        src = cr.source
+        if sources is not None and cr.source is not None:
+            src = sources.get(cr.idx, cr.source)
+        if _init_arity(cr.init_fn) >= 2:
+            vals = cr.init_fn(v, src)
+        else:
+            vals = cr.init_fn(v)
+        vals = jnp.asarray(vals, dtype=cr.dtype)
         vals = jnp.broadcast_to(vals, (n,))
         if cr.source is not None:
-            vals = jnp.where(v == cr.source, vals, cr.ident)
+            vals = jnp.where(v == src, vals, cr.ident)
         state.append(vals)
     return tuple(state)
 
@@ -249,8 +285,11 @@ def _has_pred(comps, state, src, dst, valid_e, n) -> dict:
 # ---------------------------------------------------------------------------
 
 def iterate_graph(g: Graph, comps, plans, model: str = "pull+",
-                  max_iter: Optional[int] = None, tol: float = 0.0) -> IterationResult:
-    """Run the fused reduction to fixpoint.  ``plans`` = [leaf.plan, ...]."""
+                  max_iter: Optional[int] = None, tol: float = 0.0,
+                  sources: Optional[dict] = None) -> IterationResult:
+    """Run the fused reduction to fixpoint.  ``plans`` = [leaf.plan, ...].
+    ``sources`` optionally overrides per-component query sources
+    (see ``_init_state``)."""
     n = g.n
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     idempotent = all(plan_idempotent(p) for p in plans)
@@ -309,7 +348,7 @@ def iterate_graph(g: Graph, comps, plans, model: str = "pull+",
         _, active, k, _ = carry
         return jnp.any(active) & (k < max_iter)
 
-    state0 = _init_state(comps, n)
+    state0 = _init_state(comps, n, sources)
     state, active, k, work = jax.lax.while_loop(
         cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0)))
     return IterationResult(state=state, iterations=_host(k, int),
@@ -321,8 +360,8 @@ def iterate_graph(g: Graph, comps, plans, model: str = "pull+",
 # ---------------------------------------------------------------------------
 
 def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
-                     tol: float = 0.0,
-                     dense_threshold: float = 0.05) -> IterationResult:
+                     tol: float = 0.0, dense_threshold: float = 0.05,
+                     sources: Optional[dict] = None) -> IterationResult:
     """Gemini's signature feature: each iteration picks the propagation
     direction from the frontier density — a dense frontier favours the
     pull-side segment reduce (sequential reads, no contention), a sparse
@@ -333,7 +372,7 @@ def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     if not all(plan_idempotent(p) for p in plans):
         return iterate_graph(g, comps, plans, model="pull-",
-                             max_iter=max_iter, tol=tol)
+                             max_iter=max_iter, tol=tol, sources=sources)
     comps_by_idx = {cr.idx: cr for cr in comps}
     pull_eo, push_eo = g.by_dst, g.by_src
     env_pull = _edge_env(pull_eo.src, pull_eo.dst, pull_eo.weight,
@@ -384,7 +423,7 @@ def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
         _, active, k, _, _ = carry
         return jnp.any(active) & (k < max_iter)
 
-    state0 = _init_state(comps, n)
+    state0 = _init_state(comps, n, sources)
     state, active, k, work, pulls = jax.lax.while_loop(
         cond, body,
         (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0),
@@ -400,7 +439,8 @@ def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
 # ---------------------------------------------------------------------------
 
 def iterate_dense(g: Graph, comps, plans, model: str = "pull+",
-                  max_iter: Optional[int] = None, tol: float = 0.0) -> IterationResult:
+                  max_iter: Optional[int] = None, tol: float = 0.0,
+                  sources: Optional[dict] = None) -> IterationResult:
     """Reference engine on a dense [n, n] edge matrix (small graphs only)."""
     n = g.n
     max_iter = max_iter if max_iter is not None else 2 * n + 4
@@ -468,7 +508,7 @@ def iterate_dense(g: Graph, comps, plans, model: str = "pull+",
         _, active, k, _ = carry
         return jnp.any(active) & (k < max_iter)
 
-    state0 = _init_state(comps, n)
+    state0 = _init_state(comps, n, sources)
     state, active, k, work = jax.lax.while_loop(
         cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0)))
     return IterationResult(state=state, iterations=_host(k, int),
@@ -481,7 +521,8 @@ def iterate_dense(g: Graph, comps, plans, model: str = "pull+",
 
 def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
                         model: str = "pull+", max_iter: Optional[int] = None,
-                        tol: float = 0.0) -> IterationResult:
+                        tol: float = 0.0,
+                        sources: Optional[dict] = None) -> IterationResult:
     """Edge-partitioned fused reduction under shard_map.
 
     Each shard: local masked segment-reduce (Gather+Apply); partials merge
@@ -559,7 +600,7 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
             _, active, k, _ = carry
             return jnp.any(active) & (k < max_iter)
 
-        state0 = _init_state(comps, n)
+        state0 = _init_state(comps, n, sources)
         state, active, k, work = jax.lax.while_loop(
             cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0)))
         return state, k[None], work[None]

@@ -42,8 +42,16 @@ class SynthesizedKernels:
         return compile_expr(self.p_expr)
 
     def init_fn(self):
+        """Source-GENERIC init kernel ``init_fn(v, s=None)`` (DESIGN.md §8).
+
+        The on-source branch is only ever read where ``v == s`` (the engine
+        masks everything else to ⊥ per C2), so the source enters as a plain
+        value — a traced scalar works as well as a Python int, which is what
+        lets one compiled executor serve every query source.  ``s=None``
+        (sourceless components, Paths(v)) evaluates the trivial path at each
+        vertex, i.e. ``s := v``."""
         fn = compile_expr(self.i_expr)
-        return lambda v: fn({"v": v, "s": v})   # evaluated per-vertex
+        return lambda v, s=None: fn({"v": v, "s": v if s is None else s})
 
     def describe(self) -> str:
         return (f"I := λv. if (v = s) {self.i_expr} else ⊥\n"
@@ -128,12 +136,20 @@ def _plan_position_ops(round_) -> dict:
 
 def round_structure_key(round_) -> tuple:
     """Structural identity of a round's iteration part: component path
-    functions, sources and plan-position monoids.  Two rounds with the same
-    key synthesize (and compile) the same kernel closures, so downstream
+    functions, sourced-ness and plan-position monoids.  Two rounds with the
+    same key synthesize (and compile) the same kernel closures, so downstream
     compiled-executor caches key on the closure identities this memo keeps
-    stable (DESIGN.md §8)."""
+    stable (DESIGN.md §8).
+
+    The source VALUE is deliberately absent: init kernels are source-generic
+    (``init_fn(v, s)``) and every engine takes the source as runtime data, so
+    BFS(0) and BFS(5) share one closure set — and with it one compiled
+    executor — instead of retracing the fixpoint per query source.  Only
+    whether a component has a source at all (Paths(s,·) vs Paths(v)) is
+    structural: it decides the ⊥-masking shape of the initial state."""
     ops = _plan_position_ops(round_)
-    return tuple((comp.idx, comp.f.kind, comp.source, ops[comp.idx])
+    return tuple((comp.idx, comp.f.kind, comp.source is not None,
+                  ops[comp.idx])
                  for comp in round_.components)
 
 
@@ -167,15 +183,23 @@ def synthesize_round(round_) -> dict:
 
 @dataclasses.dataclass(frozen=True)
 class DirectKernels:
-    """User-supplied kernels, same shape the synthesizer produces."""
+    """User-supplied kernels, same shape the synthesizer produces.
+
+    ``init_fn`` may be source-generic (``(v, s) → value`` with ``source``
+    naming the default query source) or legacy single-argument (``v →
+    value`` with the source baked into the closure).  Only the source-
+    generic form lets the compiled-executor cache serve every source from
+    one trace and admits ``run_direct(..., sources=[...])`` batching; the
+    engines detect the arity and support both."""
     name: str
     rop: str
     dtype: str                      # "int" | "float"
     p_fn: object                    # env → value
-    init_fn: object                 # v → value
+    init_fn: object                 # (v, s) → value  (or legacy v → value)
     e_fn: Optional[object] = None   # epilogue
     tol: float = 0.0
     max_iter: Optional[int] = None
+    source: Optional[int] = None    # default query source (None = sourceless)
 
 
 def pagerank_kernels(n: int, gamma: float = 0.85, tol: float = 1e-6,

@@ -150,12 +150,19 @@ ALL_SPECS = {
 from repro.core.synthesis import DirectKernels, pagerank_kernels  # noqa: E402
 
 
+# The init kernels are SOURCE-GENERIC (``init_fn(v, s)`` + a ``source``
+# default): the engines pass the query source as runtime data, so one
+# compiled executor serves every source and ``run_direct(..., sources=[...])``
+# can batch queries (DESIGN.md §8/§9).  The engine's ⊥-mask keeps every
+# vertex but s at the reduction identity, exactly like the synthesized path.
+
 def handwritten_sssp(s: int) -> DirectKernels:
     import jax.numpy as jnp
     return DirectKernels(
         name="sssp", rop="min", dtype="float",
         p_fn=lambda env: env["n"] + env["w"],
-        init_fn=lambda v: jnp.where(v == s, 0.0, jnp.inf))
+        init_fn=lambda v, s: jnp.where(v == s, 0.0, jnp.inf),
+        source=s)
 
 
 def handwritten_bfs_depth(s: int) -> DirectKernels:
@@ -164,7 +171,8 @@ def handwritten_bfs_depth(s: int) -> DirectKernels:
     return DirectKernels(
         name="bfs", rop="min", dtype="int",
         p_fn=lambda env: env["n"] + 1,
-        init_fn=lambda v: jnp.where(v == s, 0, identity("min", jnp.int32)))
+        init_fn=lambda v, s: jnp.where(v == s, 0, identity("min", jnp.int32)),
+        source=s)
 
 
 def handwritten_cc() -> DirectKernels:
@@ -179,7 +187,8 @@ def handwritten_wp(s: int) -> DirectKernels:
     return DirectKernels(
         name="wp", rop="max", dtype="float",
         p_fn=lambda env: jnp.minimum(env["n"], env["c"]),
-        init_fn=lambda v: jnp.where(v == s, jnp.inf, -jnp.inf))
+        init_fn=lambda v, s: jnp.where(v == s, jnp.inf, -jnp.inf),
+        source=s)
 
 
 def handwritten_pagerank(n: int, gamma: float = 0.85) -> DirectKernels:

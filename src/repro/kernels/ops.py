@@ -15,16 +15,22 @@ fused in the same launch) unless the push direction is forced, in which
 case the push− scatter recompute runs instead.
 
 The fixpoint itself is compiled once per (plan structure, kernel set,
-graph shape, direction) and memoized in ``_EXEC_CACHE``: repeated queries,
-multi-round programs (RDS, Trust) and benchmark repeats reuse the traced
-``lax.while_loop`` instead of rebuilding it per call (DESIGN.md §8).
+graph shape, direction) and memoized in ``_EXEC_CACHE`` — a true LRU keyed
+WITHOUT the query source: the source vertex enters the compiled program as
+a traced argument (``run(*arrays, srcs)``), not a closure constant, so a
+32-source BFS/SSSP sweep reuses ONE traced ``lax.while_loop`` instead of
+retracing per source (DESIGN.md §8).  ``iterate_pallas_batch`` goes one
+step further and ``jax.vmap``s the same fixpoint over a batch of sources
+sharing one blocked-ELL layout: B concurrent queries per launch, per-query
+convergence via the existing active mask (DESIGN.md §9).
 
 The other wrappers expose the embedding-bag and ELL-softmax kernels behind
 plain jit'd functions that the models call.
 """
 from __future__ import annotations
 
-from typing import Optional
+from collections import OrderedDict
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,10 +60,10 @@ def _plan_levels(plan):
 
 
 # ---------------------------------------------------------------------------
-# Compiled-executor cache.
+# Compiled-executor cache (true LRU, source-free keys).
 # ---------------------------------------------------------------------------
 
-_EXEC_CACHE: dict = {}
+_EXEC_CACHE: OrderedDict = OrderedDict()
 _EXEC_CACHE_MAX = 128
 
 
@@ -69,10 +75,33 @@ def executor_cache_size() -> int:
     return len(_EXEC_CACHE)
 
 
+def _exec_cache_get(key):
+    hit = _EXEC_CACHE.get(key)
+    if hit is None:
+        return None
+    _EXEC_CACHE.move_to_end(key)       # hits refresh recency: under serving
+    return hit[0]                      # churn the hot executor survives
+
+
+def _exec_cache_put(key, run, comps) -> None:
+    while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:
+        _EXEC_CACHE.popitem(last=False)          # evict least-recently-USED
+    # The key carries id(p_fn)/id(init_fn)/id(e_fn).  Keep strong references
+    # to exactly those closures in the value so a GC'd kernel set can never
+    # hand its id to a new closure while the entry is alive (the id-reuse
+    # hazard structure.blocked_ell_cached guards with a weakref; functions
+    # are tiny, so pinning them is the simpler mirror).
+    keyed = tuple((cr.p_fn, cr.init_fn, cr.e_fn) for cr in comps)
+    _EXEC_CACHE[key] = (run, keyed)
+
+
 def _comps_key(comps):
     """Kernel-set identity: stable across calls because synthesize_round
-    memoizes its compiled closures per round structure."""
-    return tuple((cr.idx, cr.op, str(cr.dtype), cr.source,
+    memoizes its compiled closures per round structure.  The source VALUE is
+    deliberately absent — it is a traced argument of the executor, so every
+    query source shares one entry; only sourced-ness (the ⊥-masking shape of
+    the initial state) is structural."""
+    return tuple((cr.idx, cr.op, str(cr.dtype), cr.source is not None,
                   id(cr.p_fn), id(cr.init_fn),
                   None if cr.e_fn is None else id(cr.e_fn)) for cr in comps)
 
@@ -98,16 +127,25 @@ def _directions_used(direction: str, idempotent: bool):
 
 
 def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
-                           interpret, use, dense_threshold):
+                           interpret, use, dense_threshold, batch=False):
     """Trace + jit the whole fixpoint once.  The returned function takes the
-    blocked-ELL arrays (one 5-tuple per direction in ``use``, pull first)
-    and out-degrees as arguments (NOT closure constants), so one compiled
-    executor serves every graph with the same padded shapes.
+    blocked-ELL arrays (one 5-tuple per direction in ``use``, pull first),
+    out-degrees, AND the per-component query sources as arguments (NOT
+    closure constants): ``run(*arrays, srcs)`` with ``srcs`` an [n_comps]
+    int32 vector, so one compiled executor serves every graph with the same
+    padded shapes and EVERY query source without retracing.
 
     ``use`` = ("pull",) | ("push",) | ("pull", "push"); with both, each
     iteration picks its sweep by frontier density via ``lax.cond`` — both
     branches trace (two pallas_calls appear in the HLO) but exactly one
-    executes per iteration at runtime."""
+    executes per iteration at runtime.
+
+    With ``batch=True`` the same fixpoint is ``jax.vmap``ped over a leading
+    source axis (``srcs`` [B, n_comps]; the ELL arrays stay shared): state
+    and frontier grow a batch dimension, the while_loop's batching rule
+    keeps per-query convergence exact (converged queries stop updating via
+    the per-element carry select), and the direction lax.cond lowers to a
+    per-query select — bit-identical to the sequential runs (DESIGN.md §9)."""
     comps_by_idx = {cr.idx: cr for cr in comps}
     plan_levels = tuple(tuple(_plan_levels(p)) for p in plans)
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
@@ -118,6 +156,7 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     def run(*arrays):
         ell = {d: arrays[5 * i:5 * i + 5] for i, d in enumerate(use)}
         out_deg = arrays[5 * len(use)]
+        srcs = arrays[5 * len(use) + 1]
         n_pad = ell[use[0]][0].shape[0]
         out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
             jnp.maximum(out_deg, 1).astype(jnp.float32))
@@ -128,7 +167,9 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             return jnp.full((n_pad,), ident, x.dtype).at[:n].set(x)
 
         def init_state():
-            base = iterate._init_state(comps, n)
+            overrides = {cr.idx: srcs[i] for i, cr in enumerate(comps)
+                         if cr.source is not None}
+            base = iterate._init_state(comps, n, overrides)
             return tuple(pad_state(s, cr.ident)
                          for s, cr in zip(base, comps))
 
@@ -209,13 +250,58 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                          jnp.float32(0), jnp.int32(0)))
         return state, k, work, pushes
 
+    if batch:
+        n_shared = 5 * len(use) + 1          # ELL tuples + out_deg: unbatched
+        return jax.jit(jax.vmap(run, in_axes=(None,) * n_shared + (0,)))
     return jax.jit(run)
+
+
+def _srcs_vector(comps, sources=None):
+    """Per-component source ids as an [n_comps] int32 vector: the executor's
+    traced source argument.  ``sources`` optionally overrides ``cr.source``
+    per component index (sourced components only — sourced-ness is
+    structural); sourceless components carry an ignored −1 placeholder."""
+    vals = []
+    for cr in comps:
+        if cr.source is None:
+            vals.append(-1)
+        elif sources is not None and cr.idx in sources:
+            vals.append(int(sources[cr.idx]))
+        else:
+            vals.append(int(cr.source))
+    return jnp.asarray(vals, jnp.int32)
+
+
+def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
+                     interpret, use, dense_threshold, batch=False):
+    """Cache lookup / build of the compiled fixpoint, plus the shared
+    argument prefix (ELL arrays + out-degrees) it runs on."""
+    ells = {"pull": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
+                                       direction="in") if "pull" in use else None,
+            "push": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
+                                       direction="out") if "push" in use else None}
+    key = (g.n, tuple(tuple(_plan_levels(p)) for p in plans),
+           _comps_key(comps), max_iter, tol, block_v, block_e, interpret,
+           use, dense_threshold, batch)
+    run = _exec_cache_get(key)
+    if run is None:
+        run = _build_pallas_executor(comps, plans, g.n, max_iter, tol,
+                                     block_v, block_e, interpret, use,
+                                     dense_threshold, batch=batch)
+        _exec_cache_put(key, run, comps)
+    args = []
+    for d in use:
+        e = ells[d]
+        args += [e.nbrs, e.weight, e.capacity, e.mask, e.tile_nnz]
+    args.append(g.out_deg)
+    return run, args
 
 
 def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    tol: float = 0.0, block_v: int = 8, block_e: int = 128,
                    interpret: Optional[bool] = None, direction: str = "auto",
-                   dense_threshold: float = DENSE_FRONTIER) -> iterate.IterationResult:
+                   dense_threshold: float = DENSE_FRONTIER,
+                   sources: Optional[dict] = None) -> iterate.IterationResult:
     """Fixpoint of the fused reduction with single-launch Pallas edge sweeps.
 
     ``direction`` selects the sweep model per DESIGN.md §2:
@@ -225,6 +311,10 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
               rounds run pull− full recompute.
       "pull"  dst-keyed gather sweeps only (Def. 1 / Def. 2).
       "push"  src-keyed scatter sweeps only (Def. 3 / Def. 4).
+
+    ``sources`` optionally overrides per-component query sources; overrides
+    (like the spec's own sources) are runtime arguments of the compiled
+    executor, never trace constants.
 
     The returned result carries ``pull_iters``/``push_iters`` — the runtime
     per-direction iteration counts — which are also accumulated into
@@ -236,26 +326,9 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
     use = _directions_used(direction, idempotent)
-    ells = {"pull": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
-                                       direction="in") if "pull" in use else None,
-            "push": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
-                                       direction="out") if "push" in use else None}
-    key = (n, tuple(tuple(_plan_levels(p)) for p in plans), _comps_key(comps),
-           max_iter, tol, block_v, block_e, interpret, use, dense_threshold)
-    run = _EXEC_CACHE.get(key)
-    if run is None:
-        while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:     # evict oldest entry
-            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
-        run = _build_pallas_executor(comps, plans, n, max_iter, tol,
-                                     block_v, block_e, interpret, use,
-                                     dense_threshold)
-        _EXEC_CACHE[key] = run
-    args = []
-    for d in use:
-        e = ells[d]
-        args += [e.nbrs, e.weight, e.capacity, e.mask, e.tile_nnz]
-    args.append(g.out_deg)
-    state, k, work, pushes = run(*args)
+    run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
+                                 block_e, interpret, use, dense_threshold)
+    state, k, work, pushes = run(*args, _srcs_vector(comps, sources))
     k_i = iterate._host(k, int)
     p_i = iterate._host(pushes, int)
     if isinstance(k_i, int) and isinstance(p_i, int):
@@ -267,4 +340,60 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
         edge_work=iterate._host(work, float))
     res.push_iters = p_i
     res.pull_iters = k_i - p_i        # valid for ints and tracers alike
+    return res
+
+
+def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
+                         max_iter: Optional[int] = None, tol: float = 0.0,
+                         block_v: int = 8, block_e: int = 128,
+                         interpret: Optional[bool] = None,
+                         direction: str = "auto",
+                         dense_threshold: float = DENSE_FRONTIER) -> iterate.IterationResult:
+    """Run B concurrent queries of one fused round in ONE launch (DESIGN.md
+    §9): the compiled fixpoint of ``iterate_pallas``, ``jax.vmap``ped over a
+    batch of query sources sharing one blocked-ELL layout.
+
+    ``sources`` is either a [B] sequence of source ids (applied to every
+    sourced component — the single-source query case: BFS/SSSP/WP sweeps) or
+    a [B, n_comps] array of per-component sources.  Each query converges
+    independently through its own active mask (the while_loop batching rule
+    selects per-element carries), so results are bit-identical to B
+    sequential ``iterate_pallas`` calls; the batch reuses the SAME traced
+    executor family (one ``_EXEC_CACHE`` entry per direction set, regardless
+    of B — jit re-specializes on the batch shape inside the entry).
+
+    Returns an ``IterationResult`` whose ``state`` entries are [B, n], and
+    whose ``iterations`` / ``edge_work`` / ``push_iters`` / ``pull_iters``
+    are per-query [B] vectors."""
+    n = g.n
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    max_iter = max_iter if max_iter is not None else 2 * n + 4
+    idempotent = all(iterate.plan_idempotent(p) for p in plans)
+    use = _directions_used(direction, idempotent)
+    srcs = jnp.asarray(sources, jnp.int32)
+    if srcs.ndim == 1:                     # [B] → [B, n_comps] per-component
+        per_comp = jnp.asarray([-1 if cr.source is None else 0
+                                for cr in comps], jnp.int32)
+        srcs = jnp.where(per_comp[None, :] < 0, per_comp[None, :],
+                         srcs[:, None])
+    if srcs.ndim != 2 or srcs.shape[1] != len(comps):
+        raise ValueError(f"sources must be [B] or [B, {len(comps)}], got "
+                         f"shape {srcs.shape}")
+    run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
+                                 block_e, interpret, use, dense_threshold,
+                                 batch=True)
+    state, k, work, pushes = run(*args, srcs)
+    res = iterate.IterationResult(
+        state=tuple(s[:, :n] for s in state),
+        iterations=k,                     # [B] per-query iteration counts
+        edge_work=work)                   # [B] per-query edge work
+    res.push_iters = pushes
+    res.pull_iters = k - pushes
+    try:
+        _er.SWEEP_STATS["push_iters"] += int(jnp.sum(pushes))
+        _er.SWEEP_STATS["pull_iters"] += int(jnp.sum(k - pushes))
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        pass
     return res
