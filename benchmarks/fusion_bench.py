@@ -17,6 +17,15 @@ the adaptive engine vs the pull-only engine — the quantity the
 direction-optimized engine must keep ≤ pull — and writes machine-readable
 ``BENCH_pallas.json`` so the perf trajectory is tracked across PRs.
 
+``--engines pallas`` also runs the push-resolution section (DESIGN.md §10):
+the adaptive engine with the dst-sorted segment resolution vs the
+reference full-rectangle scatter on the frontier workloads — resolution
+edge work (Σ nnz of the resolution tiles actually processed vs
+push_iters·rectangle), traced launches per class, and wall time.  The
+gated property is frontier-proportionality: sorted resolution work must
+stay strictly under the scatter rectangle whenever push iterations ran,
+and the sorted/scatter work ratio must not regress vs the baseline.
+
 ``--engines pallas`` also runs the batched-throughput section (DESIGN.md
 §9): a B-source sweep of one query shape served sequentially (the source
 is a traced executor argument, so the sweep must hold ONE executor-cache
@@ -56,6 +65,7 @@ from repro.kernels.ops import _plan_levels
 SIMPLE = ["WSP", "NWR", "RADIUS"]
 MULTI = ["DRR", "Trust", "RDS"]
 DIRECTION = ["BFS", "SSSP"]             # sparse-frontier direction workloads
+RESOLUTION = ["BFS", "SSSP"]            # push-resolution (sorted vs scatter)
 BATCHED = ["BFS", "SSSP"]               # single-source batched-query sweeps
 _BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
 _BATCH_B = 8                            # sources per batched sweep
@@ -118,6 +128,50 @@ def bench_direction(g, gname: str, weighted: bool, name: str) -> dict:
     }
 
 
+def bench_resolution(g, gname: str, weighted: bool, name: str) -> dict:
+    """Push-resolution section (DESIGN.md §10): the adaptive engine with the
+    dst-sorted segment resolution vs the reference full-rectangle scatter on
+    one sparse-frontier workload.  The acceptance quantity is RESOLUTION
+    edge work: sorted must stay frontier-proportional (Σ nnz of the
+    resolution tiles actually processed), strictly under the scatter path's
+    `push_iters · n_pad · width` rectangle cost, with bit-identical values.
+    Wall time is reported, never gated (interpret-mode CPU noise)."""
+    from repro.kernels import edge_reduce as er
+    prog = fusion.fuse(U.ALL_SPECS[name]())
+
+    def one(resolution):
+        engine.clear_program_caches()
+        er.reset_sweep_stats()
+        t, res = timed(lambda: engine.run_program(
+            g, prog, engine="pallas", push_resolution=resolution), repeats=1)
+        return t, res, dict(er.SWEEP_STATS)
+
+    t_sorted, res_sorted, s_sorted = one("sorted")
+    t_scatter, res_scatter, s_scatter = one("scatter")
+    import numpy as np
+    assert np.array_equal(np.asarray(res_sorted.value),
+                          np.asarray(res_scatter.value)), \
+        f"{name}: sorted resolution diverged from scatter"
+    assert res_sorted.stats.push_iters == res_scatter.stats.push_iters
+    # the section must actually exercise push resolution — if a heuristic
+    # change stops these workloads pushing, fail loud instead of silently
+    # gating nothing
+    assert res_sorted.stats.push_iters >= 1, \
+        f"{name}: no push iterations — resolution section is vacuous"
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "push_iters": res_sorted.stats.push_iters,
+        "num_edges": g.num_edges,
+        "edge_work": float(res_sorted.stats.edge_work),
+        "resolve_work_sorted": float(res_sorted.stats.resolve_work),
+        "resolve_work_scatter": float(res_scatter.stats.resolve_work),
+        "resolve_launches": s_sorted["resolve_launches"],
+        "launches_traced_sorted": s_sorted["launches"],
+        "launches_traced_scatter": s_scatter["launches"],
+        "t_sorted_ms": t_sorted * 1e3, "t_scatter_ms": t_scatter * 1e3,
+    }
+
+
 def bench_batched(g, gname: str, weighted: bool, name: str,
                   batch: int = _BATCH_B) -> dict:
     """Batched-throughput section (DESIGN.md §9): B single-source queries of
@@ -170,21 +224,27 @@ def bench_batched(g, gname: str, weighted: bool, name: str,
 
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         engines=("pull", "push"), json_out=None, direction_usecases=None,
-        batched_usecases=None):
+        batched_usecases=None, resolution_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
     batched_rows = []
+    resolution_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
     if batched_usecases and "pallas" not in engines:
         raise ValueError("batched_usecases bench the pallas engine's "
                          "vmapped executors; add 'pallas' to engines")
+    if resolution_usecases and "pallas" not in engines:
+        raise ValueError("resolution_usecases bench the pallas engine's "
+                         "push resolution; add 'pallas' to engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
     if batched_usecases is None:
         batched_usecases = BATCHED if "pallas" in engines else []
+    if resolution_usecases is None:
+        resolution_usecases = RESOLUTION if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -230,6 +290,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                 for name in direction_usecases:
                     direction_rows.append(
                         bench_direction(g, gname, weighted, name))
+                for name in resolution_usecases:
+                    resolution_rows.append(
+                        bench_resolution(g, gname, weighted, name))
                 for name in batched_usecases:
                     batched_rows.append(
                         bench_batched(g, gname, weighted, name))
@@ -246,6 +309,18 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
              ["graph", "weights", "usecase", "iters", "work_auto",
               "work_pull", "push_iters", "pull_iters", "sweeps_auto",
               "sweeps_pull"])
+    if resolution_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["push_iters"], round(r["resolve_work_sorted"], 1),
+               round(r["resolve_work_scatter"], 1),
+               round(r["resolve_work_sorted"]
+                     / max(r["resolve_work_scatter"], 1.0), 4),
+               r["resolve_launches"],
+               round(r["t_sorted_ms"], 1), round(r["t_scatter_ms"], 1)]
+              for r in resolution_rows],
+             ["graph", "weights", "usecase", "push_iters", "res_work_sorted",
+              "res_work_scatter", "res_ratio", "resolve_launches",
+              "t_sorted_ms", "t_scatter_ms"])
     if batched_rows:
         emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
                r["batch"], r["exec_entries_seq"], r["exec_entries_batched"],
@@ -258,9 +333,10 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
               "queries_per_launch", "t_seq_ms", "t_batched_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
+           "resolution_rows": resolution_rows,
            "batched_rows": batched_rows,
            "table": out}
-    if json_rows or direction_rows or batched_rows:
+    if json_rows or direction_rows or batched_rows or resolution_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -333,6 +409,45 @@ def compare_baseline(current: dict, baseline: dict,
                 errors.append(
                     f"{key}: push/pull work advantage regressed "
                     f"{adv_now:.3f} > baseline {adv_base:.3f} (+{rtol:.0%})")
+    base_res = {_row_key(r): r for r in baseline.get("resolution_rows", [])}
+    for r in current.get("resolution_rows", []):
+        key = _row_key(r)
+        # Standing frontier-proportionality bounds, not just a diff.
+        # (bench_resolution itself asserts push_iters >= 1, so the section
+        # can never silently gate nothing.)  Two bounds: under the padded
+        # scatter rectangle (the cost the sorted path replaces), and —
+        # the sharper one — strictly under push_iters·|E|, which is
+        # exactly what fully-disengaged tile compaction would cost (every
+        # real slot reduced every push iteration).  A trip on the second
+        # means the compaction stopped engaging.
+        if r["push_iters"] > 0:
+            if not (r["resolve_work_sorted"] < r["resolve_work_scatter"]):
+                errors.append(
+                    f"{key}: sorted resolution work "
+                    f"{r['resolve_work_sorted']:.0f} not under scatter "
+                    f"{r['resolve_work_scatter']:.0f}")
+            full_nnz = r["push_iters"] * r.get("num_edges", 0)
+            if full_nnz and not (r["resolve_work_sorted"] < full_nnz):
+                errors.append(
+                    f"{key}: sorted resolution work "
+                    f"{r['resolve_work_sorted']:.0f} ≥ push_iters·|E| = "
+                    f"{full_nnz:.0f} — tile compaction disengaged")
+        b = base_res.get(key)
+        if b is None:
+            continue
+        if b["resolve_work_scatter"] and r["resolve_work_scatter"]:
+            ratio_now = r["resolve_work_sorted"] / r["resolve_work_scatter"]
+            ratio_base = b["resolve_work_sorted"] / b["resolve_work_scatter"]
+            if ratio_now > ratio_base * (1 + rtol):
+                errors.append(
+                    f"{key}: resolution-work ratio regressed "
+                    f"{ratio_now:.4f} > baseline {ratio_base:.4f} "
+                    f"(+{rtol:.0%})")
+        if r["launches_traced_sorted"] > b["launches_traced_sorted"]:
+            errors.append(
+                f"{key}: sorted traced sweep launches "
+                f"{r['launches_traced_sorted']} > baseline "
+                f"{b['launches_traced_sorted']}")
     base_batched = {_row_key(r): r for r in baseline.get("batched_rows", [])}
     for r in current.get("batched_rows", []):
         key = _row_key(r)
@@ -372,6 +487,10 @@ if __name__ == "__main__":
                     help="comma list of batched-sweep workloads "
                          f"(default {','.join(BATCHED)} when pallas is "
                          "benchmarked; pass '' to skip)")
+    ap.add_argument("--resolution", default=None, metavar="NAMES",
+                    help="comma list of push-resolution workloads "
+                         f"(default {','.join(RESOLUTION)} when pallas is "
+                         "benchmarked; pass '' to skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
                          f"(default {_JSON_PATH})")
@@ -396,13 +515,15 @@ if __name__ == "__main__":
                   f"results to {json_out}")
     batched = None if args.batched is None else \
         tuple(u for u in args.batched.split(",") if u)
+    resolution = None if args.resolution is None else \
+        tuple(u for u in args.resolution.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
                  engines=engines, json_out=json_out,
-                 batched_usecases=batched)
+                 batched_usecases=batched, resolution_usecases=resolution)
     if baseline is not None:
         if not (result["rows"] or result["direction_rows"]
-                or result["batched_rows"]):
+                or result["batched_rows"] or result["resolution_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -415,4 +536,5 @@ if __name__ == "__main__":
         print(f"baseline check OK ({args.baseline}: "
               f"{len(baseline.get('rows', []))} rows, "
               f"{len(baseline.get('direction_rows', []))} direction rows, "
+              f"{len(baseline.get('resolution_rows', []))} resolution rows, "
               f"{len(baseline.get('batched_rows', []))} batched rows)")

@@ -43,6 +43,8 @@ def clear_program_caches():
     from repro.graph import structure
     synthesis._ROUND_CACHE.clear()
     structure._ELL_CACHE.clear()
+    structure._RES_CACHE.clear()
+    structure._WDEG_CACHE.clear()
     try:
         from repro.kernels import ops as kops
         kops.clear_executor_cache()
@@ -54,7 +56,8 @@ def program_cache_stats() -> dict:
     from repro.core import synthesis
     from repro.graph import structure
     out = {"synth_rounds": len(synthesis._ROUND_CACHE),
-           "ell_layouts": len(structure._ELL_CACHE)}
+           "ell_layouts": len(structure._ELL_CACHE),
+           "push_resolutions": len(structure._RES_CACHE)}
     try:
         from repro.kernels import ops as kops
         out["pallas_executors"] = kops.executor_cache_size()
@@ -72,6 +75,10 @@ class ExecStats:
                                     # (~0 on round-cache hits)
     push_iters: int = 0             # runtime per-direction iteration counts
     pull_iters: int = 0             # (direction-aware engines; 0 elsewhere)
+    resolve_work: float = 0.0       # push-resolution edge work (pallas
+                                    # engine; Σ resolution-tile nnz under
+                                    # "sorted", full rectangle under
+                                    # "scatter", 0 on pull iterations)
 
 
 @dataclasses.dataclass
@@ -136,7 +143,7 @@ def _round_runtime(round_, synth):
 
 def _run_iteration(g, round_: FusedRound, engine: str, model: str,
                    mesh, axes, max_iter, tol, synth_override=None,
-                   source=None):
+                   source=None, push_resolution=None, switch_k="auto"):
     synth, synth_ms = _synthesize_timed(round_, synth_override)
     comps, plans = _round_runtime(round_, synth)
     sources = _source_overrides(round_, source)
@@ -161,7 +168,8 @@ def _run_iteration(g, round_: FusedRound, engine: str, model: str,
         from repro.kernels import ops as kops
         res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol,
                                   direction=_pallas_direction(model),
-                                  sources=sources)
+                                  sources=sources, switch_k=switch_k,
+                                  push_resolution=push_resolution)
     else:
         raise ValueError(f"unknown engine {engine}")
     return res, comps, synth_ms
@@ -191,29 +199,40 @@ def _accumulate(stats: ExecStats, res, synth_ms: float) -> None:
     stats.synth_ms += synth_ms
     pi = getattr(res, "push_iters", 0)
     li = getattr(res, "pull_iters", 0)
+    rw = getattr(res, "resolve_work", 0.0)
     if isinstance(pi, int):
         stats.push_iters += pi
     if isinstance(li, int):
         stats.pull_iters += li
+    if isinstance(rw, (int, float)):
+        stats.resolve_work += float(rw)
 
 
 def run_program(g, prog: FusedProgram, engine: str = "pull",
                 model: Optional[str] = None, mesh=None, axes=("data",),
                 max_iter: Optional[int] = None, tol: float = 0.0,
-                source: Optional[int] = None) -> ExecResult:
+                source: Optional[int] = None,
+                push_resolution: Optional[str] = None,
+                switch_k="auto") -> ExecResult:
     """Execute a fused program.  ``source`` optionally re-sources every
     sourced component to one query source — the program (and with it every
     compiled-executor cache entry) is source-generic, so querying another
-    source never re-fuses, re-synthesizes or retraces (DESIGN.md §8)."""
+    source never re-fuses, re-synthesizes or retraces (DESIGN.md §8).
+
+    ``push_resolution`` ("sorted"/"scatter", pallas engine only) selects
+    the push sweep's dst-keyed resolution path; ``switch_k`` tunes the
+    direction switch per query (DESIGN.md §2/§10) — None falls back to the
+    frontier-fraction threshold, a number overrides the Gemini k."""
     stats = ExecStats()
     named: dict = {}
     final = None
     for bind_name, round_ in prog.rounds:
         env: dict = dict(named)
         if round_.leaves:
-            res, comps, synth_ms = _run_iteration(g, round_, engine, model,
-                                                  mesh, axes, max_iter, tol,
-                                                  source=source)
+            res, comps, synth_ms = _run_iteration(
+                g, round_, engine, model, mesh, axes, max_iter, tol,
+                source=source, push_resolution=push_resolution,
+                switch_k=switch_k)
             _accumulate(stats, res, synth_ms)
             for leaf in round_.leaves:
                 env[leaf.name] = res.state[plan_output(leaf.plan)]
@@ -228,8 +247,9 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
 def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                       engine: str = "pallas", model: Optional[str] = None,
                       mesh=None, axes=("data",),
-                      max_iter: Optional[int] = None,
-                      tol: float = 0.0) -> list:
+                      max_iter: Optional[int] = None, tol: float = 0.0,
+                      push_resolution: Optional[str] = None,
+                      switch_k="auto") -> list:
     """Serve B concurrent single-source queries of one program in ONE
     compiled launch per round (DESIGN.md §9).
 
@@ -257,6 +277,7 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
         return [run_program(g, prog, engine=engine, model=model, mesh=mesh,
                             axes=axes, max_iter=max_iter, tol=tol, source=s)
                 for s in src_list]
+    pallas_kw = dict(switch_k=switch_k, push_resolution=push_resolution)
     from repro.kernels import ops as kops
     stats = [ExecStats() for _ in range(B)]
     named: list = [{} for _ in range(B)]
@@ -268,10 +289,11 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
             comps, plans = _round_runtime(round_, synth)
             res = kops.iterate_pallas_batch(
                 g, comps, plans, src_list, max_iter=max_iter, tol=tol,
-                direction=_pallas_direction(model))
+                direction=_pallas_direction(model), **pallas_kw)
             iters = np.asarray(res.iterations)
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
+            res_ws = np.asarray(res.resolve_work)
             for b in range(B):
                 st = stats[b]
                 st.rounds += 1
@@ -280,6 +302,7 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                 st.synth_ms += synth_ms
                 st.push_iters += int(pushes[b])
                 st.pull_iters += int(iters[b]) - int(pushes[b])
+                st.resolve_work += float(res_ws[b])
                 for leaf in round_.leaves:
                     envs[b][leaf.name] = res.state[plan_output(leaf.plan)][b]
         for b in range(B):
@@ -300,7 +323,9 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
                mesh=None, axes=("data",),
                model: Optional[str] = None,
                source: Optional[int] = None,
-               sources: Optional[Sequence] = None):
+               sources: Optional[Sequence] = None,
+               push_resolution: Optional[str] = None,
+               switch_k="auto"):
     """Execute a direct kernel set on one engine.
 
     ``model`` optionally pins the pallas sweep direction ("pull"/"push");
@@ -323,6 +348,7 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
             "DirectKernels.source requires a source-generic init_fn(v, s); "
             "a single-argument closure bakes its own source, so re-sourcing "
             "would move the ⊥-mask without moving the init value")
+    pallas_kw = dict(switch_k=switch_k, push_resolution=push_resolution)
     if sources is not None:
         if engine == "pallas":
             from repro.kernels import ops as kops
@@ -333,16 +359,18 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
             res = kops.iterate_pallas_batch(
                 g, [comp], [Prim(dk.rop, 0)], sources,
                 max_iter=dk.max_iter, tol=dk.tol,
-                direction=_pallas_direction(model))
+                direction=_pallas_direction(model), **pallas_kw)
             iters = np.asarray(res.iterations)
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
+            res_ws = np.asarray(res.resolve_work)
             return [ExecResult(
                 value=res.state[0][b], named={},
                 stats=ExecStats(rounds=1, iterations=int(iters[b]),
                                 edge_work=float(works[b]),
                                 push_iters=int(pushes[b]),
-                                pull_iters=int(iters[b]) - int(pushes[b])))
+                                pull_iters=int(iters[b]) - int(pushes[b]),
+                                resolve_work=float(res_ws[b])))
                 for b in range(len(iters))]
         return [run_direct(g, dk, engine=engine, mesh=mesh, axes=axes,
                            model=model, source=int(s)) for s in sources]
@@ -378,7 +406,7 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
         res = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
                                   tol=dk.tol,
                                   direction=_pallas_direction(model),
-                                  sources=src_over)
+                                  sources=src_over, **pallas_kw)
     else:
         raise ValueError(engine)
     stats = ExecStats()

@@ -34,7 +34,7 @@ from repro.compat import shard_map
 from repro.core.fusion import FusedRound, Lex, Prim
 from repro.graph import segment
 from repro.graph.partition import partition_edges
-from repro.graph.structure import Graph
+from repro.graph.structure import Graph, w_out_deg as structure_w_out_deg
 
 DTYPES = {"int": jnp.int32, "float": jnp.float32, "vert": jnp.int32}
 
@@ -238,10 +238,15 @@ def _init_state(comps, n: int, sources: Optional[dict] = None):
     return tuple(state)
 
 
-def _edge_env(src, dst, w, c, out_deg, n):
-    return {"w": w, "c": c, "esrc": src, "edst": dst,
-            "outdeg": jnp.maximum(out_deg, 1).astype(jnp.float32)[src],
-            "nv": jnp.float32(n)}
+def _edge_env(src, dst, w, c, out_deg, n, wdeg=None):
+    env = {"w": w, "c": c, "esrc": src, "edst": dst,
+           "outdeg": jnp.maximum(out_deg, 1).astype(jnp.float32)[src],
+           "nv": jnp.float32(n)}
+    # weighted out-degree normalizer ("wdeg", weighted-PageRank-style P);
+    # computed ONCE per graph (structure.w_out_deg) so every engine — and
+    # both pallas sweep directions — divides by the bit-identical vector
+    env["wdeg"] = jnp.ones_like(env["outdeg"]) if wdeg is None else wdeg[src]
+    return env
 
 
 def _propagate(comps, state, src, env):
@@ -299,7 +304,8 @@ def iterate_graph(g: Graph, comps, plans, model: str = "pull+",
 
     eo = g.by_dst if model.startswith("pull") else g.by_src
     src, dst = eo.src, eo.dst
-    env = _edge_env(src, dst, eo.weight, eo.capacity, g.out_deg, n)
+    env = _edge_env(src, dst, eo.weight, eo.capacity, g.out_deg, n,
+                    wdeg=structure_w_out_deg(g))
     valid_e = jnp.ones_like(src, dtype=bool)
 
     def body(carry):
@@ -375,10 +381,11 @@ def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
                              max_iter=max_iter, tol=tol, sources=sources)
     comps_by_idx = {cr.idx: cr for cr in comps}
     pull_eo, push_eo = g.by_dst, g.by_src
+    wdeg = structure_w_out_deg(g)
     env_pull = _edge_env(pull_eo.src, pull_eo.dst, pull_eo.weight,
-                         pull_eo.capacity, g.out_deg, n)
+                         pull_eo.capacity, g.out_deg, n, wdeg=wdeg)
     env_push = _edge_env(push_eo.src, push_eo.dst, push_eo.weight,
-                         push_eo.capacity, g.out_deg, n)
+                         push_eo.capacity, g.out_deg, n, wdeg=wdeg)
 
     def pull_branch(args):
         state, active = args
@@ -461,6 +468,8 @@ def iterate_dense(g: Graph, comps, plans, model: str = "pull+",
            "edst": jnp.broadcast_to(vs[None, :], (n, n)),
            "outdeg": jnp.broadcast_to(
                jnp.maximum(g.out_deg, 1).astype(jnp.float32)[:, None], (n, n)),
+           "wdeg": jnp.broadcast_to(
+               structure_w_out_deg(g)[:, None], (n, n)),
            "nv": jnp.float32(n)}
 
     _DENSE_RED = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum,
@@ -541,12 +550,14 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
         model = "pull-"
     comps_by_idx = {cr.idx: cr for cr in comps}
     out_deg = jnp.maximum(g.out_deg, 1).astype(jnp.float32)
+    wdeg_v = structure_w_out_deg(g)
 
     def shard_fn(src, dst, w, c, mask):
         src, dst = src[0], dst[0]            # [1, e_loc] → [e_loc]
         w, c, mask = w[0], c[0], mask[0]
         env = {"w": w, "c": c, "esrc": src, "edst": dst,
-               "outdeg": out_deg[src], "nv": jnp.float32(n)}
+               "outdeg": out_deg[src], "wdeg": wdeg_v[src],
+               "nv": jnp.float32(n)}
 
         def cross_plan(plan, red: dict) -> dict:
             """Cross-shard lexicographic combine with monoid collectives only:

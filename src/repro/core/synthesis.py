@@ -214,6 +214,25 @@ def pagerank_kernels(n: int, gamma: float = 0.85, tol: float = 1e-6,
         tol=tol, max_iter=max_iter)
 
 
+def weighted_pagerank_kernels(n: int, gamma: float = 0.85, tol: float = 1e-6,
+                              max_iter: int = 100) -> DirectKernels:
+    """Weighted PageRank: mass flows along an edge in proportion to its
+    weight — P = λn,e. n · w(e) / wdeg(src(e)) with ``wdeg`` the weighted
+    out-degree from the P environment (Σ outgoing weight, precomputed once
+    per graph in ``structure.w_out_deg`` so every engine and both pallas
+    sweep directions normalize by the bit-identical vector); I and E as in
+    unweighted PageRank.  This is the weighted push− epilogue round: on the
+    pallas engine ``model="push"`` runs it as a push− scatter recompute
+    whose dst-sorted resolution reduces the same dst-major rectangle as the
+    pull sweep, so push ≡ pull holds bitwise (DESIGN.md §10)."""
+    return DirectKernels(
+        name="weighted_pagerank", rop="sum", dtype="float",
+        p_fn=lambda env: env["n"] * env["w"] / env["wdeg"],
+        init_fn=lambda v: v * 0 + 1.0 / n,
+        e_fn=lambda env: gamma * env["n"] + (1.0 - gamma) / n,
+        tol=tol, max_iter=max_iter)
+
+
 # ---------------------------------------------------------------------------
 # Backend code generation: printable per-engine source for a kernel set.
 # ---------------------------------------------------------------------------

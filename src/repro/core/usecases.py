@@ -147,7 +147,8 @@ ALL_SPECS = {
 # iteration engines — bypassing fusion and synthesis.
 # ---------------------------------------------------------------------------
 
-from repro.core.synthesis import DirectKernels, pagerank_kernels  # noqa: E402
+from repro.core.synthesis import (DirectKernels, pagerank_kernels,  # noqa: E402
+                                  weighted_pagerank_kernels)
 
 
 # The init kernels are SOURCE-GENERIC (``init_fn(v, s)`` + a ``source``
@@ -193,6 +194,12 @@ def handwritten_wp(s: int) -> DirectKernels:
 
 def handwritten_pagerank(n: int, gamma: float = 0.85) -> DirectKernels:
     return pagerank_kernels(n, gamma)
+
+
+def handwritten_weighted_pagerank(n: int, gamma: float = 0.85) -> DirectKernels:
+    """Edge-weight-proportional PageRank (P = n·w/wdeg(src)) — the weighted
+    push− epilogue round; see synthesis.weighted_pagerank_kernels."""
+    return weighted_pagerank_kernels(n, gamma)
 
 
 HANDWRITTEN = {

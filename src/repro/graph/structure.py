@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import weakref
 from functools import partial
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +36,7 @@ class Graph:
     by_src: EdgeOrder       # sorted by src (push engines)
     in_deg: jnp.ndarray     # [n] int32
     out_deg: jnp.ndarray    # [n] int32
+    w_out_deg: Optional[jnp.ndarray] = None   # [n] float32 Σ outgoing weight
 
     @property
     def num_edges(self) -> int:
@@ -66,8 +68,47 @@ def from_edges(n: int, src, dst, weight=None, capacity=None) -> Graph:
 
     in_deg = np.bincount(dst, minlength=n).astype(np.int32)
     out_deg = np.bincount(src, minlength=n).astype(np.int32)
+    w_out = np.bincount(src, weights=weight.astype(np.float64),
+                        minlength=n).astype(np.float32)
     return Graph(n=n, by_dst=order(dst), by_src=order(src),
-                 in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg))
+                 in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg),
+                 w_out_deg=jnp.asarray(w_out))
+
+
+_WDEG_CACHE: dict = {}
+
+
+def w_out_deg(g: Graph) -> jnp.ndarray:
+    """Weighted out-degree (Σ outgoing edge weight per vertex) as the P
+    environment's ``wdeg`` normalizer (weighted PageRank-style kernels).
+
+    Computed host-side ONCE per graph — `from_edges` stores the raw sums on
+    the Graph and the clamped device vector is memoized here (identity key,
+    weakref-guarded like the layout caches) so per-query serving never pays
+    a host round-trip — and shared by every engine: pull segment ops, push
+    scatters, dense, distributed, and both pallas sweep directions
+    normalize by the bit-identical vector (a per-engine recomputation would
+    associate the float sums differently and break the pull ≡ push bitwise
+    parity the direct-kernel tests assert).  Vertices with no out-edges
+    read 1.0 (the value is only ever consumed on edges *leaving* a vertex,
+    so the clamp is unreachable on real slots — it just keeps padding-lane
+    arithmetic finite)."""
+    key = id(g)
+    hit = _WDEG_CACHE.get(key)
+    if hit is not None:
+        ref, wdeg = hit
+        if ref() is g:
+            return wdeg
+    if g.w_out_deg is not None:
+        w = np.asarray(g.w_out_deg, dtype=np.float32)
+    else:                                    # legacy Graph built by hand
+        src, _dst, wt, _c = g.host_edges()
+        w = np.bincount(src, weights=wt.astype(np.float64),
+                        minlength=g.n).astype(np.float32)
+    wdeg = jnp.asarray(np.where(w > 0, w, np.float32(1.0)))
+    _WDEG_CACHE[key] = (weakref.ref(g), wdeg)
+    weakref.finalize(g, _WDEG_CACHE.pop, key, None)
+    return wdeg
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +157,31 @@ class BlockedELL:
         return self.nbrs
 
 
+def _padded_width(deg: np.ndarray, block_e: int) -> int:
+    """Max degree padded up to the slot-tile size — THE width rule of every
+    blocked layout (shared with the push-resolution permutation, which must
+    agree with the layouts by construction)."""
+    width = int(max(1, deg.max() if deg.size else 1))
+    return ((width + block_e - 1) // block_e) * block_e
+
+
+def _fill_order_slots(row_of: np.ndarray, n: int) -> np.ndarray:
+    """Per-edge slot index under the left-to-right row fill rule, edges in
+    ``host_edges()`` (dst-sorted) order — THE slot assignment of
+    ``to_blocked_ell``.  ``to_push_resolution`` replays the same function,
+    so the dst-major permutation can never desynchronize from the layouts
+    it permutes between."""
+    e = row_of.shape[0]
+    # vectorized running-count: stable sort groups each row's edges in
+    # original order, rank-within-group = position − first occurrence
+    perm = np.argsort(row_of, kind="stable")
+    sorted_rows = row_of[perm]
+    out = np.empty(e, dtype=np.int64)
+    out[perm] = np.arange(e, dtype=np.int64) - \
+        np.searchsorted(sorted_rows, sorted_rows)
+    return out
+
+
 def to_blocked_ell(g: Graph, block_v: int = 8, block_e: int = 128,
                    direction: str = "in") -> BlockedELL:
     """Build the blocked-ELL layout keyed by dst (``direction="in"``, the
@@ -130,24 +196,17 @@ def to_blocked_ell(g: Graph, block_v: int = 8, block_e: int = 128,
         row_of, nbr_of = src, dst
     else:
         raise ValueError(f"direction must be 'in' or 'out', got {direction!r}")
-    deg = np.bincount(row_of, minlength=n)
-    width = int(max(1, deg.max() if deg.size else 1))
-    width = ((width + block_e - 1) // block_e) * block_e
+    width = _padded_width(np.bincount(row_of, minlength=n), block_e)
     n_pad = ((n + block_v - 1) // block_v) * block_v
     nbrs = np.zeros((n_pad, width), dtype=np.int32)
     ws = np.zeros((n_pad, width), dtype=np.float32)
     cs = np.zeros((n_pad, width), dtype=np.float32)
     mask = np.zeros((n_pad, width), dtype=bool)
-    slot = np.zeros(n, dtype=np.int64)
-    # edges fill their row left to right
-    for i in range(src.shape[0]):
-        v = row_of[i]
-        k = slot[v]
-        nbrs[v, k] = nbr_of[i]
-        ws[v, k] = w[i]
-        cs[v, k] = c[i]
-        mask[v, k] = True
-        slot[v] = k + 1
+    ks = _fill_order_slots(row_of, n)
+    nbrs[row_of, ks] = nbr_of
+    ws[row_of, ks] = w
+    cs[row_of, ks] = c
+    mask[row_of, ks] = True
     tile_nnz = mask.reshape(n_pad // block_v, block_v,
                             width // block_e, block_e) \
         .sum(axis=(1, 3)).astype(np.int32)
@@ -182,6 +241,109 @@ def blocked_ell_cached(g: Graph, block_v: int = 8, block_e: int = 128,
     _ELL_CACHE[key] = (weakref.ref(g), ell)
     weakref.finalize(g, _ELL_CACHE.pop, key, None)
     return ell
+
+
+# ---------------------------------------------------------------------------
+# Dst-sorted push-resolution layout (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PushResolution:
+    """Dst-major permutation of the out-edge rectangle, as segment metadata.
+
+    The push sweep emits its per-edge candidates at *out-layout* positions
+    (rows = sources).  Resolving the dst-keyed reduction used to mean a
+    full-rectangle XLA scatter; this layout instead precomputes where each
+    out-slot's candidate lands in the **dst-major rectangle** — the same
+    `[n_pad, width_in]` shape as the pull layout, where row v is exactly
+    the contiguous segment of candidates competing for vertex v and the
+    segment boundary IS the row boundary (column tiles are resolved by the
+    pull sweep's existing cross-tile fold, so the `plan_merge` contract is
+    unchanged).
+
+    ``in2out[v, k]`` — flat index into the out rectangle of the edge that
+    is the k-th dst-major candidate slot of v (fill order matches
+    ``to_blocked_ell(direction="in")`` slot order, so a reduction over this
+    rectangle is bit-identical to the pull sweep's reduction tree).
+    ``valid`` marks real slots; ``src_tile[v, k]`` is the flat id of the
+    out-layout grid tile owning the slot, which maps the push sweep's
+    frontier tile-activity bitmap onto resolution tiles each iteration
+    (`edge_reduce.resolution_tile_activity`) — candidates born in a
+    skipped out-tile are identities, so their resolution tiles skip too,
+    making resolution work frontier-proportional.  ``tile_nnz`` counts real
+    slots per resolution tile (the skip test + the work accounting unit).
+    """
+    n: int
+    n_pad: int
+    width: int              # dst-major (in-rectangle) padded width
+    out_width: int          # the out rectangle's width (gather domain)
+    block_v: int
+    block_e: int
+    in2out: jnp.ndarray     # [n_pad, width] int32 flat out-rectangle index
+    valid: jnp.ndarray      # [n_pad, width] bool
+    src_tile: jnp.ndarray   # [n_pad, width] int32 flat out-tile id
+    tile_nnz: jnp.ndarray   # [n_pad/block_v, width/block_e] int32
+
+
+def to_push_resolution(g: Graph, block_v: int = 8,
+                       block_e: int = 128) -> PushResolution:
+    """Build the dst-major resolution permutation for the push sweep.
+
+    Slot assignment replays ``_fill_order_slots`` / ``_padded_width`` — the
+    exact rules ``to_blocked_ell`` builds both directions with — so the
+    correspondence is exact by construction: edge i sits at out-slot
+    ``(src[i], k_out)`` and dst-major slot ``(dst[i], k_in)``, and
+    ``in2out[dst[i], k_in] = src[i]·width_out + k_out``."""
+    src, dst, _w, _c = g.host_edges()
+    n = g.n
+    w_in = _padded_width(np.bincount(dst, minlength=n), block_e)
+    w_out = _padded_width(np.bincount(src, minlength=n), block_e)
+    n_pad = ((n + block_v - 1) // block_v) * block_v
+    in2out = np.zeros((n_pad, w_in), dtype=np.int64)
+    valid = np.zeros((n_pad, w_in), dtype=bool)
+    k_out = _fill_order_slots(src, n)
+    k_in = _fill_order_slots(dst, n)
+    in2out[dst, k_in] = src.astype(np.int64) * w_out + k_out
+    valid[dst, k_in] = True
+    if n_pad * w_out >= 2 ** 31:
+        raise ValueError(
+            f"out rectangle {n_pad}×{w_out} overflows int32 flat indices; "
+            "the dst-sorted resolution layout needs an int64 gather path "
+            "for graphs this hub-heavy")
+    n_j_out = w_out // block_e
+    out_row = in2out // w_out
+    out_col = in2out % w_out
+    src_tile = (out_row // block_v) * n_j_out + out_col // block_e
+    tile_nnz = valid.reshape(n_pad // block_v, block_v,
+                             w_in // block_e, block_e) \
+        .sum(axis=(1, 3)).astype(np.int32)
+    return PushResolution(
+        n=n, n_pad=n_pad, width=w_in, out_width=w_out,
+        block_v=block_v, block_e=block_e,
+        in2out=jnp.asarray(in2out.astype(np.int32)),
+        valid=jnp.asarray(valid),
+        src_tile=jnp.asarray(src_tile.astype(np.int32)),
+        tile_nnz=jnp.asarray(tile_nnz))
+
+
+_RES_CACHE: dict = {}
+
+
+def push_resolution_cached(g: Graph, block_v: int = 8,
+                           block_e: int = 128) -> PushResolution:
+    """Memoized ``to_push_resolution`` — cached per graph exactly like the
+    blocked-ELL layouts (identity key, weakref-guarded, finalizer-evicted),
+    so the dst-major permutation is built once per graph per tile shape."""
+    key = (id(g), block_v, block_e)
+    hit = _RES_CACHE.get(key)
+    if hit is not None:
+        ref, res = hit
+        if ref() is g:
+            return res
+    res = to_push_resolution(g, block_v=block_v, block_e=block_e)
+    _RES_CACHE[key] = (weakref.ref(g), res)
+    weakref.finalize(g, _RES_CACHE.pop, key, None)
+    return res
 
 
 # ---------------------------------------------------------------------------

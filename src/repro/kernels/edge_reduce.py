@@ -33,9 +33,15 @@ out-edge (source-keyed successor) layout.  ONE ``pallas_call`` applies every
 propagation function across the frontier-active source tiles — state is read
 per ROW (no gather), and a sparse frontier skips whole row blocks, which is
 what makes BFS/SSSP iteration cost scale with the frontier instead of the
-graph — then the dst-keyed lexicographic reduction resolves as a scatter
-pass in plain jnp, feeding the same ``plan_merge`` contract as the pull
-sweep (bit-for-bit ⊥-as-identity, C6).
+graph — then the dst-keyed lexicographic reduction resolves either through
+the default dst-sorted segment-reduction path (``resolution="sorted"``,
+DESIGN.md §10: candidates gather through the precomputed dst-major
+permutation into the in-rectangle, where each row is one contiguous dst
+segment, and a second Pallas tile pass lex-reduces only the tiles whose
+candidates came from frontier-active source tiles) or as the reference
+full-rectangle scatter pass in plain jnp (``resolution="scatter"``).  Both
+feed the same ``plan_merge`` contract as the pull sweep (bit-for-bit
+⊥-as-identity, C6).
 
 ``ell_level_reduce`` — the original one-launch-per-lex-level pull sweep,
 kept as a reference path and for kernel-level tests; later levels recompute
@@ -63,16 +69,25 @@ BLOCK_E = 128
 _INT_OP = {"or": "max", "and": "min"}
 
 # Sweep statistics.  "launches"/"pull_launches"/"push_launches" are
-# trace-time counters: each pallas_call issued during tracing increments
-# them exactly once (the while_loop body traces once), so for a pull- or
-# push-only executor they ARE sweeps-per-iteration; a direction-optimized
-# executor traces BOTH branches of its lax.cond, so it counts one pull and
-# one push launch per round while executing exactly one per iteration.
+# trace-time counters: each EDGE-SWEEP pallas_call issued during tracing
+# increments them exactly once AFTER the call traces successfully (a
+# launch whose construction raises must not skew bench launch counts), so
+# for a pull- or push-only executor they ARE sweeps-per-iteration; a
+# direction-optimized executor traces BOTH branches of its lax.cond, so it
+# counts one pull and one push launch per round while executing exactly
+# one per iteration.  "resolve_launches" counts the dst-sorted push
+# RESOLUTION tile passes separately (one per traced push sweep under
+# ``resolution="sorted"``, zero under "scatter"/pull) — they are not edge
+# sweeps, so the sweep-launch contract tests stay direction-symmetric.
 # "pull_iters"/"push_iters" are runtime counters, filled in by
 # ops.iterate_pallas from the while-loop carry after the fixpoint runs:
-# they record which direction each executed iteration actually took.
+# they record which direction each executed iteration actually took;
+# "resolve_work" likewise accumulates the runtime resolution edge work
+# (Σ tile_nnz of the resolution tiles actually processed — the quantity
+# fusion_bench gates as frontier-proportional).
 SWEEP_STATS = {"launches": 0, "pull_launches": 0, "push_launches": 0,
-               "pull_iters": 0, "push_iters": 0}
+               "resolve_launches": 0,
+               "pull_iters": 0, "push_iters": 0, "resolve_work": 0.0}
 
 
 def reset_sweep_stats():
@@ -114,14 +129,35 @@ def _row_reduce(op: str, x, axis):
             "prod": jnp.prod}[op](x, axis=axis)
 
 
+def _fold_tile_candidates(plans, plan_specs, ident_scalars, outs):
+    """Cross-tile lexicographic resolution: fold the ``plan_merge``
+    recurrence over the tile axis of per-tile candidate arrays
+    ``outs[level][n_pad, n_tiles]``, in plain jnp.  Shared verbatim by the
+    pull sweep and the dst-sorted push resolution so both directions reduce
+    with the identical monoid tree (the bitwise pull ≡ push(sorted)
+    guarantee of DESIGN.md §10 rests on this).  Returns ({comp: [n_pad]
+    reduction}, levels consumed)."""
+    red, oi = {}, 0
+    for spec, mapped in zip(plans, plan_specs):
+        tie = jnp.ones(outs[oi].shape, bool)
+        for (c, _op), (pos, op) in zip(spec, mapped):
+            ident = jnp.asarray(ident_scalars[pos], outs[oi].dtype)
+            vals = jnp.where(tie, outs[oi], ident)
+            best = _row_reduce(op, vals, axis=1)
+            red[c] = best
+            tie = tie & (vals == best[:, None])
+            oi += 1
+    return red, oi
+
+
 # ---------------------------------------------------------------------------
 # Fused single-pass sweep: all plans × lex levels (+ has-pred) in one launch.
 # ---------------------------------------------------------------------------
 
 
 def _fused_kernel(tile_act_ref, srcs_ref, w_ref, c_ref, mask_ref, active_ref,
-                  outdeg_ref, *rest, n_comps, plan_specs, hp_positions,
-                  p_fns, idents, nv, block_v):
+                  outdeg_ref, wdeg_ref, *rest, n_comps, plan_specs,
+                  hp_positions, p_fns, idents, nv, block_v):
     """One (BLOCK_V, BLOCK_E) tile of the fused sweep.
 
     ``rest`` = the per-component state vectors (``n_comps`` of them) followed
@@ -157,7 +193,8 @@ def _fused_kernel(tile_act_ref, srcs_ref, w_ref, c_ref, mask_ref, active_ref,
         mask = raw_mask & (active_ref[...][srcs] != 0)
         rows = i * block_v + jax.lax.broadcasted_iota(jnp.int32, srcs.shape, 0)
         env = {"w": w_ref[...], "c": c_ref[...], "esrc": srcs, "edst": rows,
-               "outdeg": outdeg_ref[...][srcs], "nv": jnp.float32(nv)}
+               "outdeg": outdeg_ref[...][srcs], "wdeg": wdeg_ref[...][srcs],
+               "nv": jnp.float32(nv)}
         gathered, props = [], []
         for k in range(n_comps):                 # ONE gather per component
             nvals = state_refs[k][...][srcs]
@@ -183,7 +220,7 @@ def _fused_kernel(tile_act_ref, srcs_ref, w_ref, c_ref, mask_ref, active_ref,
 
 def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
                     outdeg, *, plans, idents, p_fns, nv,
-                    need_haspred: bool = False,
+                    need_haspred: bool = False, wdeg=None,
                     block_v: int = BLOCK_V, block_e: int = BLOCK_E,
                     interpret: Optional[bool] = None,
                     return_candidates: bool = False):
@@ -194,6 +231,7 @@ def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
     states    {comp: [n_pad] value vector}
     active    [n_pad] int32 frontier (1 = source eligible)
     outdeg    [n_pad] float32 (gathered per edge into the P environment)
+    wdeg      [n_pad] float32 weighted out-degree (env "wdeg"; None → 1s)
     plans     static: per plan a tuple of (comp, op) lex levels, primary first
     idents    {comp: identity scalar};  p_fns {comp: propagation closure}
 
@@ -220,9 +258,12 @@ def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
     full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
     cand = pl.BlockSpec((block_v, 1), lambda i, j: (i, j))
 
+    if wdeg is None:
+        wdeg = jnp.ones_like(outdeg)
     args = [tile_act, srcs, weight, capacity, mask,
-            jnp.asarray(active, jnp.int32), outdeg]
-    specs = [one, tile, tile, tile, tile, full(active), full(outdeg)]
+            jnp.asarray(active, jnp.int32), outdeg, wdeg]
+    specs = [one, tile, tile, tile, tile, full(active), full(outdeg),
+             full(wdeg)]
     for c in comps_order:
         args.append(states[c])
         specs.append(full(states[c]))
@@ -243,26 +284,17 @@ def fused_ell_sweep(srcs, weight, capacity, mask, tile_act, states, active,
         p_fns=tuple(p_fns[c] for c in comps_order),
         idents=ident_scalars, nv=float(nv), block_v=block_v)
 
-    SWEEP_STATS["launches"] += 1
-    SWEEP_STATS["pull_launches"] += 1
     outs = pl.pallas_call(
         kern, grid=grid, in_specs=specs, out_specs=out_specs,
         out_shape=out_shapes, interpret=interpret)(*args)
+    SWEEP_STATS["launches"] += 1
+    SWEEP_STATS["pull_launches"] += 1
     outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
 
     # Cross-tile lexicographic resolution (the "short second pass"): a fold
     # of the plan_merge recurrence over the tile axis, in plain jnp — zero
     # extra kernel launches.
-    red, oi = {}, 0
-    for spec, mapped in zip(plans, plan_specs):
-        tie = jnp.ones(outs[oi].shape, bool)
-        for (c, _op), (pos, op) in zip(spec, mapped):
-            ident = jnp.asarray(ident_scalars[pos], outs[oi].dtype)
-            vals = jnp.where(tie, outs[oi], ident)
-            best = _row_reduce(op, vals, axis=1)
-            red[c] = best
-            tie = tie & (vals == best[:, None])
-            oi += 1
+    red, oi = _fold_tile_candidates(plans, plan_specs, ident_scalars, outs)
     hp = {}
     if need_haspred:
         for k, c in enumerate(comps_order):
@@ -297,6 +329,25 @@ def tile_activity_push(tile_nnz, active_i32, block_v: int):
     return ((tile_nnz > 0) & row_act[:, None]).astype(jnp.int32)
 
 
+def resolution_tile_activity(res_valid, res_src_tile, push_tile_act,
+                             res_tile_nnz, block_v: int, block_e: int):
+    """Per-tile activity bitmap of the dst-sorted resolution pass.
+
+    A resolution tile holds candidates gathered from out-layout slots; a
+    candidate is non-identity only if its OUT tile ran (``push_tile_act``
+    from ``tile_activity_push``), so a resolution tile whose real slots all
+    map into skipped out-tiles contains only identities and can skip too.
+    ``res_src_tile`` is the precomputed slot → flat-out-tile map
+    (structure.PushResolution); the test is one int gather + block-any in
+    XLA, the push-side mirror of ``tile_activity``.  Σ res_tile_nnz over
+    the tiles this bitmap keeps IS the resolution edge work fusion_bench
+    gates as frontier-proportional."""
+    n_i, n_j = res_tile_nnz.shape
+    act = res_valid & (push_tile_act.reshape(-1)[res_src_tile] != 0)
+    any_act = act.reshape(n_i, block_v, n_j, block_e).any(axis=(1, 3))
+    return ((res_tile_nnz > 0) & any_act).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # Fused push sweep: frontier-active source tiles → per-edge candidates →
 # dst-keyed lexicographic scatter resolution.
@@ -304,7 +355,8 @@ def tile_activity_push(tile_nnz, active_i32, block_v: int):
 
 
 def _push_kernel(tile_act_ref, dsts_ref, w_ref, c_ref, mask_ref, active_ref,
-                 outdeg_ref, *rest, n_comps, p_fns, idents, nv, block_v):
+                 outdeg_ref, wdeg_ref, *rest, n_comps, p_fns, idents, nv,
+                 block_v):
     """One (BLOCK_V sources × BLOCK_E successor slots) tile of the push sweep.
 
     ``rest`` = the per-component state row blocks (``n_comps`` of them,
@@ -332,6 +384,7 @@ def _push_kernel(tile_act_ref, dsts_ref, w_ref, c_ref, mask_ref, active_ref,
         env = {"w": w_ref[...], "c": c_ref[...], "esrc": rows, "edst": dsts,
                "outdeg": jnp.broadcast_to(outdeg_ref[...][:, None],
                                           dsts.shape),
+               "wdeg": jnp.broadcast_to(wdeg_ref[...][:, None], dsts.shape),
                "nv": jnp.float32(nv)}
         for k in range(n_comps):
             nvals = jnp.broadcast_to(state_refs[k][...][:, None], dsts.shape)
@@ -344,7 +397,8 @@ def _push_kernel(tile_act_ref, dsts_ref, w_ref, c_ref, mask_ref, active_ref,
 
 def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
                          active, outdeg, *, plans, idents, p_fns, nv,
-                         need_haspred: bool = False,
+                         need_haspred: bool = False, wdeg=None,
+                         resolution: str = "scatter", res=None,
                          block_v: int = BLOCK_V, block_e: int = BLOCK_E,
                          interpret: Optional[bool] = None,
                          return_candidates: bool = False):
@@ -357,26 +411,46 @@ def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
     states    {comp: [n_pad] value vector}
     active    [n_pad] int32 frontier (1 = source eligible; push+ masks
               inactive sources, push− passes all-ones)
+    wdeg      [n_pad] float32 weighted out-degree (env "wdeg"; None → 1s)
     plans     static: per plan a tuple of (comp, op) lex levels, primary first
     idents    {comp: identity scalar};  p_fns {comp: propagation closure}
 
-    Contract (DESIGN.md §2): ONE ``pallas_call`` applies every synthesized P
-    over the frontier-active source tiles and emits per-edge *candidates*
-    (identity-filled where inactive, per C6).  The dst-keyed lexicographic
-    reduction then runs as a scatter pass in plain jnp — the push analogue
-    of the pull sweep's cross-tile resolution fold, producing exactly the
-    identity-initialised reduction that ``iterate.plan_merge`` resolves
-    against the old state, so push and pull rounds share one merge contract
-    bit-for-bit.
+    Contract (DESIGN.md §2/§10): ONE ``pallas_call`` applies every
+    synthesized P over the frontier-active source tiles and emits per-edge
+    *candidates* (identity-filled where inactive, per C6).  The dst-keyed
+    lexicographic reduction then resolves by ``resolution``:
+
+    ``"sorted"`` — the dst-sorted segment-reduction path.  ``res`` must be
+    ``(in2out, valid, res_tile_act)`` from ``structure.PushResolution`` +
+    ``resolution_tile_activity``: candidates gather through the dst-major
+    permutation into the in-rectangle (row v = the contiguous candidate
+    segment of dst v) and a second Pallas tile pass lex-reduces only the
+    resolution tiles whose candidates came from frontier-active out-tiles,
+    finishing with the SAME cross-tile fold as the pull sweep — resolution
+    work is Σ tile_nnz of processed resolution tiles, and the reduction is
+    bit-identical to the pull sweep's tree (even for float sums).
+
+    ``"scatter"`` — the reference full-rectangle scatter pass in plain jnp
+    (the original path, kept as fallback and as the equivalence oracle).
+
+    Both produce exactly the identity-initialised reduction that
+    ``iterate.plan_merge`` resolves against the old state, so push and pull
+    rounds share one merge contract bit-for-bit.
 
     Returns ``(red, hp)`` like ``fused_ell_sweep``: ``red[comp]`` is the
     [n_pad] dst-keyed reduction of that level over the candidates, ``hp``
-    the has-predecessor vectors of the push− models (scattered from the
-    non-⊥ source states — no extra launch).  ``return_candidates`` appends
-    the raw [n_pad, width] per-edge candidate arrays.
+    the has-predecessor vectors of the push− models (from the non-⊥ source
+    states — no extra sweep launch).  ``return_candidates`` appends the raw
+    [n_pad, width] per-edge candidate arrays (out-layout positions).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if resolution not in ("scatter", "sorted"):
+        raise ValueError(f"resolution must be 'scatter' or 'sorted', "
+                         f"got {resolution!r}")
+    if resolution == "sorted" and res is None:
+        raise ValueError("resolution='sorted' needs res=(in2out, valid, "
+                         "res_tile_act) from structure.PushResolution")
     comps_order = comps_in_plan_order(plans)
     pos_of = {c: k for k, c in enumerate(comps_order)}
     ident_scalars = _ident_scalars(comps_order, states, idents)
@@ -389,9 +463,11 @@ def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
     one = pl.BlockSpec((1, 1), lambda i, j: (i, j))
     vrow = pl.BlockSpec((block_v,), lambda i, j: (i,))
 
+    if wdeg is None:
+        wdeg = jnp.ones_like(outdeg)
     args = [tile_act, dsts, weight, capacity, mask,
-            jnp.asarray(active, jnp.int32), outdeg]
-    specs = [one, tile, tile, tile, tile, vrow, vrow]
+            jnp.asarray(active, jnp.int32), outdeg, wdeg]
+    specs = [one, tile, tile, tile, tile, vrow, vrow, vrow]
     for c in comps_order:
         args.append(states[c])
         specs.append(vrow)
@@ -405,49 +481,156 @@ def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
         p_fns=tuple(p_fns[c] for c in comps_order),
         idents=ident_scalars, nv=float(nv), block_v=block_v)
 
-    SWEEP_STATS["launches"] += 1
-    SWEEP_STATS["push_launches"] += 1
     outs = pl.pallas_call(
         kern, grid=grid, in_specs=specs, out_specs=out_specs,
         out_shape=out_shapes, interpret=interpret)(*args)
+    SWEEP_STATS["launches"] += 1
+    SWEEP_STATS["push_launches"] += 1
     outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
 
-    # Dst-keyed lexicographic scatter resolution: the push analogue of the
-    # pull sweep's cross-tile fold.  Identity-initialised (NOT onto the old
-    # state) so the result obeys the same plan_merge contract as the pull
-    # reduction; ties mask the next level to identity exactly like
-    # plan_segment_reduce does on the pull side.
-    flat_dst = dsts.reshape(-1)
-    flat = {c: outs[pos_of[c]].reshape(-1) for c in comps_order}
-    red = {}
-    for spec in plans:
-        tie = jnp.ones_like(flat_dst, dtype=bool)
-        for l, (c, op) in enumerate(spec):
-            ident = jnp.asarray(ident_scalars[pos_of[c]], flat[c].dtype)
-            init = jnp.full((n_pad,), ident, flat[c].dtype)
-            vals = jnp.where(tie, flat[c], ident)
-            prim = segment.scatter_reduce(op, init, vals, flat_dst)
-            red[c] = prim
-            if l + 1 < len(spec):
-                tie = tie & (vals == prim[flat_dst])
+    if resolution == "sorted":
+        in2out, valid, res_tile_act = res
+        red = _resolve_push_sorted(
+            outs, in2out, valid, res_tile_act, plans=plans,
+            comps_order=comps_order, ident_scalars=ident_scalars,
+            dtypes=[states[c].dtype for c in comps_order],
+            block_v=block_v, block_e=block_e, interpret=interpret)
+    else:
+        # Dst-keyed lexicographic scatter resolution (reference path): the
+        # push analogue of the pull sweep's cross-tile fold, over the full
+        # out rectangle.  Identity-initialised (NOT onto the old state) so
+        # the result obeys the same plan_merge contract as the pull
+        # reduction; ties mask the next level to identity exactly like
+        # plan_segment_reduce does on the pull side.
+        flat_dst = dsts.reshape(-1)
+        flat = {c: outs[pos_of[c]].reshape(-1) for c in comps_order}
+        red = {}
+        for spec in plans:
+            tie = jnp.ones_like(flat_dst, dtype=bool)
+            for l, (c, op) in enumerate(spec):
+                ident = jnp.asarray(ident_scalars[pos_of[c]], flat[c].dtype)
+                init = jnp.full((n_pad,), ident, flat[c].dtype)
+                vals = jnp.where(tie, flat[c], ident)
+                prim = segment.scatter_reduce(op, init, vals, flat_dst)
+                red[c] = prim
+                if l + 1 < len(spec):
+                    tie = tie & (vals == prim[flat_dst])
 
     hp = {}
     if need_haspred:
-        # Def. 4's CPreds ≠ ∅ probe: scatter-OR of "source state non-⊥" over
-        # real out-edges.  Pure jnp on data already resident — no launch.
+        # Def. 4's CPreds ≠ ∅ probe from "source state non-⊥" over real
+        # out-edges.  Pure jnp on data already resident — no launch.  The
+        # sorted path reads it through the dst-major permutation (the same
+        # booleans the pull sweep's fused probe computes); scatter keeps
+        # the scatter-OR.
         for c in comps_order:
             ident = jnp.asarray(ident_scalars[pos_of[c]], states[c].dtype)
             nonbot = (mask & (states[c][:, None] != ident)).astype(jnp.int32)
-            hp[c] = segment.scatter_reduce(
-                "or", jnp.zeros((n_pad,), jnp.int32), nonbot.reshape(-1),
-                flat_dst) > 0
+            if resolution == "sorted":
+                in2out, valid, _res_tile_act = res
+                hp[c] = jnp.any(
+                    valid & (nonbot.reshape(-1)[in2out] != 0), axis=1)
+            else:
+                hp[c] = segment.scatter_reduce(
+                    "or", jnp.zeros((n_pad,), jnp.int32), nonbot.reshape(-1),
+                    dsts.reshape(-1)) > 0
     if return_candidates:
         return red, hp, outs
     return red, hp
 
 
+def _resolve_kernel(tile_act_ref, valid_ref, *rest, n_comps, plan_specs,
+                    idents):
+    """One (BLOCK_V dst rows × BLOCK_E candidate slots) tile of the
+    dst-sorted push resolution.
+
+    ``rest`` = the dst-major candidate rectangles (``n_comps`` tiles — the
+    push sweep's per-edge candidates gathered through the PushResolution
+    permutation, identity-filled on invalid slots) followed by one
+    [block_v, 1] output per plan per lex level.  The body is exactly the
+    reduction half of ``_fused_kernel`` — same lex chain, same tie masking,
+    same per-tile candidate outputs — minus the gather/propagate (the
+    values were already propagated by the push kernel), so the fold that
+    finishes the job is the pull sweep's ``_fold_tile_candidates`` and the
+    overall reduction tree is bit-identical to pull's.  Tiles whose
+    ``tile_act`` bit is 0 (all candidates born in skipped out-tiles, or all
+    padding) short-circuit via ``pl.when`` and emit identities (C6)."""
+    cand_refs = rest[:n_comps]
+    out_refs = rest[n_comps:]
+
+    oi = 0
+    for spec in plan_specs:
+        for (pos, _op) in spec:
+            out_refs[oi][...] = jnp.full(out_refs[oi].shape, idents[pos],
+                                         out_refs[oi].dtype)
+            oi += 1
+
+    @pl.when(tile_act_ref[0, 0] != 0)
+    def _tile_body():
+        mask = valid_ref[...]
+        cands = [cand_refs[k][...] for k in range(n_comps)]
+        oi = 0
+        for spec in plan_specs:
+            tie = mask
+            for l, (pos, op) in enumerate(spec):
+                ident = jnp.asarray(idents[pos], cands[pos].dtype)
+                vals = jnp.where(tie, cands[pos], ident)
+                best = _row_reduce(op, vals, axis=1)
+                out_refs[oi][...] = best[:, None].astype(out_refs[oi].dtype)
+                oi += 1
+                if l + 1 < len(spec):
+                    tie = tie & (cands[pos] == best[:, None])
+
+
+def _resolve_push_sorted(cand_outs, in2out, valid, res_tile_act, *, plans,
+                         comps_order, ident_scalars, dtypes, block_v, block_e,
+                         interpret):
+    """Dst-sorted segment-reduction resolution (DESIGN.md §10).
+
+    Gathers the push sweep's out-rectangle candidates through the
+    precomputed dst-major permutation (one XLA gather per component — the
+    permutation replaces the full-rectangle scatter), then runs the
+    ``_resolve_kernel`` tile pass over the resolution tiles ``res_tile_act``
+    keeps, and finishes with the pull sweep's cross-tile fold."""
+    pos_of = {c: k for k, c in enumerate(comps_order)}
+    plan_specs = tuple(tuple((pos_of[c], _INT_OP.get(op, op)) for c, op in s)
+                       for s in plans)
+    n_pad, w_in = valid.shape
+    n_i, n_j = n_pad // block_v, w_in // block_e
+    grid = (n_i, n_j)
+
+    cand_in = []
+    for k, _c in enumerate(comps_order):
+        ident = jnp.asarray(ident_scalars[k], dtypes[k])
+        cand_in.append(jnp.where(valid, cand_outs[k].reshape(-1)[in2out],
+                                 ident))
+
+    tile = pl.BlockSpec((block_v, block_e), lambda i, j: (i, j))
+    one = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    cand = pl.BlockSpec((block_v, 1), lambda i, j: (i, j))
+
+    args = [res_tile_act, valid] + cand_in
+    specs = [one, tile] + [tile] * len(cand_in)
+    out_shapes, out_specs = [], []
+    for spec in plans:
+        for c, _op in spec:
+            out_shapes.append(jax.ShapeDtypeStruct((n_pad, n_j),
+                                                   dtypes[pos_of[c]]))
+            out_specs.append(cand)
+
+    kern = functools.partial(_resolve_kernel, n_comps=len(comps_order),
+                             plan_specs=plan_specs, idents=ident_scalars)
+    outs = pl.pallas_call(
+        kern, grid=grid, in_specs=specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret)(*args)
+    SWEEP_STATS["resolve_launches"] += 1
+    outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+    red, _ = _fold_tile_candidates(plans, plan_specs, ident_scalars, outs)
+    return red
+
+
 def _level_kernel(srcs_ref, w_ref, c_ref, mask_ref, active_ref, outdeg_ref,
-                  *state_and_best, out_ref, op, p_fns, idents, bots,
+                  wdeg_ref, *state_and_best, out_ref, op, p_fns, idents, bots,
                   n_levels, nv, block_v, mode):
     """One (BLOCK_V, BLOCK_E) tile of one lex level.
 
@@ -466,7 +649,7 @@ def _level_kernel(srcs_ref, w_ref, c_ref, mask_ref, active_ref, outdeg_ref,
     rows = i * block_v + jax.lax.broadcasted_iota(jnp.int32, srcs.shape, 0)
     env_common = {"w": w_ref[...], "c": c_ref[...], "esrc": srcs,
                   "edst": rows, "outdeg": outdeg_ref[...][srcs],
-                  "nv": jnp.float32(nv)}
+                  "wdeg": wdeg_ref[...][srcs], "nv": jnp.float32(nv)}
 
     state_refs = state_and_best[:n_levels]
     best_refs = state_and_best[n_levels:]
@@ -505,7 +688,7 @@ def ell_level_reduce(ell, op: str, p_fns: Sequence[Callable],
                      idents: Sequence, active: jnp.ndarray,
                      outdeg: jnp.ndarray,
                      bests: Sequence[jnp.ndarray] = (),
-                     mode: str = "value",
+                     mode: str = "value", wdeg=None,
                      block_v: int = BLOCK_V, block_e: int = BLOCK_E,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Reduce one lex level over the blocked-ELL edges.
@@ -544,9 +727,11 @@ def ell_level_reduce(ell, op: str, p_fns: Sequence[Callable],
         idents=tuple(idents), bots=tuple(idents), n_levels=n_levels,
         nv=float(ell.n), block_v=block_v, mode=mode)
 
+    if wdeg is None:
+        wdeg = jnp.ones_like(outdeg)
     args = [ell.srcs, ell.weight, ell.capacity, ell.mask,
-            active.astype(jnp.int32), outdeg]
-    specs = [tile, tile, tile, tile, full(active), full(outdeg)]
+            active.astype(jnp.int32), outdeg, wdeg]
+    specs = [tile, tile, tile, tile, full(active), full(outdeg), full(wdeg)]
     for s in states:
         args.append(s)
         specs.append(full(s))
@@ -562,5 +747,6 @@ def ell_level_reduce(ell, op: str, p_fns: Sequence[Callable],
         out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
         interpret=interpret,
     )
+    out = fn(*args)
     SWEEP_STATS["launches"] += 1
-    return fn(*args)
+    return out

@@ -6,10 +6,15 @@ with every edge sweep executed by a blocked-ELL Pallas kernel.  One engine
 iteration executes exactly ONE ``pallas_call`` — either the pull sweep
 (``fused_ell_sweep``: dst-keyed gather over predecessor tiles) or the push
 sweep (``fused_ell_push_sweep``: source-keyed propagate over frontier-active
-row tiles) — chosen per iteration by a Gemini-style frontier-density
-heuristic when ``direction="auto"``.  Both sweeps produce the identity-
-initialised per-plan reduction that ``iterate.plan_merge`` resolves against
-the old state, so the direction switch is invisible to the plan algebra.
+row tiles, dst-keyed resolution through the dst-sorted segment layout by
+default — ``push_resolution="sorted"``, one extra frontier-proportional
+resolution tile pass; ``"scatter"`` keeps the reference full-rectangle
+scatter) — chosen per iteration by the Gemini |E_frontier| ≤ |E|/k rule
+when ``direction="auto"`` (``switch_k`` tunes k per query; ``switch_k=None``
+falls back to the ``DENSE_FRONTIER`` vertex-fraction threshold).  Both
+sweeps produce the identity-initialised per-plan reduction that
+``iterate.plan_merge`` resolves against the old state, so the direction
+switch is invisible to the plan algebra.
 Non-idempotent rounds always run the pull− full recompute (has-pred probe
 fused in the same launch) unless the push direction is forced, in which
 case the push− scatter recompute runs instead.
@@ -37,7 +42,8 @@ import jax.numpy as jnp
 
 from repro.core import iterate
 from repro.core.fusion import Lex
-from repro.graph.structure import Graph, blocked_ell_cached
+from repro.graph.structure import (Graph, blocked_ell_cached,
+                                   push_resolution_cached, w_out_deg)
 from repro.kernels import edge_reduce as _er
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import segment_softmax as _ss
@@ -106,9 +112,62 @@ def _comps_key(comps):
                   None if cr.e_fn is None else id(cr.e_fn)) for cr in comps)
 
 
-DENSE_FRONTIER = 0.05      # Gemini switch point: frontier fraction above
-                           # which the pull sweep wins (dense reads beat
-                           # frontier-proportional row skipping)
+DENSE_FRONTIER = 0.05      # documented FALLBACK switch point (switch_k=None):
+                           # frontier fraction above which the pull sweep
+                           # wins (dense reads beat frontier-proportional
+                           # row skipping)
+
+SWITCH_K = 20.0            # the default Gemini rule: push while the
+                           # frontier's outgoing edge count |E_frontier|
+                           # (Σ out_deg over active vertices — degree data
+                           # already in the layout) stays ≤ |E| / k.  This
+                           # is Gemini's actual criterion (edge mass, not
+                           # vertex fraction): a few active hubs can carry
+                           # pull-worthy edge volume, and many active leaves
+                           # can still be push-cheap.  Override per query
+                           # with switch_k=<float>; switch_k=None falls back
+                           # to the DENSE_FRONTIER vertex-fraction rule.
+
+PUSH_RESOLUTION = "sorted"  # default dst-keyed resolution of the push
+                            # sweep: "sorted" = dst-sorted segment-reduce
+                            # tile pass (frontier-proportional, DESIGN.md
+                            # §10); "scatter" = full-rectangle XLA scatter
+                            # (the reference/fallback path)
+
+
+def _normalize_switch_k(switch_k, dense_threshold=DENSE_FRONTIER):
+    """"auto" → the default Gemini k; None → the DENSE_FRONTIER fallback;
+    a positive number → that k.  Returned value is part of the executor
+    cache key.  A non-default ``dense_threshold`` combined with an active
+    Gemini rule is rejected rather than silently ignored — the fraction
+    threshold only governs the ``switch_k=None`` fallback."""
+    if isinstance(switch_k, str):
+        if switch_k != "auto":
+            raise ValueError(f"switch_k must be 'auto', None or a number, "
+                             f"got {switch_k!r}")
+        switch_k = SWITCH_K
+    elif switch_k is not None:
+        switch_k = float(switch_k)
+        if not switch_k > 0:
+            raise ValueError(f"switch_k must be > 0 (push while |E_frontier|"
+                             f" <= |E|/k), got {switch_k}")
+    if switch_k is not None and dense_threshold != DENSE_FRONTIER:
+        raise ValueError(
+            "dense_threshold only governs the switch_k=None fallback; pass "
+            "switch_k=None to use a custom frontier-fraction threshold, or "
+            "tune the Gemini rule via switch_k")
+    return switch_k
+
+
+def _check_resolution(push_resolution) -> str:
+    """None → the engine default, so callers (engine.py) can forward their
+    own optional knob unconditionally."""
+    if push_resolution is None:
+        return PUSH_RESOLUTION
+    if push_resolution not in ("scatter", "sorted"):
+        raise ValueError(f"push_resolution must be 'scatter' or 'sorted', "
+                         f"got {push_resolution!r}")
+    return push_resolution
 
 
 def _directions_used(direction: str, idempotent: bool):
@@ -127,18 +186,23 @@ def _directions_used(direction: str, idempotent: bool):
 
 
 def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
-                           interpret, use, dense_threshold, batch=False):
+                           interpret, use, dense_threshold, switch_k,
+                           push_resolution, batch=False):
     """Trace + jit the whole fixpoint once.  The returned function takes the
     blocked-ELL arrays (one 5-tuple per direction in ``use``, pull first),
-    out-degrees, AND the per-component query sources as arguments (NOT
-    closure constants): ``run(*arrays, srcs)`` with ``srcs`` an [n_comps]
-    int32 vector, so one compiled executor serves every graph with the same
-    padded shapes and EVERY query source without retracing.
+    out-degrees (plain + weighted), the dst-sorted resolution arrays (when
+    the push direction resolves ``"sorted"``), AND the per-component query
+    sources as arguments (NOT closure constants): ``run(*arrays, srcs)``
+    with ``srcs`` an [n_comps] int32 vector, so one compiled executor serves
+    every graph with the same padded shapes and EVERY query source without
+    retracing.
 
     ``use`` = ("pull",) | ("push",) | ("pull", "push"); with both, each
-    iteration picks its sweep by frontier density via ``lax.cond`` — both
-    branches trace (two pallas_calls appear in the HLO) but exactly one
-    executes per iteration at runtime.
+    iteration picks its sweep via ``lax.cond`` — both branches trace (two
+    pallas_calls appear in the HLO) but exactly one executes per iteration
+    at runtime.  The switch is the Gemini rule when ``switch_k`` is a
+    number (push while Σ out_deg over the frontier ≤ |E|/k) and the
+    legacy frontier-fraction threshold when ``switch_k`` is None.
 
     With ``batch=True`` the same fixpoint is ``jax.vmap``ped over a leading
     source axis (``srcs`` [B, n_comps]; the ELL arrays stay shared): state
@@ -152,14 +216,28 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     comps_order = _er.comps_in_plan_order(plan_levels)
     idents = {c: comps_by_idx[c].ident for c in comps_order}
     p_fns = {c: comps_by_idx[c].p_fn for c in comps_order}
+    sorted_res = push_resolution == "sorted" and "push" in use
 
     def run(*arrays):
         ell = {d: arrays[5 * i:5 * i + 5] for i, d in enumerate(use)}
-        out_deg = arrays[5 * len(use)]
-        srcs = arrays[5 * len(use) + 1]
+        idx = 5 * len(use)
+        out_deg = arrays[idx]
+        wdeg = arrays[idx + 1]
+        idx += 2
+        if sorted_res:
+            res_in2out, res_valid, res_src_tile, res_nnz = arrays[idx:idx + 4]
+            idx += 4
+        srcs = arrays[idx]
         n_pad = ell[use[0]][0].shape[0]
         out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
             jnp.maximum(out_deg, 1).astype(jnp.float32))
+        # UNclamped degrees for the Gemini |E_frontier| estimate: the clamp
+        # exists for PageRank division, but zero-out-degree vertices carry
+        # zero frontier edges and must not inflate the switch signal.
+        out_deg_raw = jnp.zeros(n_pad, jnp.float32).at[:n].set(
+            out_deg.astype(jnp.float32))
+        wdeg_pad = jnp.ones(n_pad, jnp.float32).at[:n].set(
+            wdeg.astype(jnp.float32))
         num_edges = jnp.sum(ell[use[0]][3].astype(jnp.float32))
         ones_act = jnp.ones(n_pad, jnp.int32)
 
@@ -174,14 +252,36 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                          for s, cr in zip(base, comps))
 
         def sweep(d, state_d, active_i32, tile_act, need_hp):
+            """One fused sweep + its dst-keyed resolution.  Returns
+            (red, hp, resolution edge work): 0 for pull (the cross-tile
+            fold is O(n_pad·n_tiles) elementwise — not edge work), the
+            kept resolution tiles' Σ nnz for sorted push, and the full
+            rectangle for the reference scatter."""
             nbrs, weight, capacity, mask, _nnz = ell[d]
-            fn = _er.fused_ell_sweep if d == "pull" else _er.fused_ell_push_sweep
             states = {c: state_d[c] for c in comps_order}
-            return fn(nbrs, weight, capacity, mask, tile_act, states,
-                      active_i32, out_deg_pad, plans=plan_levels,
-                      idents=idents, p_fns=p_fns, nv=float(n),
-                      need_haspred=need_hp, block_v=block_v, block_e=block_e,
-                      interpret=interpret)
+            common = dict(plans=plan_levels, idents=idents, p_fns=p_fns,
+                          nv=float(n), need_haspred=need_hp, wdeg=wdeg_pad,
+                          block_v=block_v, block_e=block_e,
+                          interpret=interpret)
+            if d == "pull":
+                red, hp = _er.fused_ell_sweep(
+                    nbrs, weight, capacity, mask, tile_act, states,
+                    active_i32, out_deg_pad, **common)
+                return red, hp, jnp.float32(0)
+            if sorted_res:
+                res_tile_act = _er.resolution_tile_activity(
+                    res_valid, res_src_tile, tile_act, res_nnz,
+                    block_v, block_e)
+                red, hp = _er.fused_ell_push_sweep(
+                    nbrs, weight, capacity, mask, tile_act, states,
+                    active_i32, out_deg_pad, resolution="sorted",
+                    res=(res_in2out, res_valid, res_tile_act), **common)
+                res_w = jnp.sum(res_nnz * res_tile_act).astype(jnp.float32)
+                return red, hp, res_w
+            red, hp = _er.fused_ell_push_sweep(
+                nbrs, weight, capacity, mask, tile_act, states,
+                active_i32, out_deg_pad, resolution="scatter", **common)
+            return red, hp, jnp.float32(nbrs.shape[0] * nbrs.shape[1])
 
         def masked_branch(d):
             """One frontier-masked (+model) sweep in direction ``d``; edge
@@ -195,32 +295,43 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 else:
                     tile_act = _er.tile_activity_push(tile_nnz, active_i32,
                                                       block_v)
-                red, _ = sweep(d, state_d, active_i32, tile_act, False)
+                red, _, res_w = sweep(d, state_d, active_i32, tile_act, False)
                 w_inc = jnp.sum((tile_nnz * tile_act)).astype(jnp.float32)
-                return tuple(red[c] for c in comps_order), w_inc
+                return tuple(red[c] for c in comps_order), w_inc, res_w
             return branch
 
         def body(carry):
-            state, active, k, work, pushes = carry
+            state, active, k, work, pushes, res_work = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             if idempotent:
                 active_i32 = active.astype(jnp.int32)
                 if len(use) == 2:
-                    # Gemini heuristic: sparse frontier → push (work ∝
+                    # Direction switch: sparse frontier → push (work ∝
                     # active rows), dense frontier → pull (gather tiles).
-                    # Density over the LOGICAL vertex count — padding rows
-                    # (never active after iteration 1) must not dilute it.
-                    frac = jnp.sum(active.astype(jnp.float32)) / n
-                    use_push = frac <= dense_threshold
-                    red_t, w_inc = jax.lax.cond(
+                    if switch_k is not None:
+                        # Gemini rule: compare the frontier's outgoing
+                        # EDGE mass against |E|/k — degree data already in
+                        # the layout.  Padding rows carry 0 in out_deg_raw.
+                        e_frontier = jnp.sum(active.astype(jnp.float32)
+                                             * out_deg_raw)
+                        use_push = e_frontier <= num_edges / switch_k
+                    else:
+                        # documented fallback: frontier VERTEX fraction
+                        # over the logical vertex count (padding rows,
+                        # never active after iteration 1, must not dilute).
+                        frac = jnp.sum(active.astype(jnp.float32)) / n
+                        use_push = frac <= dense_threshold
+                    red_t, w_inc, res_w = jax.lax.cond(
                         use_push, masked_branch("push"), masked_branch("pull"),
                         (state_d, active_i32))
                     pushes = pushes + use_push.astype(jnp.int32)
                 else:
-                    red_t, w_inc = masked_branch(use[0])((state_d, active_i32))
+                    red_t, w_inc, res_w = masked_branch(use[0])(
+                        (state_d, active_i32))
                     pushes = pushes + (1 if use[0] == "push" else 0)
                 red = {c: red_t[i] for i, c in enumerate(comps_order)}
                 work = work + w_inc
+                res_work = res_work + res_w
                 new_d = {}
                 for p in plans:
                     new_d.update(iterate.plan_merge(p, state_d, red,
@@ -231,27 +342,31 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 d = use[0]
                 work = work + num_edges
                 tiles_static = (ell[d][4] > 0).astype(jnp.int32)
-                red, hp = sweep(d, state_d, ones_act, tiles_static, True)
+                red, hp, res_w = sweep(d, state_d, ones_act, tiles_static,
+                                       True)
+                res_work = res_work + res_w
                 red = iterate._apply_epilogue(comps, red)
                 new_d = iterate._recompute_merge(plans, comps_by_idx,
                                                  state_d, red, hp)
                 pushes = pushes + (1 if d == "push" else 0)
             new = tuple(new_d[cr.idx] for cr in comps)
             ch = iterate._changed(comps, new, state, tol)
-            return new, ch, k + 1, work, pushes
+            return new, ch, k + 1, work, pushes, res_work
 
         def cond(carry):
-            _, active, k, _, _ = carry
+            _, active, k, _, _, _ = carry
             return jnp.any(active) & (k < max_iter)
 
         state0 = init_state()
-        state, active, k, work, pushes = jax.lax.while_loop(
+        state, active, k, work, pushes, res_work = jax.lax.while_loop(
             cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
-                         jnp.float32(0), jnp.int32(0)))
-        return state, k, work, pushes
+                         jnp.float32(0), jnp.int32(0), jnp.float32(0)))
+        return state, k, work, pushes, res_work
 
     if batch:
-        n_shared = 5 * len(use) + 1          # ELL tuples + out_deg: unbatched
+        # everything but srcs (ELL tuples, degrees, resolution arrays) is
+        # shared across the batch
+        n_shared = 5 * len(use) + 2 + (4 if sorted_res else 0)
         return jax.jit(jax.vmap(run, in_axes=(None,) * n_shared + (0,)))
     return jax.jit(run)
 
@@ -273,27 +388,43 @@ def _srcs_vector(comps, sources=None):
 
 
 def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
-                     interpret, use, dense_threshold, batch=False):
+                     interpret, use, dense_threshold, switch_k,
+                     push_resolution, batch=False):
     """Cache lookup / build of the compiled fixpoint, plus the shared
-    argument prefix (ELL arrays + out-degrees) it runs on."""
+    argument prefix (ELL arrays + degree vectors + dst-sorted resolution
+    arrays) it runs on."""
     ells = {"pull": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
                                        direction="in") if "pull" in use else None,
             "push": blocked_ell_cached(g, block_v=block_v, block_e=block_e,
                                        direction="out") if "push" in use else None}
+    # Normalize knobs a pinned executor never reads out of its cache key,
+    # so e.g. model="pull" runs with different push_resolution values share
+    # one compiled entry instead of retracing per knob.
+    if len(use) != 2:                # pinned direction: no switch traced
+        dense_threshold = None
+        switch_k = None
+    if "push" not in use:            # no push sweep: no resolution traced
+        push_resolution = "unused"
+    res = push_resolution_cached(g, block_v=block_v, block_e=block_e) \
+        if (push_resolution == "sorted" and "push" in use) else None
     key = (g.n, tuple(tuple(_plan_levels(p)) for p in plans),
            _comps_key(comps), max_iter, tol, block_v, block_e, interpret,
-           use, dense_threshold, batch)
+           use, dense_threshold, switch_k, push_resolution, batch)
     run = _exec_cache_get(key)
     if run is None:
         run = _build_pallas_executor(comps, plans, g.n, max_iter, tol,
                                      block_v, block_e, interpret, use,
-                                     dense_threshold, batch=batch)
+                                     dense_threshold, switch_k,
+                                     push_resolution, batch=batch)
         _exec_cache_put(key, run, comps)
     args = []
     for d in use:
         e = ells[d]
         args += [e.nbrs, e.weight, e.capacity, e.mask, e.tile_nnz]
     args.append(g.out_deg)
+    args.append(w_out_deg(g))
+    if res is not None:
+        args += [res.in2out, res.valid, res.src_tile, res.tile_nnz]
     return run, args
 
 
@@ -301,23 +432,38 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    tol: float = 0.0, block_v: int = 8, block_e: int = 128,
                    interpret: Optional[bool] = None, direction: str = "auto",
                    dense_threshold: float = DENSE_FRONTIER,
+                   switch_k="auto", push_resolution: str = PUSH_RESOLUTION,
                    sources: Optional[dict] = None) -> iterate.IterationResult:
     """Fixpoint of the fused reduction with single-launch Pallas edge sweeps.
 
     ``direction`` selects the sweep model per DESIGN.md §2:
 
       "auto"  (default) Gemini-style: idempotent rounds pick push vs pull
-              per iteration from the frontier density; non-idempotent
-              rounds run pull− full recompute.
+              per iteration from the frontier; non-idempotent rounds run
+              pull− full recompute.
       "pull"  dst-keyed gather sweeps only (Def. 1 / Def. 2).
       "push"  src-keyed scatter sweeps only (Def. 3 / Def. 4).
+
+    ``switch_k`` tunes the "auto" switch: "auto" (default) applies the
+    Gemini rule with k = ``SWITCH_K`` (push while |E_frontier| ≤ |E|/k,
+    from the out-degree data already in the layout), a positive number
+    overrides k per query, and None falls back to the documented
+    ``DENSE_FRONTIER`` vertex-fraction threshold (``dense_threshold`` —
+    only read under switch_k=None; a custom threshold with the Gemini
+    rule active raises rather than being silently inert).
+
+    ``push_resolution`` selects the push sweep's dst-keyed resolution
+    (DESIGN.md §10): "sorted" (default) resolves through the precomputed
+    dst-major segment layout with a frontier-proportional Pallas tile
+    pass; "scatter" keeps the reference full-rectangle XLA scatter.
 
     ``sources`` optionally overrides per-component query sources; overrides
     (like the spec's own sources) are runtime arguments of the compiled
     executor, never trace constants.
 
     The returned result carries ``pull_iters``/``push_iters`` — the runtime
-    per-direction iteration counts — which are also accumulated into
+    per-direction iteration counts — and ``resolve_work`` — the resolution
+    edge work actually performed — which are also accumulated into
     ``edge_reduce.SWEEP_STATS`` for benchmarks.
     """
     n = g.n
@@ -326,20 +472,30 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
     use = _directions_used(direction, idempotent)
+    # the dense_threshold-vs-Gemini conflict only exists when a switch is
+    # actually traced; pinned directions ignore both knobs
+    switch_k = _normalize_switch_k(
+        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
+    push_resolution = _check_resolution(push_resolution)
     run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
-                                 block_e, interpret, use, dense_threshold)
-    state, k, work, pushes = run(*args, _srcs_vector(comps, sources))
+                                 block_e, interpret, use, dense_threshold,
+                                 switch_k, push_resolution)
+    state, k, work, pushes, res_work = run(*args, _srcs_vector(comps, sources))
     k_i = iterate._host(k, int)
     p_i = iterate._host(pushes, int)
+    rw = iterate._host(res_work, float)
     if isinstance(k_i, int) and isinstance(p_i, int):
         _er.SWEEP_STATS["push_iters"] += p_i
         _er.SWEEP_STATS["pull_iters"] += k_i - p_i
+    if isinstance(rw, float):
+        _er.SWEEP_STATS["resolve_work"] += rw
     res = iterate.IterationResult(
         state=tuple(s[:n] for s in state),
         iterations=k_i,
         edge_work=iterate._host(work, float))
     res.push_iters = p_i
     res.pull_iters = k_i - p_i        # valid for ints and tracers alike
+    res.resolve_work = rw
     return res
 
 
@@ -348,7 +504,9 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
                          block_v: int = 8, block_e: int = 128,
                          interpret: Optional[bool] = None,
                          direction: str = "auto",
-                         dense_threshold: float = DENSE_FRONTIER) -> iterate.IterationResult:
+                         dense_threshold: float = DENSE_FRONTIER,
+                         switch_k="auto",
+                         push_resolution: str = PUSH_RESOLUTION) -> iterate.IterationResult:
     """Run B concurrent queries of one fused round in ONE launch (DESIGN.md
     §9): the compiled fixpoint of ``iterate_pallas``, ``jax.vmap``ped over a
     batch of query sources sharing one blocked-ELL layout.
@@ -380,19 +538,24 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     if srcs.ndim != 2 or srcs.shape[1] != len(comps):
         raise ValueError(f"sources must be [B] or [B, {len(comps)}], got "
                          f"shape {srcs.shape}")
+    switch_k = _normalize_switch_k(
+        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
+    push_resolution = _check_resolution(push_resolution)
     run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
                                  block_e, interpret, use, dense_threshold,
-                                 batch=True)
-    state, k, work, pushes = run(*args, srcs)
+                                 switch_k, push_resolution, batch=True)
+    state, k, work, pushes, res_work = run(*args, srcs)
     res = iterate.IterationResult(
         state=tuple(s[:, :n] for s in state),
         iterations=k,                     # [B] per-query iteration counts
         edge_work=work)                   # [B] per-query edge work
     res.push_iters = pushes
     res.pull_iters = k - pushes
+    res.resolve_work = res_work           # [B] per-query resolution work
     try:
         _er.SWEEP_STATS["push_iters"] += int(jnp.sum(pushes))
         _er.SWEEP_STATS["pull_iters"] += int(jnp.sum(k - pushes))
+        _er.SWEEP_STATS["resolve_work"] += float(jnp.sum(res_work))
     except (jax.errors.ConcretizationTypeError,
             jax.errors.TracerArrayConversionError):
         pass

@@ -77,6 +77,47 @@ def test_batched_direction_switch_bitwise():
         assert got.stats.push_iters == want.stats.push_iters
 
 
+@pytest.mark.parametrize("resolution", ["sorted", "scatter"])
+def test_batched_matches_sequential_both_resolutions(resolution, small_graphs):
+    """The dst-sorted push resolution composes with the vmapped executors:
+    each resolution path's batched run is bit-identical to its own
+    sequential runs AND the two paths agree bit-for-bit on the batch."""
+    g = small_graphs["rmat"]
+    srcs = _sources(g, 5, seed=13)
+    prog = fusion.fuse(U.bfs(srcs[0]))
+    seq = [np.asarray(engine.run_program(
+        g, prog, engine="pallas", model="push", source=s,
+        push_resolution=resolution).value) for s in srcs]
+    batch = engine.run_program_batch(g, prog, sources=srcs, engine="pallas",
+                                     model="push",
+                                     push_resolution=resolution)
+    other = engine.run_program_batch(g, prog, sources=srcs, engine="pallas",
+                                     model="push",
+                                     push_resolution=("scatter" if resolution
+                                                      == "sorted" else
+                                                      "sorted"))
+    for s, got, alt, want in zip(srcs, batch, other, seq):
+        np.testing.assert_array_equal(np.asarray(got.value), want,
+                                      err_msg=f"src={s} {resolution}")
+        np.testing.assert_array_equal(np.asarray(got.value),
+                                      np.asarray(alt.value),
+                                      err_msg=f"src={s} cross-resolution")
+        assert got.stats.resolve_work > 0
+
+
+def test_batched_reports_per_query_resolve_work(small_graphs):
+    """Batched stats carry per-query resolution work, matching the
+    sequential runs exactly (deterministic tile counts)."""
+    g = small_graphs["rmat"]
+    srcs = _sources(g, 4, seed=3)
+    prog = fusion.fuse(U.sssp(srcs[0]))
+    batch = engine.run_program_batch(g, prog, sources=srcs, engine="pallas")
+    for s, got in zip(srcs, batch):
+        want = engine.run_program(g, prog, engine="pallas", source=s)
+        assert got.stats.resolve_work == want.stats.resolve_work
+        assert got.stats.push_iters == want.stats.push_iters
+
+
 def test_batched_matches_reference_engines(small_graphs):
     """The batched pallas path agrees with the pull reference engine (which
     run_program_batch uses as its sequential fallback) across sources."""

@@ -49,29 +49,45 @@ def _rand_graph(n, density, seed, symmetric=False):
     return undirected(g) if symmetric else g
 
 
-def _value(g, name, eng, model=None):
+def _value(g, name, eng, model=None, **kw):
     prog = fusion.fuse(U.ALL_SPECS[name]())
-    return engine.run_program(g, prog, engine=eng, model=model).value
+    return engine.run_program(g, prog, engine=eng, model=model, **kw).value
 
 
 def _assert_directions_agree_idempotent(name, n, density, seed):
     g = _rand_graph(n, density, seed, symmetric=(name == "CC"))
     want = norm_inf(_value(g, name, "pull"))
-    for eng, model in (("push", None), ("pallas", "pull"),
-                       ("pallas", "push"), ("pallas", None)):
-        got = norm_inf(_value(g, name, eng, model=model))
+    resolutions = {}
+    for eng, model, resolution in (
+            ("push", None, None), ("pallas", "pull", None),
+            ("pallas", "push", "sorted"), ("pallas", "push", "scatter"),
+            ("pallas", None, "sorted"), ("pallas", None, "scatter")):
+        raw = _value(g, name, eng, model=model,
+                     **({} if resolution is None else
+                        {"push_resolution": resolution}))
+        got = norm_inf(raw)
         np.testing.assert_allclose(got, want, atol=1e-4,
                                    err_msg=f"{name} {eng}/{model}")
+        # the two resolution paths of one (engine, model) must agree
+        # bit-for-bit, not just through norm_inf
+        if resolution is not None:
+            other = resolutions.setdefault((eng, model), np.asarray(raw))
+            np.testing.assert_array_equal(
+                np.asarray(raw), other,
+                err_msg=f"{name} {model}: sorted != scatter bitwise")
 
 
 def _assert_directions_agree_nonidempotent(n, density, seed):
     """NSP fuses a min-lex primary with a non-idempotent sum secondary ⇒
     the engines run the − (full recompute) models with the has-pred probe:
-    pallas pull− and forced push− must both match the pull engine."""
+    pallas pull− and forced push− (both resolution paths) must all match
+    the pull engine."""
     g = _rand_graph(n, density, seed)
     want = norm_inf(_value(g, "NSP", "pull"))
-    for eng, model in (("pallas", None), ("pallas", "push")):
-        got = norm_inf(_value(g, "NSP", eng, model=model))
+    for eng, model, kw in (("pallas", None, {}),
+                           ("pallas", "push", {"push_resolution": "sorted"}),
+                           ("pallas", "push", {"push_resolution": "scatter"})):
+        got = norm_inf(_value(g, "NSP", eng, model=model, **kw))
         np.testing.assert_allclose(got, want, atol=1e-4,
                                    err_msg=f"NSP {eng}/{model}")
 

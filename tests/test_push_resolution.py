@@ -1,0 +1,443 @@
+"""Dst-sorted push resolution + the Gemini direction autotune (DESIGN.md §10).
+
+Covers the acceptance contract of the frontier-proportional resolution path:
+
+* the `structure.PushResolution` permutation maps every dst-major slot to
+  the out-layout slot of the SAME edge (weights/destinations round-trip),
+* `fused_ell_push_sweep(resolution="sorted")` ≡ `"scatter"` bit-for-bit at
+  the kernel level across random graphs and frontier densities,
+* resolution work is frontier-proportional: Σ tile_nnz of the resolution
+  tiles actually processed, strictly under the scatter's full rectangle on
+  sparse frontiers, and 0 when nothing is active,
+* the resolution tile pass is its own launch class (`resolve_launches`):
+  1 per traced push sweep under "sorted", 0 under "scatter"/pull — the
+  edge-sweep launch contract (`launches`) is unchanged,
+* `push_resolution` is an executor-cache key (no silent cross-knob reuse),
+* the Gemini |E_frontier| ≤ |E|/k switch replaces the fixed vertex-fraction
+  threshold, is per-query tunable, and `switch_k=None` falls back to the
+  documented `DENSE_FRONTIER` rule,
+* stat bumps happen only after a successful launch construction.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import norm_inf
+from repro.core import engine, fusion
+from repro.core import usecases as U
+from repro.graph import segment
+from repro.graph.structure import (push_resolution_cached, rmat_graph,
+                                   to_blocked_ell, to_push_resolution,
+                                   uniform_graph)
+from repro.kernels import edge_reduce as er
+from repro.kernels import ops as kops
+
+SAMPLES = [(9, 1.5, 11), (17, 2.5, 22), (26, 3.0, 33)]
+
+
+def _cold():
+    engine.clear_program_caches()
+    er.reset_sweep_stats()
+
+
+# ---------------------------------------------------------------------------
+# layout: the dst-major permutation is exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,density,seed", SAMPLES)
+def test_resolution_permutation_roundtrips_edges(n, density, seed):
+    """in2out must map the k-th dst-major slot of v to the out-layout slot
+    holding the SAME edge: gathering the out rectangle's weights and
+    destinations through it reproduces the in-layout rectangle exactly,
+    and `valid` IS the in-layout mask (same fill order ⇒ the sorted
+    reduction tree is the pull sweep's reduction tree)."""
+    g = uniform_graph(n, max(1, int(density * n)), seed=seed)
+    res = to_push_resolution(g)
+    ell_in = to_blocked_ell(g)
+    ell_out = to_blocked_ell(g, direction="out")
+    valid = np.asarray(res.valid)
+    in2out = np.asarray(res.in2out)
+    assert res.width == ell_in.width and res.out_width == ell_out.width
+    np.testing.assert_array_equal(valid, np.asarray(ell_in.mask))
+    w_via = np.asarray(ell_out.weight).reshape(-1)[in2out]
+    np.testing.assert_array_equal(np.where(valid, w_via, 0),
+                                  np.where(valid, np.asarray(ell_in.weight), 0))
+    # the out-slot's stored destination is the dst-major slot's own row
+    dst_via = np.asarray(ell_out.nbrs).reshape(-1)[in2out]
+    rows = np.broadcast_to(np.arange(res.n_pad)[:, None], valid.shape)
+    np.testing.assert_array_equal(dst_via[valid], rows[valid])
+    # every real out-slot is hit exactly once (it is a permutation of edges)
+    assert sorted(in2out[valid].tolist()) == \
+        sorted(np.flatnonzero(np.asarray(ell_out.mask).reshape(-1)).tolist())
+    # src_tile agrees with the out-layout grid geometry
+    n_j_out = ell_out.width // ell_out.block_e
+    want_tile = ((in2out // ell_out.width) // res.block_v) * n_j_out + \
+        (in2out % ell_out.width) // res.block_e
+    np.testing.assert_array_equal(np.asarray(res.src_tile), want_tile)
+
+
+def test_resolution_layout_cached_per_graph():
+    g1 = uniform_graph(12, 30, seed=1)
+    g2 = uniform_graph(12, 30, seed=2)
+    assert push_resolution_cached(g1) is push_resolution_cached(g1)
+    assert push_resolution_cached(g1) is not push_resolution_cached(g2)
+    assert engine.program_cache_stats()["push_resolutions"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# kernel level: sorted ≡ scatter, and work is frontier-proportional
+# ---------------------------------------------------------------------------
+
+def _push_sweep(g, frontier_frac, seed, resolution):
+    ell = to_blocked_ell(g, direction="out")
+    res = to_push_resolution(g)
+    rng = np.random.default_rng(seed)
+    state = jnp.asarray(rng.integers(1, 9, ell.n_pad).astype(np.float32))
+    ident = float(segment.identity("min", jnp.float32))
+    active = jnp.asarray((rng.random(ell.n_pad) < frontier_frac)
+                         .astype(np.int32))
+    tile_act = er.tile_activity_push(ell.tile_nnz, active, ell.block_v)
+    kw = dict(plans=(((0, "min"),),), idents={0: ident},
+              p_fns={0: lambda env: env["n"] + env["w"]}, nv=g.n)
+    if resolution == "sorted":
+        res_tile_act = er.resolution_tile_activity(
+            res.valid, res.src_tile, tile_act, res.tile_nnz,
+            res.block_v, res.block_e)
+        red, _ = er.fused_ell_push_sweep(
+            ell.nbrs, ell.weight, ell.capacity, ell.mask, tile_act,
+            {0: state}, active, jnp.ones(ell.n_pad, jnp.float32),
+            resolution="sorted",
+            res=(res.in2out, res.valid, res_tile_act), **kw)
+        work = float(jnp.sum(res.tile_nnz * res_tile_act))
+    else:
+        red, _ = er.fused_ell_push_sweep(
+            ell.nbrs, ell.weight, ell.capacity, ell.mask, tile_act,
+            {0: state}, active, jnp.ones(ell.n_pad, jnp.float32),
+            resolution="scatter", **kw)
+        work = float(ell.n_pad * ell.width)
+    return np.asarray(red[0]), work
+
+
+@pytest.mark.parametrize("n,density,seed", SAMPLES)
+@pytest.mark.parametrize("frontier", [0.0, 0.1, 0.5, 1.0])
+def test_sorted_resolution_matches_scatter_kernel_level(n, density, seed,
+                                                        frontier):
+    g = uniform_graph(n, max(1, int(density * n)), seed=seed)
+    got, w_sorted = _push_sweep(g, frontier, seed, "sorted")
+    want, w_scatter = _push_sweep(g, frontier, seed, "scatter")
+    np.testing.assert_array_equal(got, want)
+    assert w_sorted <= w_scatter
+
+
+def test_sorted_resolution_work_frontier_proportional():
+    """A one-vertex frontier on a power-law graph must keep only the
+    resolution tiles holding that vertex's successors — Σ kept nnz bounded
+    by the frontier's out-edges padded to tile granularity, and far under
+    the scatter's full rectangle."""
+    g = rmat_graph(128, 1024, seed=4)
+    ell = to_blocked_ell(g, direction="out")
+    res = to_push_resolution(g)
+    # a TAIL vertex (power-law: low out-degree, co-blocked with other tail
+    # rows) — a hub frontier legitimately lights most resolution tiles
+    active = jnp.zeros(ell.n_pad, jnp.int32).at[125].set(1)
+    tile_act = er.tile_activity_push(ell.tile_nnz, active, ell.block_v)
+    res_tile_act = er.resolution_tile_activity(
+        res.valid, res.src_tile, tile_act, res.tile_nnz,
+        res.block_v, res.block_e)
+    kept = float(jnp.sum(res.tile_nnz * res_tile_act))
+    full = float(jnp.sum(res.tile_nnz))
+    # the frontier-active out tiles hold ≤ block_v rows of successors; their
+    # candidates land in ≤ that many resolution tiles' worth of real slots
+    out_edge_bound = float(jnp.sum(ell.tile_nnz * tile_act))
+    assert kept <= out_edge_bound * res.block_v * res.block_e
+    assert kept < full, "sparse frontier must not light every resolution tile"
+    # and an empty frontier keeps nothing
+    none_act = er.resolution_tile_activity(
+        res.valid, res.src_tile, jnp.zeros_like(tile_act), res.tile_nnz,
+        res.block_v, res.block_e)
+    assert float(jnp.sum(none_act)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine level: knob equivalence, launch classes, cache keying, work stats
+# ---------------------------------------------------------------------------
+
+def _value(g, name, model=None, push_resolution=None, **kw):
+    prog = fusion.fuse(U.ALL_SPECS[name]())
+    return engine.run_program(g, prog, engine="pallas", model=model,
+                              push_resolution=push_resolution, **kw)
+
+
+@pytest.mark.parametrize("name", ["BFS", "SSSP", "CC"])
+@pytest.mark.parametrize("model", ["push", None])
+def test_sorted_matches_scatter_engine_level(name, model, small_graphs):
+    from repro.graph.structure import undirected
+    g = small_graphs["rmat"]
+    g = undirected(g) if name == "CC" else g
+    a = _value(g, name, model=model, push_resolution="sorted")
+    _cold()
+    b = _value(g, name, model=model, push_resolution="scatter")
+    np.testing.assert_array_equal(np.asarray(a.value), np.asarray(b.value))
+    want = norm_inf(engine.run_program(
+        g, fusion.fuse(U.ALL_SPECS[name]()), engine="pull").value)
+    np.testing.assert_allclose(norm_inf(a.value), want, atol=1e-4)
+
+
+def test_sorted_matches_scatter_nonidempotent_push():
+    """NSP forced push−: the full-recompute scatter path vs the sorted
+    segment path (sum secondary — candidate multisets are identical and the
+    test values are exactly representable, so bitwise still holds)."""
+    g = uniform_graph(14, 34, seed=6)
+    a = _value(g, "NSP", model="push", push_resolution="sorted")
+    _cold()
+    b = _value(g, "NSP", model="push", push_resolution="scatter")
+    np.testing.assert_array_equal(np.asarray(a.value), np.asarray(b.value))
+
+
+def test_resolve_launch_class(small_graphs):
+    """"sorted" adds exactly one resolution tile pass per traced push sweep
+    — counted under resolve_launches, NEVER under the edge-sweep counters
+    (the sweep launch contract of DESIGN.md §2 is direction-symmetric)."""
+    g = small_graphs["rmat"]
+    prog = fusion.fuse(U.ALL_SPECS["BFS"]())
+    _cold()
+    engine.run_program(g, prog, engine="pallas", model="push",
+                       push_resolution="sorted")
+    assert er.SWEEP_STATS["launches"] == 1
+    assert er.SWEEP_STATS["push_launches"] == 1
+    assert er.SWEEP_STATS["resolve_launches"] == 1
+    _cold()
+    engine.run_program(g, prog, engine="pallas", model="push",
+                       push_resolution="scatter")
+    assert er.SWEEP_STATS["launches"] == 1
+    assert er.SWEEP_STATS["resolve_launches"] == 0
+    _cold()
+    engine.run_program(g, prog, engine="pallas", model="pull")
+    assert er.SWEEP_STATS["resolve_launches"] == 0
+    _cold()
+    engine.run_program(g, prog, engine="pallas")      # auto: 1 traced push
+    assert er.SWEEP_STATS["launches"] == 2
+    assert er.SWEEP_STATS["resolve_launches"] == 1
+
+
+def test_push_resolution_is_cache_key(small_graphs):
+    g = small_graphs["rmat"]
+    prog = fusion.fuse(U.ALL_SPECS["SSSP"]())
+    _cold()
+    engine.run_program(g, prog, engine="pallas", push_resolution="sorted")
+    assert kops.executor_cache_size() == 1
+    engine.run_program(g, prog, engine="pallas", push_resolution="scatter")
+    assert kops.executor_cache_size() == 2
+    engine.run_program(g, prog, engine="pallas", push_resolution="sorted")
+    assert kops.executor_cache_size() == 2              # hit, no new entry
+
+
+def test_resolve_work_reported_and_frontier_proportional():
+    """The engine-level acceptance quantity: on a power-law BFS the sorted
+    path's resolution work must stay strictly under the scatter path's
+    full-rectangle cost and be reported through ExecStats + SWEEP_STATS."""
+    g = rmat_graph(256, 2048, seed=17)
+    prog = fusion.fuse(U.ALL_SPECS["BFS"]())
+    _cold()
+    srt = engine.run_program(g, prog, engine="pallas",
+                             push_resolution="sorted")
+    rw_sorted = srt.stats.resolve_work
+    assert er.SWEEP_STATS["resolve_work"] == rw_sorted
+    _cold()
+    sct = engine.run_program(g, prog, engine="pallas",
+                             push_resolution="scatter")
+    assert sct.stats.push_iters >= 1, "heuristic must take push iterations"
+    assert srt.stats.push_iters == sct.stats.push_iters
+    assert 0 < rw_sorted < sct.stats.resolve_work
+    np.testing.assert_array_equal(np.asarray(srt.value),
+                                  np.asarray(sct.value))
+
+
+def test_invalid_push_resolution_rejected(small_graphs):
+    prog = fusion.fuse(U.ALL_SPECS["BFS"]())
+    with pytest.raises(ValueError, match="push_resolution"):
+        engine.run_program(small_graphs["rmat"], prog, engine="pallas",
+                           push_resolution="radix")
+
+
+# ---------------------------------------------------------------------------
+# Gemini direction autotune (|E_frontier| vs |E|/k)
+# ---------------------------------------------------------------------------
+
+def test_switch_k_is_edge_mass_not_vertex_fraction():
+    """A single active HUB carries pull-worthy edge volume: under the
+    Gemini rule a k that classifies the hub's edge mass as dense must force
+    pull even though the vertex fraction is tiny — the case the old
+    DENSE_FRONTIER vertex rule gets wrong by construction."""
+    # star: vertex 0 → all others; BFS from 0 has a 1-vertex frontier with
+    # (n−1)/|E| = 100% of the edges behind it
+    n = 40
+    src = np.zeros(n - 1, np.int64)
+    dst = np.arange(1, n)
+    from repro.graph.structure import from_edges
+    g = from_edges(n, src, dst)
+    dk = U.handwritten_bfs_depth(0)
+    _cold()
+    res = engine.run_direct(g, dk, engine="pallas", switch_k=2.0)
+    # iteration 1: e_frontier = |E| > |E|/2 → pull, every iteration after
+    # has an empty-out-degree frontier (leaves) → push
+    assert res.stats.pull_iters >= 1
+    _cold()
+    res2 = engine.run_direct(g, dk, engine="pallas", switch_k=0.5)
+    # |E|/0.5 = 2|E|: even the full-graph frontier reads as sparse → push
+    assert res2.stats.pull_iters == 0 and res2.stats.push_iters >= 1
+    np.testing.assert_array_equal(np.asarray(res.value),
+                                  np.asarray(res2.value))
+
+
+def test_switch_k_none_falls_back_to_dense_frontier():
+    """switch_k=None restores the documented vertex-fraction fallback, and
+    both rules agree on the fixpoint (direction never changes values)."""
+    from repro.graph.structure import line_graph
+    g = line_graph(48, weighted=True, seed=3)
+    dk = U.handwritten_bfs_depth(0)
+    _cold()
+    gem = engine.run_direct(g, dk, engine="pallas")           # Gemini default
+    _cold()
+    frac = engine.run_direct(g, dk, engine="pallas", switch_k=None)
+    np.testing.assert_array_equal(np.asarray(gem.value),
+                                  np.asarray(frac.value))
+    for r in (gem, frac):
+        assert r.stats.pull_iters > 0 and r.stats.push_iters > 0
+    # distinct heuristics are distinct executor entries (key carries k)
+    _cold()
+    engine.run_direct(g, dk, engine="pallas", switch_k=10.0)
+    engine.run_direct(g, dk, engine="pallas", switch_k=30.0)
+    assert kops.executor_cache_size() == 2
+
+
+def test_switch_k_rejects_junk():
+    from repro.graph.structure import line_graph
+    g = line_graph(8)
+    dk = U.handwritten_bfs_depth(0)
+    with pytest.raises(ValueError, match="switch_k"):
+        engine.run_direct(g, dk, engine="pallas", switch_k="fastest")
+    for bad in (0.0, -5):
+        with pytest.raises(ValueError, match="switch_k must be > 0"):
+            engine.run_direct(g, dk, engine="pallas", switch_k=bad)
+
+
+def test_dense_threshold_conflict_rejected():
+    """A custom dense_threshold while the Gemini rule is active would be
+    silently inert — reject it instead; switch_k=None restores it."""
+    from repro.core import iterate
+    from repro.graph.structure import line_graph
+    from repro.core.synthesis import synthesize_round
+    g = line_graph(8)
+    dk = U.handwritten_bfs_depth(0)
+    from repro.core.fusion import Prim
+    comp = iterate.CompRuntime(idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
+                               p_fn=dk.p_fn, init_fn=dk.init_fn,
+                               source=dk.source)
+    with pytest.raises(ValueError, match="dense_threshold"):
+        kops.iterate_pallas(g, [comp], [Prim(dk.rop, 0)],
+                            dense_threshold=0.2)
+    res = kops.iterate_pallas(g, [comp], [Prim(dk.rop, 0)],
+                              dense_threshold=0.2, switch_k=None)
+    assert res.iterations > 0
+    # a PINNED direction never traces the switch, so a custom threshold is
+    # harmless there and must not raise (pre-PR calls keep working)
+    res = kops.iterate_pallas(g, [comp], [Prim(dk.rop, 0)],
+                              direction="pull", dense_threshold=0.2)
+    assert res.iterations > 0
+
+
+def test_pinned_direction_ignores_unused_knobs_in_cache_key(small_graphs):
+    """model="pull" never traces a push resolution or a direction switch —
+    varying those knobs must reuse ONE compiled executor, not retrace."""
+    g = small_graphs["rmat"]
+    prog = fusion.fuse(U.ALL_SPECS["SSSP"]())
+    _cold()
+    engine.run_program(g, prog, engine="pallas", model="pull",
+                       push_resolution="sorted")
+    engine.run_program(g, prog, engine="pallas", model="pull",
+                       push_resolution="scatter")
+    engine.run_program(g, prog, engine="pallas", model="pull",
+                       switch_k=7.0)
+    assert kops.executor_cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# stat bumps only after successful launch construction
+# ---------------------------------------------------------------------------
+
+def test_launch_stats_not_bumped_on_failed_trace(monkeypatch):
+    """A pallas_call whose construction/trace raises must leave every
+    launch counter untouched (interrupted traces used to pre-increment
+    push_launches and skew bench launch counts)."""
+    g = uniform_graph(12, 30, seed=5)
+    ell = to_blocked_ell(g, direction="out")
+    state = jnp.ones(ell.n_pad, jnp.float32)
+    ident = float(segment.identity("min", jnp.float32))
+    active = jnp.ones(ell.n_pad, jnp.int32)
+    er.reset_sweep_stats()
+
+    def boom(*a, **k):
+        raise RuntimeError("trace interrupted")
+
+    monkeypatch.setattr(er.pl, "pallas_call", boom)
+    kw = dict(plans=(((0, "min"),),), idents={0: ident},
+              p_fns={0: lambda env: env["n"] + env["w"]}, nv=g.n)
+    with pytest.raises(RuntimeError, match="trace interrupted"):
+        er.fused_ell_push_sweep(
+            ell.nbrs, ell.weight, ell.capacity, ell.mask,
+            jnp.ones_like(ell.tile_nnz), {0: state}, active,
+            jnp.ones(ell.n_pad, jnp.float32), **kw)
+    ell_in = to_blocked_ell(g)
+    with pytest.raises(RuntimeError, match="trace interrupted"):
+        er.fused_ell_sweep(
+            ell_in.srcs, ell_in.weight, ell_in.capacity, ell_in.mask,
+            jnp.ones_like(ell_in.tile_nnz), {0: state}, active,
+            jnp.ones(ell_in.n_pad, jnp.float32), **kw)
+    assert all(v == 0 for v in er.SWEEP_STATS.values())
+
+
+# ---------------------------------------------------------------------------
+# weighted push− epilogue parity (weighted PageRank)
+# ---------------------------------------------------------------------------
+
+def test_weighted_pagerank_pull_push_parity():
+    """The weighted push− epilogue round: reference pull−/push−/dense agree
+    to float tolerance, and on the pallas engine the dst-sorted resolution
+    reduces the SAME dst-major rectangle as the pull sweep — so forced push
+    is bitwise identical to pull, float sums included (DESIGN.md §10)."""
+    g = rmat_graph(48, 220, seed=7, weighted=True)
+    dk = U.handwritten_weighted_pagerank(g.n)
+    pull_ref = engine.run_direct(g, dk, engine="pull")
+    push_ref = engine.run_direct(g, dk, engine="push")
+    dense = engine.run_direct(g, dk, engine="dense")
+    np.testing.assert_allclose(np.asarray(pull_ref.value),
+                               np.asarray(push_ref.value), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(pull_ref.value),
+                               np.asarray(dense.value), rtol=1e-4)
+    _cold()
+    pp = engine.run_direct(g, dk, engine="pallas", model="pull")
+    ps = engine.run_direct(g, dk, engine="pallas", model="push")  # sorted
+    np.testing.assert_array_equal(np.asarray(pp.value), np.asarray(ps.value))
+    np.testing.assert_allclose(np.asarray(pp.value),
+                               np.asarray(pull_ref.value), rtol=1e-5)
+    # mass actually flows along weights: the unweighted kernels disagree
+    uw = engine.run_direct(g, U.handwritten_pagerank(g.n), engine="pull")
+    assert not np.allclose(np.asarray(uw.value), np.asarray(pull_ref.value))
+
+
+def test_weighted_pagerank_scatter_close():
+    """The scatter fallback associates the float sums differently, so it is
+    only allclose — which is exactly why the sorted path is the one that
+    carries the bitwise pull ≡ push guarantee."""
+    g = rmat_graph(48, 220, seed=9, weighted=True)
+    dk = U.handwritten_weighted_pagerank(g.n)
+    _cold()
+    a = engine.run_direct(g, dk, engine="pallas", model="push",
+                          push_resolution="sorted")
+    _cold()
+    b = engine.run_direct(g, dk, engine="pallas", model="push",
+                          push_resolution="scatter")
+    np.testing.assert_allclose(np.asarray(a.value), np.asarray(b.value),
+                               rtol=1e-5)
