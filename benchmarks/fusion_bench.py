@@ -35,11 +35,20 @@ quantities: executor-cache entries of the sequential sweep (the
 retrace-per-source regression this section exists for) and traced launch
 counts, never wall time.
 
+``--engines pallas`` also runs the sharded section (DESIGN.md §11) when the
+process has ≥ 2 devices (CI forces host devices via XLA_FLAGS): the
+``pallas_sharded`` engine on a 2-shard mesh vs the single-device engine on
+BFS/SSSP/PageRank — per-shard edge work and traced launches, cross-shard
+combine counts, and the compositional invariant that the global direction
+switch keeps the sharded fixpoint on the single-device iteration sequence
+(values bitwise-equal for the idempotent workloads, asserted in-bench).
+
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
 run regresses on traced launches, the fused/unfused edge-work ratio, the
-push-vs-pull work advantage, or the batched executor/retrace counts — the
-one comparison path shared by the CI bench-smoke gate and local runs.
+push-vs-pull work advantage, the batched executor/retrace counts, or the
+sharded engine's iteration parity / launch / combine counts — the one
+comparison path shared by the CI bench-smoke gate and local runs.
 """
 from __future__ import annotations
 
@@ -67,8 +76,11 @@ MULTI = ["DRR", "Trust", "RDS"]
 DIRECTION = ["BFS", "SSSP"]             # sparse-frontier direction workloads
 RESOLUTION = ["BFS", "SSSP"]            # push-resolution (sorted vs scatter)
 BATCHED = ["BFS", "SSSP"]               # single-source batched-query sweeps
+SHARDED = ["BFS", "SSSP", "PR"]         # shard_map composition (PR = direct
+                                        # PageRank, the epilogue pull− round)
 _BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
 _BATCH_B = 8                            # sources per batched sweep
+_SHARD_K = 2                            # shards of the sharded section's mesh
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_pallas.json")
@@ -222,14 +234,83 @@ def bench_batched(g, gname: str, weighted: bool, name: str,
     }
 
 
+def bench_sharded(g, gname: str, weighted: bool, name: str,
+                  k: int = _SHARD_K):
+    """Sharded section (DESIGN.md §11): ``pallas_sharded`` on a k-shard mesh
+    vs the single-device pallas engine on one workload.  The acceptance
+    quantities are compositional: the sharded run must take the SAME
+    iteration sequence (the global direction switch — gated via iteration +
+    push-iteration parity for the idempotent frontier workloads), its values
+    must match (bitwise when idempotent, allclose for the float-sum PR round
+    — asserted here, in-bench), and per-shard traced launches / cross-shard
+    combine counts must not grow vs the baseline.  Wall time is reported,
+    never gated.  Returns None (section skipped) when the process has fewer
+    than k devices — CI forces host devices via XLA_FLAGS."""
+    import jax
+    import numpy as np
+    if len(jax.devices()) < k:
+        return None
+    from jax.sharding import Mesh
+
+    from repro.kernels import edge_reduce as er
+    mesh = Mesh(np.asarray(jax.devices()[:k]), ("data",))
+    idempotent = name != "PR"
+
+    def one(eng):
+        engine.clear_program_caches()
+        er.reset_sweep_stats()
+        if name == "PR":
+            dk = U.handwritten_pagerank(g.n)
+            t, res = timed(lambda: engine.run_direct(
+                g, dk, engine=eng, mesh=mesh), repeats=1)
+        else:
+            prog = fusion.fuse(U.ALL_SPECS[name]())
+            t, res = timed(lambda: engine.run_program(
+                g, prog, engine=eng, mesh=mesh), repeats=1)
+        return t, res, dict(er.SWEEP_STATS)
+
+    t_s, res_s, stats_s = one("pallas_sharded")
+    t_1, res_1, stats_1 = one("pallas")
+    v_s, v_1 = np.asarray(res_s.value), np.asarray(res_1.value)
+    if idempotent:
+        assert np.array_equal(v_1, v_s), \
+            f"{name}: sharded diverged from single-device (bitwise)"
+        assert res_s.stats.iterations == res_1.stats.iterations and \
+            res_s.stats.push_iters == res_1.stats.push_iters, \
+            f"{name}: sharded iteration sequence diverged " \
+            f"({res_s.stats.iterations}/{res_s.stats.push_iters} vs " \
+            f"{res_1.stats.iterations}/{res_1.stats.push_iters})"
+    else:
+        assert np.allclose(v_1, v_s, atol=1e-5), \
+            f"{name}: sharded PR diverged beyond allclose"
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "shards": k, "idempotent": idempotent,
+        "iterations_sharded": res_s.stats.iterations,
+        "iterations_single": res_1.stats.iterations,
+        "push_iters_sharded": res_s.stats.push_iters,
+        "edge_work_sharded": float(res_s.stats.edge_work),
+        "edge_work_single": float(res_1.stats.edge_work),
+        "shard_work": list(res_s.stats.shard_work),
+        # SPMD traces the shard body once, so trace-time sweep counts ARE
+        # per-shard launches (one per direction branch per round)
+        "shard_launches_traced": stats_s["launches"],
+        "launches_traced_single": stats_1["launches"],
+        "cross_combines": res_s.stats.cross_combines,
+        "t_sharded_ms": t_s * 1e3, "t_single_ms": t_1 * 1e3,
+    }
+
+
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         engines=("pull", "push"), json_out=None, direction_usecases=None,
-        batched_usecases=None, resolution_usecases=None):
+        batched_usecases=None, resolution_usecases=None,
+        sharded_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
     batched_rows = []
     resolution_rows = []
+    sharded_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
@@ -239,12 +320,17 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     if resolution_usecases and "pallas" not in engines:
         raise ValueError("resolution_usecases bench the pallas engine's "
                          "push resolution; add 'pallas' to engines")
+    if sharded_usecases and "pallas" not in engines:
+        raise ValueError("sharded_usecases bench the pallas_sharded "
+                         "engine; add 'pallas' to engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
     if batched_usecases is None:
         batched_usecases = BATCHED if "pallas" in engines else []
     if resolution_usecases is None:
         resolution_usecases = RESOLUTION if "pallas" in engines else []
+    if sharded_usecases is None:
+        sharded_usecases = SHARDED if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -296,6 +382,14 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                 for name in batched_usecases:
                     batched_rows.append(
                         bench_batched(g, gname, weighted, name))
+                for name in sharded_usecases:
+                    row = bench_sharded(g, gname, weighted, name)
+                    if row is None:
+                        print(f"sharded section skipped ({name}): fewer "
+                              f"than {_SHARD_K} devices — set XLA_FLAGS="
+                              "--xla_force_host_platform_device_count")
+                    else:
+                        sharded_rows.append(row)
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
@@ -331,12 +425,26 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
              ["graph", "weights", "usecase", "batch", "exec_seq",
               "exec_batched", "traced_seq", "traced_batched",
               "queries_per_launch", "t_seq_ms", "t_batched_ms"])
+    if sharded_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["shards"], r["iterations_sharded"], r["iterations_single"],
+               round(r["edge_work_sharded"], 1),
+               round(r["edge_work_single"], 1),
+               r["shard_launches_traced"], r["cross_combines"],
+               round(r["t_sharded_ms"], 1), round(r["t_single_ms"], 1)]
+              for r in sharded_rows],
+             ["graph", "weights", "usecase", "shards", "iters_sharded",
+              "iters_single", "work_sharded", "work_single",
+              "shard_launches", "cross_combines", "t_sharded_ms",
+              "t_single_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
            "resolution_rows": resolution_rows,
            "batched_rows": batched_rows,
+           "sharded_rows": sharded_rows,
            "table": out}
-    if json_rows or direction_rows or batched_rows or resolution_rows:
+    if json_rows or direction_rows or batched_rows or resolution_rows \
+            or sharded_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -448,6 +556,42 @@ def compare_baseline(current: dict, baseline: dict,
                 f"{key}: sorted traced sweep launches "
                 f"{r['launches_traced_sorted']} > baseline "
                 f"{b['launches_traced_sorted']}")
+    base_sharded = {_row_key(r): r for r in baseline.get("sharded_rows", [])}
+    for r in current.get("sharded_rows", []):
+        key = _row_key(r)
+        # Standing compositional properties (DESIGN.md §11), not just diffs:
+        # the global direction switch must keep the sharded fixpoint on the
+        # single-device iteration sequence for the idempotent frontier
+        # workloads (value bitwise-equality is asserted inside
+        # bench_sharded itself).
+        if r.get("idempotent") and \
+                r["iterations_sharded"] != r["iterations_single"]:
+            errors.append(
+                f"{key}: sharded iterations {r['iterations_sharded']} != "
+                f"single-device {r['iterations_single']} — global direction "
+                "switch diverged")
+        b = base_sharded.get(key)
+        if b is None:
+            continue
+        # per-shard traced launches and cross-shard combine counts are the
+        # sharded engine's launch-contract analogues: strict, like
+        # launches_traced
+        if r["shard_launches_traced"] > b["shard_launches_traced"]:
+            errors.append(
+                f"{key}: per-shard traced launches "
+                f"{r['shard_launches_traced']} > baseline "
+                f"{b['shard_launches_traced']}")
+        if r["cross_combines"] > b["cross_combines"]:
+            errors.append(
+                f"{key}: cross-shard combines {r['cross_combines']} > "
+                f"baseline {b['cross_combines']}")
+        if b["edge_work_single"] and r["edge_work_single"]:
+            ovh_now = r["edge_work_sharded"] / r["edge_work_single"]
+            ovh_base = b["edge_work_sharded"] / b["edge_work_single"]
+            if ovh_now > ovh_base * (1 + rtol):
+                errors.append(
+                    f"{key}: sharded/single edge-work overhead regressed "
+                    f"{ovh_now:.3f} > baseline {ovh_base:.3f} (+{rtol:.0%})")
     base_batched = {_row_key(r): r for r in baseline.get("batched_rows", [])}
     for r in current.get("batched_rows", []):
         key = _row_key(r)
@@ -491,6 +635,11 @@ if __name__ == "__main__":
                     help="comma list of push-resolution workloads "
                          f"(default {','.join(RESOLUTION)} when pallas is "
                          "benchmarked; pass '' to skip)")
+    ap.add_argument("--sharded", default=None, metavar="NAMES",
+                    help="comma list of sharded-engine workloads "
+                         f"(default {','.join(SHARDED)} when pallas is "
+                         "benchmarked and >= 2 devices exist; pass '' to "
+                         "skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
                          f"(default {_JSON_PATH})")
@@ -517,13 +666,17 @@ if __name__ == "__main__":
         tuple(u for u in args.batched.split(",") if u)
     resolution = None if args.resolution is None else \
         tuple(u for u in args.resolution.split(",") if u)
+    sharded = None if args.sharded is None else \
+        tuple(u for u in args.sharded.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
                  engines=engines, json_out=json_out,
-                 batched_usecases=batched, resolution_usecases=resolution)
+                 batched_usecases=batched, resolution_usecases=resolution,
+                 sharded_usecases=sharded)
     if baseline is not None:
         if not (result["rows"] or result["direction_rows"]
-                or result["batched_rows"] or result["resolution_rows"]):
+                or result["batched_rows"] or result["resolution_rows"]
+                or result["sharded_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -537,4 +690,5 @@ if __name__ == "__main__":
               f"{len(baseline.get('rows', []))} rows, "
               f"{len(baseline.get('direction_rows', []))} direction rows, "
               f"{len(baseline.get('resolution_rows', []))} resolution rows, "
-              f"{len(baseline.get('batched_rows', []))} batched rows)")
+              f"{len(baseline.get('batched_rows', []))} batched rows, "
+              f"{len(baseline.get('sharded_rows', []))} sharded rows)")

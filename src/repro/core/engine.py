@@ -1,15 +1,20 @@
 """Triple-let executor: iteration → map → reduce (paper §5).
 
 Runs a ``FusedProgram`` (from fusion.fuse or fusion.lower_unfused) on a
-graph under one of the five engines:
+graph under one of the engines:
 
-  pull | push   sparse frontier engines (iterate.iterate_graph)
-  adaptive      Gemini-style per-iteration push/pull switch (segment ops)
-  dense         dense edge-matrix reference engine
-  pallas        direction-optimized blocked-ELL TPU kernel engine
-                (repro.kernels; ``model`` forces "pull"/"push", default
-                picks per iteration by frontier density)
-  distributed   shard_map vertex-cut engine (needs a mesh)
+  pull | push     sparse frontier engines (iterate.iterate_graph)
+  adaptive        Gemini-style per-iteration push/pull switch (segment ops)
+  dense           dense edge-matrix reference engine
+  pallas          direction-optimized blocked-ELL TPU kernel engine
+                  (repro.kernels; ``model`` forces "pull"/"push", default
+                  picks per iteration by frontier density)
+  distributed     shard_map vertex-cut engine, plain segment-reduce per
+                  shard (needs a mesh)
+  pallas_sharded  shard_map vertex-cut engine running the fused blocked-ELL
+                  Pallas sweeps SHARD-LOCALLY with monoid cross-shard
+                  combines and a global direction switch (needs a mesh;
+                  DESIGN.md §11)
 
 The three primitives map exactly as §5 prescribes: the fused ilet runs as an
 iterative path reduction, the mlet as a vectorized per-vertex map, the rlet
@@ -36,15 +41,17 @@ _BOT_CUTOFF = 1e8
 
 def clear_program_caches():
     """Drop every layer of the compiled-program cache: synthesized round
-    kernels, blocked-ELL layouts, and jitted pallas executors.  Mostly for
-    tests and benchmarks that need cold-start numbers; normal callers keep
-    the caches warm across rounds, repeated queries and repeats."""
+    kernels, blocked-ELL layouts (single-device and sharded), and jitted
+    pallas executors.  Mostly for tests and benchmarks that need cold-start
+    numbers; normal callers keep the caches warm across rounds, repeated
+    queries and repeats."""
     from repro.core import synthesis
     from repro.graph import structure
     synthesis._ROUND_CACHE.clear()
     structure._ELL_CACHE.clear()
     structure._RES_CACHE.clear()
     structure._WDEG_CACHE.clear()
+    structure._SHARDED_ELL_CACHE.clear()
     try:
         from repro.kernels import ops as kops
         kops.clear_executor_cache()
@@ -57,6 +64,7 @@ def program_cache_stats() -> dict:
     from repro.graph import structure
     out = {"synth_rounds": len(synthesis._ROUND_CACHE),
            "ell_layouts": len(structure._ELL_CACHE),
+           "sharded_layouts": len(structure._SHARDED_ELL_CACHE),
            "push_resolutions": len(structure._RES_CACHE)}
     try:
         from repro.kernels import ops as kops
@@ -79,6 +87,16 @@ class ExecStats:
                                     # engine; Σ resolution-tile nnz under
                                     # "sorted", full rectangle under
                                     # "scatter", 0 on pull iterations)
+    shards: int = 0                 # shard count of the sharded engines
+                                    # (distributed / pallas_sharded)
+    shard_launches: int = 0         # traced pallas launches PER SHARD
+                                    # summed over rounds (pallas_sharded:
+                                    # one per direction branch per round)
+    cross_combines: int = 0         # cross-shard state-combine collectives
+                                    # executed (iterations × per-iteration
+                                    # lex-level psums; pallas_sharded)
+    shard_work: tuple = ()          # per-shard edge work ([k]; its sum is
+                                    # edge_work's sharded contribution)
 
 
 @dataclasses.dataclass
@@ -143,7 +161,8 @@ def _round_runtime(round_, synth):
 
 def _run_iteration(g, round_: FusedRound, engine: str, model: str,
                    mesh, axes, max_iter, tol, synth_override=None,
-                   source=None, push_resolution=None, switch_k="auto"):
+                   source=None, push_resolution=None, switch_k="auto",
+                   shard_strategy="contiguous"):
     synth, synth_ms = _synthesize_timed(round_, synth_override)
     comps, plans = _round_runtime(round_, synth)
     sources = _source_overrides(round_, source)
@@ -170,6 +189,14 @@ def _run_iteration(g, round_: FusedRound, engine: str, model: str,
                                   direction=_pallas_direction(model),
                                   sources=sources, switch_k=switch_k,
                                   push_resolution=push_resolution)
+    elif engine == "pallas_sharded":
+        assert mesh is not None, "pallas_sharded engine needs a mesh"
+        from repro.kernels import ops as kops
+        res = kops.iterate_pallas_sharded(
+            g, comps, plans, mesh, axes=axes, strategy=shard_strategy,
+            max_iter=max_iter, tol=tol, direction=_pallas_direction(model),
+            sources=sources, switch_k=switch_k,
+            push_resolution=push_resolution)
     else:
         raise ValueError(f"unknown engine {engine}")
     return res, comps, synth_ms
@@ -206,6 +233,18 @@ def _accumulate(stats: ExecStats, res, synth_ms: float) -> None:
         stats.pull_iters += li
     if isinstance(rw, (int, float)):
         stats.resolve_work += float(rw)
+    stats.shards = max(stats.shards, getattr(res, "shards", 0))
+    stats.shard_launches += getattr(res, "shard_launches", 0)
+    stats.cross_combines += getattr(res, "cross_combines", 0)
+    sw = tuple(getattr(res, "shard_work", ()))
+    if sw:
+        if len(stats.shard_work) == len(sw):
+            stats.shard_work = tuple(a + b
+                                     for a, b in zip(stats.shard_work, sw))
+        elif not stats.shard_work:
+            stats.shard_work = sw
+        else:                       # shard count changed between rounds
+            stats.shard_work = stats.shard_work + sw
 
 
 def run_program(g, prog: FusedProgram, engine: str = "pull",
@@ -213,7 +252,8 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
                 max_iter: Optional[int] = None, tol: float = 0.0,
                 source: Optional[int] = None,
                 push_resolution: Optional[str] = None,
-                switch_k="auto") -> ExecResult:
+                switch_k="auto",
+                shard_strategy: str = "contiguous") -> ExecResult:
     """Execute a fused program.  ``source`` optionally re-sources every
     sourced component to one query source — the program (and with it every
     compiled-executor cache entry) is source-generic, so querying another
@@ -222,7 +262,9 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
     ``push_resolution`` ("sorted"/"scatter", pallas engine only) selects
     the push sweep's dst-keyed resolution path; ``switch_k`` tunes the
     direction switch per query (DESIGN.md §2/§10) — None falls back to the
-    frontier-fraction threshold, a number overrides the Gemini k."""
+    frontier-fraction threshold, a number overrides the Gemini k.
+    ``shard_strategy`` picks the vertex-cut edge partitioning of the
+    ``pallas_sharded`` engine ("contiguous" | "dst_hash")."""
     stats = ExecStats()
     named: dict = {}
     final = None
@@ -232,7 +274,7 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
             res, comps, synth_ms = _run_iteration(
                 g, round_, engine, model, mesh, axes, max_iter, tol,
                 source=source, push_resolution=push_resolution,
-                switch_k=switch_k)
+                switch_k=switch_k, shard_strategy=shard_strategy)
             _accumulate(stats, res, synth_ms)
             for leaf in round_.leaves:
                 env[leaf.name] = res.state[plan_output(leaf.plan)]
@@ -325,7 +367,8 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
                source: Optional[int] = None,
                sources: Optional[Sequence] = None,
                push_resolution: Optional[str] = None,
-               switch_k="auto"):
+               switch_k="auto",
+               shard_strategy: str = "contiguous"):
     """Execute a direct kernel set on one engine.
 
     ``model`` optionally pins the pallas sweep direction ("pull"/"push");
@@ -373,7 +416,10 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
                                 resolve_work=float(res_ws[b])))
                 for b in range(len(iters))]
         return [run_direct(g, dk, engine=engine, mesh=mesh, axes=axes,
-                           model=model, source=int(s)) for s in sources]
+                           model=model, source=int(s),
+                           push_resolution=push_resolution,
+                           switch_k=switch_k,
+                           shard_strategy=shard_strategy) for s in sources]
 
     comp = iterate.CompRuntime(
         idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
@@ -407,6 +453,14 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
                                   tol=dk.tol,
                                   direction=_pallas_direction(model),
                                   sources=src_over, **pallas_kw)
+    elif engine == "pallas_sharded":
+        assert mesh is not None, "pallas_sharded engine needs a mesh"
+        from repro.kernels import ops as kops
+        res = kops.iterate_pallas_sharded(
+            g, [comp], plans, mesh, axes=axes, strategy=shard_strategy,
+            max_iter=dk.max_iter, tol=dk.tol,
+            direction=_pallas_direction(model), sources=src_over,
+            **pallas_kw)
     else:
         raise ValueError(engine)
     stats = ExecStats()

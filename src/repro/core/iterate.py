@@ -584,7 +584,9 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             evals = _propagate(comps, state, src, env)
             eactive = (active[src] & mask) if model == "pull+" else mask
-            work = work + jax.lax.psum(jnp.sum(eactive.astype(jnp.float32)), axes)
+            # SHARD-LOCAL work (no psum): the [k] output vector surfaces the
+            # per-shard balance; the total is their host-side sum.
+            work = work + jnp.sum(eactive.astype(jnp.float32))
             masked = {i: jnp.where(eactive, evals[i], comps_by_idx[i].ident)
                       for i in evals}
             red = {}
@@ -621,5 +623,18 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
                    in_specs=(pspec, pspec, pspec, pspec, pspec),
                    out_specs=(tuple(P() for _ in comps), P(axes), P(axes)))
     state, k, work = fn(part.src, part.dst, part.weight, part.capacity, part.mask)
-    return IterationResult(state=state, iterations=int(np.asarray(k)[0]),
-                           edge_work=float(np.asarray(work)[0]))
+    k_host = np.asarray(k)
+    work_host = np.asarray(work)
+    # Replication contract: the state (and with it the convergence flag) is
+    # replicated, so every shard must report the same iteration count.  A
+    # mismatch means a collective went wrong — fail loud instead of silently
+    # trusting shard 0 (the old ``np.asarray(k)[0]`` behaviour).
+    if not (k_host == k_host[0]).all():
+        raise RuntimeError(
+            f"distributed shards diverged on iteration count "
+            f"{k_host.tolist()} — replicated-state contract broken")
+    res = IterationResult(state=state, iterations=int(k_host[0]),
+                          edge_work=float(work_host.sum()))
+    res.shards = k_shards
+    res.shard_work = tuple(float(w) for w in work_host)   # per-shard balance
+    return res

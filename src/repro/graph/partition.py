@@ -1,4 +1,4 @@
-"""Edge partitioning for the distributed (shard_map) engine.
+"""Edge partitioning for the distributed / sharded-pallas (shard_map) engines.
 
 PowerGraph-style vertex-cut: edges are split into ``k`` equal, padded blocks;
 each shard reduces into a *full* local vertex-state vector with segment ops
@@ -6,6 +6,12 @@ each shard reduces into a *full* local vertex-state vector with segment ops
 monoid collective (Scatter).  Padding edges point at vertex 0 with a False
 mask, which the engines turn into reduction identities, so padding never
 changes a result (condition C6).
+
+``shard_subgraphs`` re-expresses the SAME edge blocks as per-shard ``Graph``
+subgraphs over the full vertex id space — the input of the sharded
+blocked-ELL layouts (``structure.sharded_ell_cached``) that let the
+``pallas_sharded`` engine run the fused Pallas sweeps shard-locally
+(DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -14,7 +20,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.structure import Graph
+from repro.graph.structure import Graph, from_edges
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,3 +57,28 @@ def partition_edges(g: Graph, k: int, strategy: str = "contiguous") -> EdgeParti
         weight=jnp.asarray(pad(w, 0.0)), capacity=jnp.asarray(pad(c, 0.0)),
         mask=jnp.asarray(pad(np.ones(e, dtype=bool), False)),
     )
+
+
+def shard_subgraphs(g: Graph, k: int, strategy: str = "contiguous") -> list:
+    """Per-shard vertex-cut subgraphs: shard j holds exactly the real edges
+    of ``partition_edges(g, k, strategy)``'s j-th block, as a ``Graph`` over
+    the FULL vertex id space (vertices are replicated across shards — the
+    PowerGraph vertex-cut model — so per-shard reductions land in full
+    [n]-length partial state vectors that monoid collectives can combine).
+
+    Built from the ``EdgePartition`` blocks rather than re-deriving the
+    split so the ``pallas_sharded`` engine's shard-local layouts can never
+    disagree with the ``distributed`` engine's edge blocks about which shard
+    owns an edge.  Empty shards (k > |E|) are legal and yield edgeless
+    subgraphs whose layouts are all-padding (every tile skips)."""
+    part = partition_edges(g, k, strategy)
+    src = np.asarray(part.src)
+    dst = np.asarray(part.dst)
+    w = np.asarray(part.weight)
+    c = np.asarray(part.capacity)
+    mask = np.asarray(part.mask)
+    out = []
+    for j in range(k):
+        m = mask[j]
+        out.append(from_edges(g.n, src[j][m], dst[j][m], w[j][m], c[j][m]))
+    return out

@@ -244,6 +244,109 @@ def blocked_ell_cached(g: Graph, block_v: int = 8, block_e: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# Sharded blocked-ELL layouts for the pallas_sharded engine (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedELL:
+    """Per-shard blocked-ELL layouts of one vertex-cut, stacked on a leading
+    shard axis so ``shard_map`` can split them with ``P(axes)``.
+
+    Shard j's slice ``[j]`` is exactly ``to_blocked_ell`` of the j-th
+    ``partition.shard_subgraphs`` block — same fill rule, same tile shapes —
+    padded on the slot axis to the widest shard (``width`` = max over
+    shards, already a multiple of ``block_e``) with masked-out slots, so
+    every shard sees identically-shaped arrays (SPMD requires one trace).
+    Padding slots carry ``mask=False`` and ``tile_nnz=0`` and therefore
+    reduce to identities / skip entirely (C6).
+
+    ``row_deg[j, v]`` counts shard j's real slots in row v — for the
+    ``direction="out"`` layout that is v's shard-local out-degree, whose
+    ``psum`` over shards reconstructs the global out-degree exactly (integer
+    sums): the signal of the GLOBAL Gemini direction switch every shard must
+    agree on (DESIGN.md §11)."""
+    k: int
+    n: int
+    n_pad: int
+    width: int              # max over shards, padded to block_e
+    block_v: int
+    block_e: int
+    direction: str
+    strategy: str
+    nbrs: jnp.ndarray       # [k, n_pad, width] int32
+    weight: jnp.ndarray     # [k, n_pad, width] float32
+    capacity: jnp.ndarray   # [k, n_pad, width] float32
+    mask: jnp.ndarray       # [k, n_pad, width] bool
+    tile_nnz: jnp.ndarray   # [k, n_pad/block_v, width/block_e] int32
+    row_deg: jnp.ndarray    # [k, n_pad] float32 real slots per row
+    num_edges: int          # Σ real edges across shards (== graph |E|)
+
+
+def to_sharded_ell(g: Graph, k: int, strategy: str = "contiguous",
+                   block_v: int = 8, block_e: int = 128,
+                   direction: str = "in") -> ShardedELL:
+    """Build the stacked per-shard blocked-ELL layout of a k-way vertex-cut.
+
+    Each shard's layout is built by the exact single-device rules
+    (``to_blocked_ell`` on its ``shard_subgraphs`` block) and then widened to
+    the widest shard; a shard's local reduction over its slice is therefore
+    bit-identical to a single-device sweep over that shard's edge subset,
+    which is what makes the cross-shard monoid combine exact (DESIGN.md
+    §11)."""
+    from repro.graph.partition import shard_subgraphs  # lazy: partition
+    # imports this module at top level
+    subs = shard_subgraphs(g, k, strategy)
+    ells = [to_blocked_ell(sg, block_v=block_v, block_e=block_e,
+                           direction=direction) for sg in subs]
+    width = max(e.width for e in ells)
+    n_pad = ells[0].n_pad
+    n_i, n_j = n_pad // block_v, width // block_e
+
+    def widen(a, fill):
+        out = np.full((n_pad, width), fill, dtype=np.asarray(a).dtype)
+        out[:, :a.shape[1]] = np.asarray(a)
+        return out
+
+    nbrs = np.stack([widen(e.nbrs, 0) for e in ells])
+    ws = np.stack([widen(e.weight, 0.0) for e in ells])
+    cs = np.stack([widen(e.capacity, 0.0) for e in ells])
+    mask = np.stack([widen(e.mask, False) for e in ells])
+    tile_nnz = mask.reshape(k, n_i, block_v, n_j, block_e) \
+        .sum(axis=(2, 4)).astype(np.int32)
+    row_deg = mask.sum(axis=2).astype(np.float32)
+    return ShardedELL(
+        k=k, n=g.n, n_pad=n_pad, width=width, block_v=block_v,
+        block_e=block_e, direction=direction, strategy=strategy,
+        nbrs=jnp.asarray(nbrs), weight=jnp.asarray(ws),
+        capacity=jnp.asarray(cs), mask=jnp.asarray(mask),
+        tile_nnz=jnp.asarray(tile_nnz), row_deg=jnp.asarray(row_deg),
+        num_edges=int(mask.sum()))
+
+
+_SHARDED_ELL_CACHE: dict = {}
+
+
+def sharded_ell_cached(g: Graph, k: int, strategy: str = "contiguous",
+                       block_v: int = 8, block_e: int = 128,
+                       direction: str = "in") -> ShardedELL:
+    """Memoized ``to_sharded_ell`` — cached per (graph, k, strategy, tile
+    shape, direction) exactly like ``blocked_ell_cached`` (identity key,
+    weakref-guarded, finalizer-evicted), so repeated sharded queries never
+    re-partition or re-pad."""
+    key = (id(g), k, strategy, block_v, block_e, direction)
+    hit = _SHARDED_ELL_CACHE.get(key)
+    if hit is not None:
+        ref, ell = hit
+        if ref() is g:
+            return ell
+    ell = to_sharded_ell(g, k, strategy=strategy, block_v=block_v,
+                         block_e=block_e, direction=direction)
+    _SHARDED_ELL_CACHE[key] = (weakref.ref(g), ell)
+    weakref.finalize(g, _SHARDED_ELL_CACHE.pop, key, None)
+    return ell
+
+
+# ---------------------------------------------------------------------------
 # Dst-sorted push-resolution layout (DESIGN.md §10).
 # ---------------------------------------------------------------------------
 

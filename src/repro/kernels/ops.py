@@ -29,6 +29,14 @@ step further and ``jax.vmap``s the same fixpoint over a batch of sources
 sharing one blocked-ELL layout: B concurrent queries per launch, per-query
 convergence via the existing active mask (DESIGN.md §9).
 
+``iterate_pallas_sharded`` composes this engine with the distributed
+vertex-cut model (DESIGN.md §11): every shard holds its own blocked-ELL
+pair (``structure.sharded_ell_cached``), runs the SAME fused sweeps
+shard-locally inside ``shard_map``, and merges per-vertex partials with
+monoid/lex collectives; the direction switch stays global via a psum'd
+frontier edge mass, so the sharded fixpoint walks the exact iteration
+sequence of the single-device one.
+
 The other wrappers expose the embedding-bag and ELL-softmax kernels behind
 plain jit'd functions that the models call.
 """
@@ -39,11 +47,14 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import iterate
 from repro.core.fusion import Lex
+from repro.graph import segment
 from repro.graph.structure import (Graph, blocked_ell_cached,
-                                   push_resolution_cached, w_out_deg)
+                                   push_resolution_cached,
+                                   sharded_ell_cached, w_out_deg)
 from repro.kernels import edge_reduce as _er
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import segment_softmax as _ss
@@ -185,6 +196,18 @@ def _directions_used(direction: str, idempotent: bool):
     raise ValueError(f"direction must be auto|pull|push, got {direction!r}")
 
 
+def _padded_init_state(comps, n, n_pad, srcs):
+    """Initial per-component state padded to the layout rectangle, with the
+    traced per-component sources applied (the executor-argument contract of
+    DESIGN.md §8).  Shared by the single-device and sharded builders so
+    their fixpoints can never diverge on the C1/C2 initial state."""
+    overrides = {cr.idx: srcs[i] for i, cr in enumerate(comps)
+                 if cr.source is not None}
+    base = iterate._init_state(comps, n, overrides)
+    return tuple(jnp.full((n_pad,), cr.ident, s.dtype).at[:n].set(s)
+                 for s, cr in zip(base, comps))
+
+
 def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                            interpret, use, dense_threshold, switch_k,
                            push_resolution, batch=False):
@@ -240,16 +263,6 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             wdeg.astype(jnp.float32))
         num_edges = jnp.sum(ell[use[0]][3].astype(jnp.float32))
         ones_act = jnp.ones(n_pad, jnp.int32)
-
-        def pad_state(x, ident):
-            return jnp.full((n_pad,), ident, x.dtype).at[:n].set(x)
-
-        def init_state():
-            overrides = {cr.idx: srcs[i] for i, cr in enumerate(comps)
-                         if cr.source is not None}
-            base = iterate._init_state(comps, n, overrides)
-            return tuple(pad_state(s, cr.ident)
-                         for s, cr in zip(base, comps))
 
         def sweep(d, state_d, active_i32, tile_act, need_hp):
             """One fused sweep + its dst-keyed resolution.  Returns
@@ -357,7 +370,7 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             _, active, k, _, _, _ = carry
             return jnp.any(active) & (k < max_iter)
 
-        state0 = init_state()
+        state0 = _padded_init_state(comps, n, n_pad, srcs)
         state, active, k, work, pushes, res_work = jax.lax.while_loop(
             cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
                          jnp.float32(0), jnp.int32(0), jnp.float32(0)))
@@ -559,4 +572,340 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     except (jax.errors.ConcretizationTypeError,
             jax.errors.TracerArrayConversionError):
         pass
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Sharded pallas engine: shard-local fused ELL sweeps under shard_map
+# (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+
+def _axes_tuple(axes):
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _mesh_cache_key(mesh, axes):
+    """Mesh identity for the executor cache: the device set (ids), the mesh
+    axis name→size layout, and the shard axes the executor reduces over.
+    Two meshes over the same devices with the same layout share one
+    compiled entry; a different device set or a RESHAPED mesh (same ids,
+    different axis sizes — which changes how shard_map splits the stacked
+    layouts) retraces."""
+    return (tuple(int(d.id) for d in np.ravel(mesh.devices)),
+            tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names),
+            _axes_tuple(axes))
+
+
+def cross_combines_per_iter(plans, comps, idempotent: bool) -> int:
+    """Cross-shard state-combine collectives one ``pallas_sharded`` (or
+    ``distributed``) iteration executes: one monoid psum/pmin/pmax per lex
+    level of every plan, plus one OR-combine per component for the has-pred
+    probe of non-idempotent rounds.  (The direction-switch edge-mass psum
+    and the work accounting are control traffic, not state combines, and are
+    not counted.)"""
+    c = sum(len(_plan_levels(p)) for p in plans)
+    if not idempotent:
+        c += len(comps)
+    return c
+
+
+def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
+                            interpret, use, dense_threshold, switch_k,
+                            mesh, axes):
+    """Trace + jit the sharded fixpoint once per (plan structure, kernel set,
+    graph shape, direction set, mesh).  The returned function takes one
+    6-tuple of STACKED ``[k, ...]`` sharded-ELL arrays per direction in
+    ``use`` (nbrs, weight, capacity, mask, tile_nnz, row_deg — split on the
+    shard axis by ``shard_map``), the replicated degree vectors, and the
+    traced per-component query sources: ``run(*arrays, srcs)``.
+
+    Inside ``shard_map`` every shard runs the SAME fused Pallas sweeps as
+    the single-device engine over its own blocked-ELL pair — frontier-aware
+    tile skipping included — producing an identity-initialised per-vertex
+    partial reduction; partials merge across shards with the monoid/lex
+    ``cross_plan`` combine (primary via psum/pmin/pmax, tie-masked
+    secondaries, k× less traffic than an all_gather), and the replicated
+    merged state feeds ``plan_merge`` / ``_recompute_merge`` exactly like
+    the single-device fixpoint.  The per-iteration direction switch stays
+    GLOBAL: the frontier's outgoing edge mass is a psum of shard-local
+    out-layout row degrees, so every shard compares the same (integer-exact)
+    mass against |E|/k and picks the same sweep.  State is replicated, so
+    the convergence flag is identical on every shard and the while_loop is
+    collective-safe.  The push sweep resolves its dst-keyed reduction with
+    the per-shard reference scatter (the dst-sorted resolution layout is
+    single-device-only; DESIGN.md §11)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    ax = _axes_tuple(axes)
+    comps_by_idx = {cr.idx: cr for cr in comps}
+    plan_levels = tuple(tuple(_plan_levels(p)) for p in plans)
+    idempotent = all(iterate.plan_idempotent(p) for p in plans)
+    comps_order = _er.comps_in_plan_order(plan_levels)
+    idents = {c: comps_by_idx[c].ident for c in comps_order}
+    p_fns = {c: comps_by_idx[c].p_fn for c in comps_order}
+
+    def shard_fn(*arrays):
+        ell = {}
+        idx = 0
+        for d in use:
+            ell[d] = tuple(a[0] for a in arrays[idx:idx + 6])  # [1,...] → [...]
+            idx += 6
+        out_deg = arrays[idx]
+        wdeg = arrays[idx + 1]
+        srcs = arrays[idx + 2]
+        n_pad = ell[use[0]][0].shape[0]
+        out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
+            jnp.maximum(out_deg, 1).astype(jnp.float32))
+        wdeg_pad = jnp.ones(n_pad, jnp.float32).at[:n].set(
+            wdeg.astype(jnp.float32))
+        # Shard-local real-edge count; the direction switch compares against
+        # the GLOBAL |E| via psum so every shard sees the same threshold.
+        local_edges = jnp.sum(ell[use[0]][3].astype(jnp.float32))
+        num_edges_g = jax.lax.psum(local_edges, ax)
+        ones_act = jnp.ones(n_pad, jnp.int32)
+
+        def cross_plan(plan, red: dict) -> dict:
+            """Cross-shard lexicographic combine with monoid collectives
+            only (the distributed engine's combiner over the pallas sweeps'
+            partials): global primary via psum/pmin/pmax, tie-mask the local
+            secondaries to identity, recurse.  Replicated across shards."""
+            best = segment.psum_like(plan.op, red[plan.comp], ax)
+            out = {plan.comp: best}
+            if isinstance(plan, Lex):
+                tie = red[plan.comp] == best
+                masked = {j: jnp.where(tie, red[j], comps_by_idx[j].ident)
+                          for j in iterate._plan_comps(plan.secondary)}
+                out.update(cross_plan(plan.secondary, masked))
+            return out
+
+        def cross_shard(red: dict) -> dict:
+            out = dict(red)
+            for p in plans:
+                out.update(cross_plan(p, red))
+            return out
+
+        def sweep(d, state_d, active_i32, tile_act, need_hp):
+            """One shard-local fused sweep: the SAME pallas kernels as the
+            single-device engine, over this shard's blocked-ELL slice."""
+            nbrs, weight, capacity, mask, _nnz, _rdeg = ell[d]
+            states = {c: state_d[c] for c in comps_order}
+            common = dict(plans=plan_levels, idents=idents, p_fns=p_fns,
+                          nv=float(n), need_haspred=need_hp, wdeg=wdeg_pad,
+                          block_v=block_v, block_e=block_e,
+                          interpret=interpret)
+            if d == "pull":
+                return _er.fused_ell_sweep(
+                    nbrs, weight, capacity, mask, tile_act, states,
+                    active_i32, out_deg_pad, **common)
+            return _er.fused_ell_push_sweep(
+                nbrs, weight, capacity, mask, tile_act, states,
+                active_i32, out_deg_pad, resolution="scatter", **common)
+
+        def masked_branch(d):
+            """One frontier-masked (+model) shard-local sweep; edge work is
+            the real slots inside the tiles THIS shard processed."""
+            def branch(args):
+                state_d, active_i32 = args
+                nbrs, _w, _c, mask, tile_nnz, _rdeg = ell[d]
+                if d == "pull":
+                    tile_act = _er.tile_activity(nbrs, mask, tile_nnz,
+                                                 active_i32, block_v, block_e)
+                else:
+                    tile_act = _er.tile_activity_push(tile_nnz, active_i32,
+                                                      block_v)
+                red, _ = sweep(d, state_d, active_i32, tile_act, False)
+                w_inc = jnp.sum((tile_nnz * tile_act)).astype(jnp.float32)
+                return tuple(red[c] for c in comps_order), w_inc
+            return branch
+
+        def body(carry):
+            state, active, k, work, pushes = carry
+            state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
+            if idempotent:
+                active_i32 = active.astype(jnp.int32)
+                if len(use) == 2:
+                    if switch_k is not None:
+                        # Gemini rule, computed GLOBALLY: psum the frontier's
+                        # shard-local out-edge mass (out-layout row degrees —
+                        # padding rows carry 0) so every shard compares the
+                        # identical (integer-exact) edge mass and picks the
+                        # same direction as the single-device engine.
+                        local_mass = jnp.sum(active.astype(jnp.float32)
+                                             * ell["push"][5])
+                        e_frontier = jax.lax.psum(local_mass, ax)
+                        use_push = e_frontier <= num_edges_g / switch_k
+                    else:
+                        # fallback frontier-fraction rule: the frontier is
+                        # replicated, so this is shard-invariant by itself.
+                        frac = jnp.sum(active.astype(jnp.float32)) / n
+                        use_push = frac <= dense_threshold
+                    red_t, w_inc = jax.lax.cond(
+                        use_push, masked_branch("push"), masked_branch("pull"),
+                        (state_d, active_i32))
+                    pushes = pushes + use_push.astype(jnp.int32)
+                else:
+                    red_t, w_inc = masked_branch(use[0])((state_d, active_i32))
+                    pushes = pushes + (1 if use[0] == "push" else 0)
+                red = cross_shard({c: red_t[i]
+                                   for i, c in enumerate(comps_order)})
+                work = work + w_inc
+                new_d = {}
+                for p in plans:
+                    new_d.update(iterate.plan_merge(p, state_d, red,
+                                                    comps_by_idx))
+            else:
+                # full recompute (− models): every shard sweeps its real
+                # tiles, partial sums/extrema combine across shards, then
+                # the epilogue applies to the GLOBAL reduction.
+                d = use[0]
+                work = work + local_edges
+                tiles_static = (ell[d][4] > 0).astype(jnp.int32)
+                red, hp = sweep(d, state_d, ones_act, tiles_static, True)
+                red = cross_shard(red)
+                hp = {c: segment.psum_like(
+                    "or", hp[c].astype(jnp.int32), ax).astype(bool)
+                    for c in hp}
+                red = iterate._apply_epilogue(comps, red)
+                new_d = iterate._recompute_merge(plans, comps_by_idx,
+                                                 state_d, red, hp)
+                pushes = pushes + (1 if d == "push" else 0)
+            new = tuple(new_d[cr.idx] for cr in comps)
+            ch = iterate._changed(comps, new, state, tol)
+            return new, ch, k + 1, work, pushes
+
+        def cond(carry):
+            _, active, k, _, _ = carry
+            return jnp.any(active) & (k < max_iter)
+
+        state0 = _padded_init_state(comps, n, n_pad, srcs)
+        state, active, k, work, pushes = jax.lax.while_loop(
+            cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
+                         jnp.float32(0), jnp.int32(0)))
+        # k/pushes are replicated (asserted host-side); work is per-shard.
+        return state, k[None], work[None], pushes[None]
+
+    pspec = P(ax)
+    in_specs = tuple([pspec] * (6 * len(use)) + [P(), P(), P()])
+    out_specs = (tuple(P() for _ in comps), P(ax), P(ax), P(ax))
+    # check_vma off: the pre-graduation checker rejects collectives inside
+    # while_loop bodies, and the graduated checker cannot see through
+    # interpret-mode pallas_call — replication of state/k/pushes is a
+    # engine-level contract asserted on the host instead.
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def _sharded_executor(g, comps, plans, mesh, axes, strategy, max_iter, tol,
+                      block_v, block_e, interpret, use, dense_threshold,
+                      switch_k):
+    """Cache lookup / build of the compiled sharded fixpoint, plus the
+    stacked argument prefix it runs on."""
+    ax = _axes_tuple(axes)
+    k_shards = int(np.prod([mesh.shape[a] for a in ax]))
+    ells = {d: sharded_ell_cached(
+        g, k_shards, strategy=strategy, block_v=block_v, block_e=block_e,
+        direction={"pull": "in", "push": "out"}[d]) for d in use}
+    if len(use) != 2:                # pinned direction: no switch traced
+        dense_threshold = None
+        switch_k = None
+    key = ("sharded", g.n, tuple(tuple(_plan_levels(p)) for p in plans),
+           _comps_key(comps), max_iter, tol, block_v, block_e, interpret,
+           use, dense_threshold, switch_k, strategy,
+           _mesh_cache_key(mesh, ax))
+    run = _exec_cache_get(key)
+    if run is None:
+        run = _build_sharded_executor(comps, plans, g.n, max_iter, tol,
+                                      block_v, block_e, interpret, use,
+                                      dense_threshold, switch_k, mesh, ax)
+        _exec_cache_put(key, run, comps)
+    args = []
+    for d in use:
+        e = ells[d]
+        args += [e.nbrs, e.weight, e.capacity, e.mask, e.tile_nnz, e.row_deg]
+    args.append(g.out_deg)
+    args.append(w_out_deg(g))
+    return run, args, k_shards
+
+
+def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
+                           strategy: str = "contiguous",
+                           max_iter: Optional[int] = None, tol: float = 0.0,
+                           block_v: int = 8, block_e: int = 128,
+                           interpret: Optional[bool] = None,
+                           direction: str = "auto",
+                           dense_threshold: float = DENSE_FRONTIER,
+                           switch_k="auto",
+                           push_resolution: Optional[str] = None,
+                           sources: Optional[dict] = None) -> iterate.IterationResult:
+    """Fixpoint of the fused reduction with SHARD-LOCAL fused Pallas sweeps
+    under ``shard_map`` (DESIGN.md §11): each vertex-cut shard holds its own
+    blocked-ELL pair, runs the existing pull/push sweeps locally (one
+    ``pallas_call`` per shard per iteration — frontier-aware tile skipping
+    included), and merges per-vertex partials across shards with the
+    monoid/lex ``cross_plan`` combine.  The per-iteration direction switch
+    is GLOBAL (psum'd frontier edge mass), so the sharded engine takes the
+    same push/pull sequence — and produces bitwise-identical states for
+    idempotent rounds — as the single-device ``iterate_pallas``.
+
+    ``strategy`` picks the edge partitioning (``partition.partition_edges``:
+    "contiguous" | "dst_hash").  ``push_resolution`` accepts only None /
+    "scatter": shard-local push sweeps resolve their dst-keyed reduction
+    with the per-shard reference scatter (exact for the idempotent min/max
+    plans; the dst-sorted resolution layout is single-device-only for now).
+
+    The result carries ``shards`` / ``shard_work`` (per-shard processed-tile
+    edge work) / ``shard_launches`` (traced pallas launches per shard per
+    round) / ``cross_combines`` (cross-shard state-combine collectives
+    executed) on top of the usual pallas stats."""
+    n = g.n
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    max_iter = max_iter if max_iter is not None else 2 * n + 4
+    idempotent = all(iterate.plan_idempotent(p) for p in plans)
+    use = _directions_used(direction, idempotent)
+    switch_k = _normalize_switch_k(
+        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
+    if push_resolution not in (None, "scatter"):
+        raise ValueError(
+            "pallas_sharded resolves push sweeps with the per-shard "
+            "reference scatter; the dst-sorted resolution layout is "
+            f"single-device-only (DESIGN.md §11) — got {push_resolution!r}")
+    if strategy not in ("contiguous", "dst_hash"):
+        raise ValueError(f"unknown shard strategy {strategy!r}")
+    run, args, k_shards = _sharded_executor(
+        g, comps, plans, mesh, axes, strategy, max_iter, tol, block_v,
+        block_e, interpret, use, dense_threshold, switch_k)
+    state, k, work, pushes = run(*args, _srcs_vector(comps, sources))
+    k_host = np.asarray(k)
+    work_host = np.asarray(work)
+    push_host = np.asarray(pushes)
+    # Replication contract: every shard must have run the identical fixpoint
+    # (same iteration count, same direction sequence).  A divergence means
+    # the collective combine or the global switch broke — fail loud instead
+    # of trusting shard 0.
+    if not (k_host == k_host[0]).all() or not (push_host == push_host[0]).all():
+        raise RuntimeError(
+            f"pallas_sharded shards diverged: iterations={k_host.tolist()}, "
+            f"push_iters={push_host.tolist()} — replicated-state contract "
+            "broken")
+    k_i = int(k_host[0])
+    p_i = int(push_host[0])
+    _er.SWEEP_STATS["push_iters"] += p_i
+    _er.SWEEP_STATS["pull_iters"] += k_i - p_i
+    res = iterate.IterationResult(
+        state=tuple(s[:n] for s in state),
+        iterations=k_i,
+        edge_work=float(work_host.sum()))
+    res.push_iters = p_i
+    res.pull_iters = k_i - p_i
+    res.resolve_work = 0.0
+    res.shards = k_shards
+    res.shard_work = tuple(float(w) for w in work_host)
+    res.shard_launches = len(use)        # traced sweeps per shard per round
+    res.cross_combines = k_i * cross_combines_per_iter(plans, comps,
+                                                       idempotent)
     return res

@@ -1,4 +1,7 @@
 import os
+import subprocess
+import sys
+import textwrap
 
 # Tests run single-device (the dry-run sets its own 512-device flag in its
 # own process; see src/repro/launch/dryrun.py).
@@ -6,6 +9,28 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_forced_devices(code: str, device_count: int) -> str:
+    """Run ``code`` in a subprocess on ``device_count`` forced host devices
+    (device count locks at first jax init, so multi-device suites cannot run
+    in the main test process).  JAX_PLATFORMS is pinned to cpu: the forced
+    host devices need the cpu platform, and leaving the choice to
+    auto-detection stalls on hosts whose TPU plugin probes — and retries —
+    instance metadata before falling back.  Shared by test_distributed and
+    test_pallas_sharded."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={device_count}"
+    env["PYTHONPATH"] = _SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
 
 
 def norm_inf(x):

@@ -2,32 +2,22 @@
 
 These run in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count
 because device count locks at first jax init (the main test process stays
-1-device)."""
+1-device).  The shard_map cases carry the ``distributed`` marker and run in
+the PR multi-device CI lane; only the heaviest also carry ``slow`` and stay
+nightly-only (pyproject marker split)."""
 import json
-import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import pytest
 
-_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_forced_devices
 
 
 def _run(code: str) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = _SRC
-    env.pop("JAX_PLATFORMS", None)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+    return run_forced_devices(code, 4)
 
 
-@pytest.mark.slow
+@pytest.mark.distributed
 def test_distributed_engine_matches_oracle():
     out = _run("""
         import numpy as np, jax, json
@@ -58,7 +48,7 @@ def test_distributed_engine_matches_oracle():
     assert all(ok.values()), ok
 
 
-@pytest.mark.slow
+@pytest.mark.distributed
 def test_compressed_cross_pod_allreduce():
     """int8 error-feedback all-reduce over a 'pod' axis ≈ exact mean."""
     out = _run("""
@@ -85,6 +75,31 @@ def test_compressed_cross_pod_allreduce():
     """)
     rec = json.loads(out.strip().splitlines()[-1])
     assert rec["err"] <= rec["bound"], rec
+
+
+@pytest.mark.distributed
+def test_distributed_shard_stats_replicated():
+    """The distributed engine asserts cross-shard replication of the
+    iteration count (instead of silently trusting shard 0) and surfaces
+    per-shard edge work whose sum is the total."""
+    out = _run("""
+        import numpy as np, jax, json
+        from repro.core import usecases as U, fusion, engine
+        from repro.graph.structure import uniform_graph
+        mesh = jax.make_mesh((4,), ('data',))
+        g = uniform_graph(12, 30, seed=7)
+        res = engine.run_program(g, fusion.fuse(U.sssp(0)),
+                                 engine='distributed', mesh=mesh)
+        st = res.stats
+        rec = {'shards': st.shards,
+               'n_shard_work': len(st.shard_work),
+               'sum_ok': abs(sum(st.shard_work) - st.edge_work) < 1e-6,
+               'iters': st.iterations}
+        print(json.dumps(rec))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["shards"] == 4 and rec["n_shard_work"] == 4, rec
+    assert rec["sum_ok"] and rec["iters"] > 0, rec
 
 
 def test_neighbor_sampler_shapes_and_membership():
@@ -124,7 +139,8 @@ def test_partition_covers_all_edges():
     assert got == want
 
 
-@pytest.mark.slow
+@pytest.mark.distributed
+@pytest.mark.slow                    # heaviest shard_map case: nightly-only
 def test_mgn_dist_multishard_matches_reference():
     """Hillclimb B correctness: 4-shard vertex-cut MGN loss ≡ single-device
     reference on a real mesh graph."""
