@@ -43,12 +43,20 @@ combine counts, and the compositional invariant that the global direction
 switch keeps the sharded fixpoint on the single-device iteration sequence
 (values bitwise-equal for the idempotent workloads, asserted in-bench).
 
+``--engines pallas`` also runs the guard-overhead section (DESIGN.md §12):
+default guarded execution (validation, termination precondition, divergence
+sentinel, convergence check) vs guards-off on BFS/SSSP/PageRank.  The
+guards are free at the fixpoint level, so the gated quantities are
+deterministic: bitwise values, identical iterations/edge work, and traced
+launches guarded ≤ guards-off.
+
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
 run regresses on traced launches, the fused/unfused edge-work ratio, the
-push-vs-pull work advantage, the batched executor/retrace counts, or the
-sharded engine's iteration parity / launch / combine counts — the one
-comparison path shared by the CI bench-smoke gate and local runs.
+push-vs-pull work advantage, the batched executor/retrace counts, the
+sharded engine's iteration parity / launch / combine counts, or the guard
+section's launch parity — the one comparison path shared by the CI
+bench-smoke gate and local runs.
 """
 from __future__ import annotations
 
@@ -78,6 +86,8 @@ RESOLUTION = ["BFS", "SSSP"]            # push-resolution (sorted vs scatter)
 BATCHED = ["BFS", "SSSP"]               # single-source batched-query sweeps
 SHARDED = ["BFS", "SSSP", "PR"]         # shard_map composition (PR = direct
                                         # PageRank, the epilogue pull− round)
+GUARDED = ["BFS", "SSSP", "PR"]         # guarded vs guards-off execution
+                                        # (validation + divergence sentinel)
 _BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
 _BATCH_B = 8                            # sources per batched sweep
 _SHARD_K = 2                            # shards of the sharded section's mesh
@@ -301,16 +311,70 @@ def bench_sharded(g, gname: str, weighted: bool, name: str,
     }
 
 
+def bench_guard(g, gname: str, weighted: bool, name: str) -> dict:
+    """Guard-overhead section (DESIGN.md §12): the default guarded execution
+    (graph validation + termination precondition + divergence sentinel +
+    convergence check) vs guards-off on one workload.  The guards are
+    designed to be free at the fixpoint level — the sentinel folds into the
+    existing convergence reduction, validation is a cached host-side pass —
+    so the acceptance quantities are DETERMINISTIC equalities: bitwise
+    values, identical iteration counts and edge work, and traced launches
+    guarded ≤ guards-off (asserted in-bench; launches also gated vs the
+    committed baseline).  Wall time is reported, never gated."""
+    import numpy as np
+
+    from repro.kernels import edge_reduce as er
+
+    def one(guarded):
+        engine.clear_program_caches()
+        er.reset_sweep_stats()
+        off = dict(validate=False, divergence_sentinel=False,
+                   on_nonconverge="ignore")
+        kw = {} if guarded else off
+        if name == "PR":
+            dk = U.handwritten_pagerank(g.n)
+            t, res = timed(lambda: engine.run_direct(
+                g, dk, engine="pallas", **kw), repeats=1)
+        else:
+            prog = fusion.fuse(U.ALL_SPECS[name]())
+            t, res = timed(lambda: engine.run_program(
+                g, prog, engine="pallas", **kw), repeats=1)
+        return t, res, dict(er.SWEEP_STATS)
+
+    t_on, res_on, s_on = one(True)
+    t_off, res_off, s_off = one(False)
+    assert np.array_equal(np.asarray(res_on.value),
+                          np.asarray(res_off.value)), \
+        f"{name}: guarded execution changed the computed values"
+    assert res_on.stats.iterations == res_off.stats.iterations, \
+        f"{name}: guards changed the iteration count " \
+        f"({res_on.stats.iterations} vs {res_off.stats.iterations})"
+    assert float(res_on.stats.edge_work) == float(res_off.stats.edge_work), \
+        f"{name}: guards changed the edge work"
+    assert s_on["launches"] <= s_off["launches"], \
+        f"{name}: guards added traced launches " \
+        f"({s_on['launches']} vs {s_off['launches']})"
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "iterations": res_on.stats.iterations,
+        "edge_work": float(res_on.stats.edge_work),
+        "launches_traced_guarded": s_on["launches"],
+        "launches_traced_off": s_off["launches"],
+        "t_guarded_ms": t_on * 1e3, "t_off_ms": t_off * 1e3,
+    }
+
+
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         engines=("pull", "push"), json_out=None, direction_usecases=None,
         batched_usecases=None, resolution_usecases=None,
-        sharded_usecases=None):
+        sharded_usecases=None, guard_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
     batched_rows = []
     resolution_rows = []
     sharded_rows = []
+    guard_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
@@ -323,6 +387,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     if sharded_usecases and "pallas" not in engines:
         raise ValueError("sharded_usecases bench the pallas_sharded "
                          "engine; add 'pallas' to engines")
+    if guard_usecases and "pallas" not in engines:
+        raise ValueError("guard_usecases bench the pallas engine's guarded "
+                         "execution; add 'pallas' to engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
     if batched_usecases is None:
@@ -331,6 +398,8 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         resolution_usecases = RESOLUTION if "pallas" in engines else []
     if sharded_usecases is None:
         sharded_usecases = SHARDED if "pallas" in engines else []
+    if guard_usecases is None:
+        guard_usecases = GUARDED if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -390,6 +459,8 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                               "--xla_force_host_platform_device_count")
                     else:
                         sharded_rows.append(row)
+                for name in guard_usecases:
+                    guard_rows.append(bench_guard(g, gname, weighted, name))
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
@@ -437,14 +508,23 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
               "iters_single", "work_sharded", "work_single",
               "shard_launches", "cross_combines", "t_sharded_ms",
               "t_single_ms"])
+    if guard_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["iterations"], round(r["edge_work"], 1),
+               r["launches_traced_guarded"], r["launches_traced_off"],
+               round(r["t_guarded_ms"], 1), round(r["t_off_ms"], 1)]
+              for r in guard_rows],
+             ["graph", "weights", "usecase", "iters", "edge_work",
+              "traced_guarded", "traced_off", "t_guarded_ms", "t_off_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
            "resolution_rows": resolution_rows,
            "batched_rows": batched_rows,
            "sharded_rows": sharded_rows,
+           "guard_rows": guard_rows,
            "table": out}
     if json_rows or direction_rows or batched_rows or resolution_rows \
-            or sharded_rows:
+            or sharded_rows or guard_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -615,6 +695,30 @@ def compare_baseline(current: dict, baseline: dict,
             if r[field] > b[field]:
                 errors.append(f"{key}: {field} {r[field]} > baseline "
                               f"{b[field]} (a retrace snuck in)")
+    base_guard = {_row_key(r): r for r in baseline.get("guard_rows", [])}
+    for r in current.get("guard_rows", []):
+        key = _row_key(r)
+        # Standing property (DESIGN.md §12): the divergence sentinel and
+        # convergence bookkeeping fold into the existing fixpoint cond —
+        # guarded execution must never add a traced launch over guards-off
+        # (bench_guard additionally asserts bitwise values and identical
+        # iterations/edge work in-bench).
+        if r["launches_traced_guarded"] > r["launches_traced_off"]:
+            errors.append(
+                f"{key}: guarded traced launches "
+                f"{r['launches_traced_guarded']} > guards-off "
+                f"{r['launches_traced_off']} — the sentinel grew the "
+                "traced program")
+        b = base_guard.get(key)
+        if b is None:
+            continue
+        # strict vs the committed baseline, like launches_traced: a +1 is
+        # exactly the "guard launch snuck in" regression this row gates
+        if r["launches_traced_guarded"] > b["launches_traced_guarded"]:
+            errors.append(
+                f"{key}: guarded traced launches "
+                f"{r['launches_traced_guarded']} > baseline "
+                f"{b['launches_traced_guarded']}")
     return errors
 
 
@@ -640,6 +744,10 @@ if __name__ == "__main__":
                          f"(default {','.join(SHARDED)} when pallas is "
                          "benchmarked and >= 2 devices exist; pass '' to "
                          "skip)")
+    ap.add_argument("--guard", default=None, metavar="NAMES",
+                    help="comma list of guard-overhead workloads "
+                         f"(default {','.join(GUARDED)} when pallas is "
+                         "benchmarked; pass '' to skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
                          f"(default {_JSON_PATH})")
@@ -668,15 +776,17 @@ if __name__ == "__main__":
         tuple(u for u in args.resolution.split(",") if u)
     sharded = None if args.sharded is None else \
         tuple(u for u in args.sharded.split(",") if u)
+    guard = None if args.guard is None else \
+        tuple(u for u in args.guard.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
                  engines=engines, json_out=json_out,
                  batched_usecases=batched, resolution_usecases=resolution,
-                 sharded_usecases=sharded)
+                 sharded_usecases=sharded, guard_usecases=guard)
     if baseline is not None:
         if not (result["rows"] or result["direction_rows"]
                 or result["batched_rows"] or result["resolution_rows"]
-                or result["sharded_rows"]):
+                or result["sharded_rows"] or result["guard_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -691,4 +801,5 @@ if __name__ == "__main__":
               f"{len(baseline.get('direction_rows', []))} direction rows, "
               f"{len(baseline.get('resolution_rows', []))} resolution rows, "
               f"{len(baseline.get('batched_rows', []))} batched rows, "
-              f"{len(baseline.get('sharded_rows', []))} sharded rows)")
+              f"{len(baseline.get('sharded_rows', []))} sharded rows, "
+              f"{len(baseline.get('guard_rows', []))} guard rows)")

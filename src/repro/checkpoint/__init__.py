@@ -1,2 +1,3 @@
 from repro.checkpoint.ckpt import (CheckpointManager, save_checkpoint,
                                    restore_checkpoint, latest_step)
+from repro.checkpoint.fixpoint import FixpointCheckpointer

@@ -134,3 +134,85 @@ def check_C10(f: L.PathFn, rop: str, rng) -> bool:
             if not _eq(L.reduce_op(rop, n, ext), n):
                 return False
     return True
+
+
+# ---------------------------------------------------------------------------
+# Runtime termination preconditions (the guarded-execution entry check).
+# ---------------------------------------------------------------------------
+
+_IN_CONTRACT_W_MIN = 0.0      # sample_edges' graph contract: w >= 0, c > 0.
+                              # Synthesis verifies C10 under exactly these
+                              # ranges, so in-contract graphs need no re-probe.
+
+
+def _probe_values(dtype_str: str):
+    """Plausible finite F-codomain samples per component dtype (⊥ excluded —
+    the P'/R' wrappers handle it, C3/C6)."""
+    if dtype_str in ("int", "vert"):
+        return [0, 1, 2, 5]
+    return [0.0, 1.0, 2.5, 7.0]
+
+
+def violated_preconditions(comps, plans, w_range, c_range) -> list:
+    """Probe the strengthened termination condition C10 — R(n, P'(n, e)) = n
+    (§5.2) — against a graph's ACTUAL edge-value ranges.
+
+    Synthesis discharges C10 under the graph contracts ``w >= 0, c > 0``
+    (``sample_edges``); a graph outside those ranges (negative weights under
+    min-plus being the canonical case) voids that proof, so the engine entry
+    points re-probe here with (value, edge) samples drawn from the real
+    ranges before launching a fixpoint that may never terminate.  In-contract
+    graphs return ``[]`` without probing.
+
+    ``comps`` are the runtime components (``iterate.CompRuntime``: the
+    synthesized ``p_fn`` closures evaluate P exactly as the engines do);
+    only each plan's PRIMARY level is probed — lexicographic secondaries
+    ride the primary's ordering (FPNEST), and non-idempotent reductions
+    (PageRank-style sum/prod with an epilogue) terminate by tol/max_iter,
+    not by C10.  Returns a list of violation dicts
+    ``{"condition", "component", "op", "detail"}``."""
+    import numpy as _np
+
+    w_lo, w_hi = float(w_range[0]), float(w_range[1])
+    c_lo, c_hi = float(c_range[0]), float(c_range[1])
+    in_contract = w_lo >= _IN_CONTRACT_W_MIN and c_lo > 0.0
+    if in_contract:
+        return []
+    comps_by_idx = {cr.idx: cr for cr in comps}
+    edge_vals = sorted({w_lo, w_hi, (w_lo + w_hi) / 2.0})
+    cap_vals = sorted({c_lo, c_hi, (c_lo + c_hi) / 2.0})
+    out = []
+    for plan in plans:
+        cr = comps_by_idx[plan.comp]
+        if plan.op not in ("min", "max", "or", "and") or cr.e_fn is not None:
+            continue                      # tol/max_iter-bounded, not C10
+        dtype_str = "int" if _np.issubdtype(_np.dtype(cr.dtype), _np.integer) \
+            else "float"
+        for n0 in _probe_values(dtype_str):
+            for w0 in edge_vals:
+                for c0 in cap_vals:
+                    env = {"n": n0, "w": w0, "c": c0, "esrc": 1, "edst": 2,
+                           "outdeg": 2.0, "wdeg": 1.0, "nv": 8.0}
+                    try:
+                        ext = float(_np.asarray(cr.p_fn(env)))
+                    except Exception:     # non-scalar/odd P: can't probe
+                        continue
+                    red = L.reduce_op(plan.op, n0, ext)
+                    if not _eq(red, n0):
+                        out.append({
+                            "condition": "C10",
+                            "component": cr.idx,
+                            "op": plan.op,
+                            "detail": (
+                                f"R(n, P(n, e)) != n at n={n0}, "
+                                f"w={w0}, c={c0}: "
+                                f"{plan.op}({n0}, {ext}) = {red}"),
+                        })
+                        break
+                else:
+                    continue
+                break
+            else:
+                continue
+            break
+    return out

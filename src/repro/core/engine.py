@@ -26,17 +26,26 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import iterate
+from repro.core import conditions as _conditions
+from repro.core import guard, iterate
 from repro.core.fusion import FusedProgram, FusedRound, plan_output
 from repro.core.kernel_lang import eval_expr
 from repro.core.synthesis import DirectKernels, synthesize_round
 
 _BOT_CUTOFF = 1e8
+
+# Engine-invocation retry knobs used when the caller enables ``fallback``
+# without providing an ``ft_config``: one retry of the same engine before
+# degrading (lowering failures are deterministic — long budgets just delay
+# the fallback), minimal backoff.
+_FALLBACK_RETRIES = 1
+_FALLBACK_BACKOFF_S = 0.01
 
 
 def clear_program_caches():
@@ -52,6 +61,7 @@ def clear_program_caches():
     structure._RES_CACHE.clear()
     structure._WDEG_CACHE.clear()
     structure._SHARDED_ELL_CACHE.clear()
+    structure._VALID_CACHE.clear()
     try:
         from repro.kernels import ops as kops
         kops.clear_executor_cache()
@@ -97,6 +107,13 @@ class ExecStats:
                                     # lex-level psums; pallas_sharded)
     shard_work: tuple = ()          # per-shard edge work ([k]; its sum is
                                     # edge_work's sharded contribution)
+    engine_used: str = ""           # engine that actually produced the
+                                    # result (differs from the request only
+                                    # after a fallback)
+    fallbacks: tuple = ()           # (from_engine, to_engine, error) per
+                                    # degradation step (guard.FallbackEvent)
+    exec_retries: int = 0           # same-engine retries spent before each
+                                    # success/fallback (ft.bounded_retry)
 
 
 @dataclasses.dataclass
@@ -159,12 +176,146 @@ def _round_runtime(round_, synth):
     return comps, plans
 
 
+def _validate_inputs(g, source=None, sources=None):
+    """Graph structural validation + query-source range check (guarded
+    execution, DESIGN.md §12).  Returns the cached ``GraphCheck`` so the
+    termination-precondition probe can reuse the edge-value ranges."""
+    from repro.graph import structure
+    chk = structure.validate_graph(g)
+    probe = []
+    if source is not None:
+        probe.append(source)
+    if sources is not None:
+        probe.extend(np.asarray(sources).ravel().tolist())
+    for s in probe:
+        s = int(s)
+        if not 0 <= s < g.n:
+            raise guard.GraphValidationError(
+                f"query source {s} out of range [0, {g.n})")
+    return chk
+
+
+def _check_preconditions(chk, comps, plans):
+    """Raise ``TerminationPreconditionError`` when the graph's actual
+    edge-value ranges void the spec's synthesis-time termination proof
+    (strengthened C10, §5.2) — min-plus on negative weights being the
+    canonical never-terminating case.  In-contract graphs (w ≥ 0, c > 0)
+    return immediately without probing."""
+    if chk is None:
+        return
+    bad = _conditions.violated_preconditions(
+        comps, plans, (chk.w_min, chk.w_max), (chk.c_min, chk.c_max))
+    if bad:
+        v = bad[0]
+        raise guard.TerminationPreconditionError(
+            f"termination precondition {v['condition']} violated for "
+            f"component {v['component']} (op {v['op']}) on this graph "
+            f"(w ∈ [{chk.w_min}, {chk.w_max}], c ∈ [{chk.c_min}, "
+            f"{chk.c_max}]): {v['detail']} — the fixpoint may not "
+            "terminate; fix the graph or run with validate=False",
+            condition=v["condition"], component=v["component"],
+            detail=v["detail"])
+
+
+def _check_outcome(res, max_iter_eff, on_nonconverge):
+    """Surface the structured convergence outcome of one finished round:
+    a fired divergence sentinel raises ``DivergenceError``; exhausting
+    ``max_iter`` with live vertices raises (or warns, per
+    ``on_nonconverge``) ``NonConvergenceError`` with the exit diagnostics
+    instead of returning a silent partial state.  Tracer-valued outcomes
+    (batched results) are the callers' responsibility."""
+    if on_nonconverge == "ignore":
+        return
+    divg = getattr(res, "diverged", False)
+    conv = getattr(res, "converged", True)
+    if isinstance(divg, (bool, np.bool_)) and divg:
+        raise guard.DivergenceError(
+            f"fixpoint diverged after {res.iterations} iterations: the "
+            "NaN/Inf sentinel fired (values left the monoid's meaningful "
+            "domain)", iterations=int(res.iterations))
+    if isinstance(conv, (bool, np.bool_)) and not conv:
+        active = int(getattr(res, "active_count", 0))
+        resid = float(getattr(res, "residual", float("nan")))
+        msg = (f"fixpoint exhausted max_iter={max_iter_eff} without "
+               f"converging: {active} vertices still active after "
+               f"{res.iterations} iterations, last-iteration residual "
+               f"{resid:.3e}")
+        if on_nonconverge == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+            return
+        raise guard.NonConvergenceError(
+            msg, iterations=int(res.iterations), max_iter=int(max_iter_eff),
+            active_count=active, residual=resid)
+
+
+def _check_batch_outcomes(res, src_list, max_iter_eff, on_nonconverge):
+    """Per-query convergence outcomes of one batched round ([B]-valued
+    ``converged``/``diverged``), naming the offending query sources."""
+    if on_nonconverge == "ignore":
+        return
+    divg = np.asarray(res.diverged)
+    conv = np.asarray(res.converged)
+    if divg.any():
+        bad = [src_list[i] for i in np.flatnonzero(divg)]
+        raise guard.DivergenceError(
+            f"batched fixpoint diverged for query sources {bad}: the "
+            "NaN/Inf sentinel fired",
+            iterations=int(np.asarray(res.iterations).max()))
+    if not conv.all():
+        bad = np.flatnonzero(~conv)
+        acts = np.asarray(res.active_count)
+        iters = np.asarray(res.iterations)
+        msg = (f"batched fixpoint exhausted max_iter={max_iter_eff} for "
+               f"query sources {[src_list[i] for i in bad]} "
+               f"(active counts {[int(acts[i]) for i in bad]})")
+        if on_nonconverge == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+            return
+        raise guard.NonConvergenceError(
+            msg, iterations=int(iters.max()), max_iter=int(max_iter_eff),
+            active_count=int(acts[bad].sum()))
+
+
+def _dispatch_guarded(call, engine, fallback, ft_config):
+    """Run ``call(engine)``; on infrastructure-shaped failure
+    (``guard.recoverable``) retry the SAME engine with a bounded budget,
+    then degrade one step down ``guard.FALLBACK_CHAIN`` and repeat.  Guard
+    verdicts and programming errors propagate unchanged.  Returns
+    ``(result, engine_used, fallback_events, retries_used)``."""
+    if not fallback:
+        return call(engine), engine, (), 0
+    from repro.runtime import ft as _ft
+    retries = _FALLBACK_RETRIES if ft_config is None else ft_config.max_retries
+    backoff = _FALLBACK_BACKOFF_S if ft_config is None else ft_config.backoff_s
+    eng = engine
+    events = []
+    retries_used = 0
+    while True:
+        try:
+            out, r = _ft.bounded_retry(lambda: call(eng), retries, backoff,
+                                       retryable=guard.recoverable)
+            return out, eng, tuple(events), retries_used + r
+        except Exception as exc:
+            retries_used += retries
+            if not guard.recoverable(exc):
+                raise
+            nxt = guard.FALLBACK_CHAIN.get(eng)
+            if nxt is None:
+                raise
+            events.append(guard.FallbackEvent(eng, nxt,
+                                              f"{type(exc).__name__}: {exc}"))
+            eng = nxt
+
+
 def _run_iteration(g, round_: FusedRound, engine: str, model: str,
                    mesh, axes, max_iter, tol, synth_override=None,
                    source=None, push_resolution=None, switch_k="auto",
-                   shard_strategy="contiguous"):
+                   shard_strategy="contiguous", graph_check=None,
+                   divergence_sentinel=True, checkpoint_every=None,
+                   ckpt_dir=None, resume=False, init_state=None):
     synth, synth_ms = _synthesize_timed(round_, synth_override)
     comps, plans = _round_runtime(round_, synth)
+    _check_preconditions(graph_check, comps, plans)
     sources = _source_overrides(round_, source)
     if engine in ("pull", "push"):
         m = model or ("pull+" if engine == "pull" else "push+")
@@ -188,7 +339,11 @@ def _run_iteration(g, round_: FusedRound, engine: str, model: str,
         res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol,
                                   direction=_pallas_direction(model),
                                   sources=sources, switch_k=switch_k,
-                                  push_resolution=push_resolution)
+                                  push_resolution=push_resolution,
+                                  divergence_sentinel=divergence_sentinel,
+                                  checkpoint_every=checkpoint_every,
+                                  ckpt_dir=ckpt_dir, resume=resume,
+                                  init_state=init_state)
     elif engine == "pallas_sharded":
         assert mesh is not None, "pallas_sharded engine needs a mesh"
         from repro.kernels import ops as kops
@@ -253,7 +408,13 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
                 source: Optional[int] = None,
                 push_resolution: Optional[str] = None,
                 switch_k="auto",
-                shard_strategy: str = "contiguous") -> ExecResult:
+                shard_strategy: str = "contiguous",
+                validate: bool = True,
+                on_nonconverge: str = "raise",
+                fallback: bool = False, ft_config=None,
+                divergence_sentinel: bool = True,
+                checkpoint_every: Optional[int] = None,
+                ckpt_dir=None, resume: bool = False) -> ExecResult:
     """Execute a fused program.  ``source`` optionally re-sources every
     sourced component to one query source — the program (and with it every
     compiled-executor cache entry) is source-generic, so querying another
@@ -264,18 +425,48 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
     direction switch per query (DESIGN.md §2/§10) — None falls back to the
     frontier-fraction threshold, a number overrides the Gemini k.
     ``shard_strategy`` picks the vertex-cut edge partitioning of the
-    ``pallas_sharded`` engine ("contiguous" | "dst_hash")."""
-    stats = ExecStats()
+    ``pallas_sharded`` engine ("contiguous" | "dst_hash").
+
+    Guarded execution (DESIGN.md §12): ``validate`` (default on) checks the
+    graph's structural contract, the query source's range, and the per-round
+    termination preconditions (C10 against the actual edge-value ranges)
+    before any kernel launches.  ``on_nonconverge`` ("raise"/"warn"/
+    "ignore") governs what a round that exhausts ``max_iter`` — or trips
+    the divergence sentinel — does.  ``fallback=True`` degrades
+    infrastructure failures down ``guard.FALLBACK_CHAIN``
+    (pallas_sharded → pallas → adaptive) with bounded retry (``ft_config``
+    tunes the budget), recording every event in the stats.
+    ``checkpoint_every``/``ckpt_dir``/``resume`` thread the chunked
+    checkpointed fixpoint (pallas engine only)."""
+    if on_nonconverge not in ("raise", "warn", "ignore"):
+        raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
+                         f"'ignore', got {on_nonconverge!r}")
+    if (checkpoint_every is not None or resume) and engine != "pallas":
+        raise ValueError("checkpointed fixpoints are a pallas-engine "
+                         f"feature; got engine={engine!r}")
+    chk = _validate_inputs(g, source=source) if validate else None
+    max_iter_eff = max_iter if max_iter is not None else 2 * g.n + 4
+    stats = ExecStats(engine_used=engine)
     named: dict = {}
     final = None
     for bind_name, round_ in prog.rounds:
         env: dict = dict(named)
         if round_.leaves:
-            res, comps, synth_ms = _run_iteration(
-                g, round_, engine, model, mesh, axes, max_iter, tol,
-                source=source, push_resolution=push_resolution,
-                switch_k=switch_k, shard_strategy=shard_strategy)
+            def call(eng, round_=round_):
+                return _run_iteration(
+                    g, round_, eng, model, mesh, axes, max_iter, tol,
+                    source=source, push_resolution=push_resolution,
+                    switch_k=switch_k, shard_strategy=shard_strategy,
+                    graph_check=chk, divergence_sentinel=divergence_sentinel,
+                    checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
+                    resume=resume)
+            (res, comps, synth_ms), eng_used, events, retries = \
+                _dispatch_guarded(call, engine, fallback, ft_config)
+            stats.engine_used = eng_used
+            stats.fallbacks += tuple(ev.as_tuple() for ev in events)
+            stats.exec_retries += retries
             _accumulate(stats, res, synth_ms)
+            _check_outcome(res, max_iter_eff, on_nonconverge)
             for leaf in round_.leaves:
                 env[leaf.name] = res.state[plan_output(leaf.plan)]
         out = _finish_round(g, round_, env)
@@ -291,7 +482,10 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                       mesh=None, axes=("data",),
                       max_iter: Optional[int] = None, tol: float = 0.0,
                       push_resolution: Optional[str] = None,
-                      switch_k="auto") -> list:
+                      switch_k="auto",
+                      validate: bool = True,
+                      on_nonconverge: str = "raise",
+                      fallback: bool = False, ft_config=None) -> list:
     """Serve B concurrent single-source queries of one program in ONE
     compiled launch per round (DESIGN.md §9).
 
@@ -306,22 +500,36 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
 
     Returns a list of B ``ExecResult``s, each with its own per-query stats
     (iterations, edge work, push/pull split; ``synth_ms`` is the shared
-    per-round synthesis cost, reported on each)."""
+    per-round synthesis cost, reported on each).
+
+    Guarded execution mirrors ``run_program``: upfront validation (graph +
+    every batch source), per-round termination preconditions, per-QUERY
+    convergence outcomes, and — with ``fallback=True`` — degradation of a
+    recoverably-failing batched pallas launch to the sequential reference
+    loop (recorded in each query's stats)."""
+    if on_nonconverge not in ("raise", "warn", "ignore"):
+        raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
+                         f"'ignore', got {on_nonconverge!r}")
     src_arr = np.asarray(sources)
     if src_arr.ndim != 1:
         raise ValueError(
             f"run_program_batch sources must be a [B] vector of query "
             f"sources, got shape {src_arr.shape}; per-component [B, n_comps] "
             "batching is the kernels-layer iterate_pallas_batch API")
+    chk = _validate_inputs(g, sources=src_arr) if validate else None
+    max_iter_eff = max_iter if max_iter is not None else 2 * g.n + 4
     src_list = [int(s) for s in src_arr]
     B = len(src_list)
+    guard_kw = dict(validate=validate, on_nonconverge=on_nonconverge,
+                    fallback=fallback, ft_config=ft_config)
     if engine != "pallas":
         return [run_program(g, prog, engine=engine, model=model, mesh=mesh,
-                            axes=axes, max_iter=max_iter, tol=tol, source=s)
+                            axes=axes, max_iter=max_iter, tol=tol, source=s,
+                            **guard_kw)
                 for s in src_list]
     pallas_kw = dict(switch_k=switch_k, push_resolution=push_resolution)
     from repro.kernels import ops as kops
-    stats = [ExecStats() for _ in range(B)]
+    stats = [ExecStats(engine_used="pallas") for _ in range(B)]
     named: list = [{} for _ in range(B)]
     finals: list = [None] * B
     for bind_name, round_ in prog.rounds:
@@ -329,9 +537,29 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
         if round_.leaves:
             synth, synth_ms = _synthesize_timed(round_)
             comps, plans = _round_runtime(round_, synth)
-            res = kops.iterate_pallas_batch(
-                g, comps, plans, src_list, max_iter=max_iter, tol=tol,
-                direction=_pallas_direction(model), **pallas_kw)
+            _check_preconditions(chk, comps, plans)
+            try:
+                res = kops.iterate_pallas_batch(
+                    g, comps, plans, src_list, max_iter=max_iter, tol=tol,
+                    direction=_pallas_direction(model), **pallas_kw)
+            except Exception as exc:
+                if not fallback or not guard.recoverable(exc):
+                    raise
+                # batched launch degraded: the whole batch re-runs through
+                # the sequential reference loop, the event recorded on
+                # every query's stats.
+                ev = guard.FallbackEvent(
+                    "pallas", "adaptive",
+                    f"{type(exc).__name__}: {exc}").as_tuple()
+                outs = [run_program(g, prog, engine="adaptive", model=None,
+                                    max_iter=max_iter, tol=tol, source=s,
+                                    **guard_kw) for s in src_list]
+                for o in outs:
+                    o.stats.fallbacks = (ev,) + o.stats.fallbacks
+                    o.stats.engine_used = "adaptive"
+                return outs
+            _check_batch_outcomes(res, src_list, max_iter_eff,
+                                  on_nonconverge)
             iters = np.asarray(res.iterations)
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
@@ -368,7 +596,14 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
                sources: Optional[Sequence] = None,
                push_resolution: Optional[str] = None,
                switch_k="auto",
-               shard_strategy: str = "contiguous"):
+               shard_strategy: str = "contiguous",
+               validate: bool = True,
+               on_nonconverge: str = "raise",
+               fallback: bool = False, ft_config=None,
+               divergence_sentinel: bool = True,
+               checkpoint_every: Optional[int] = None,
+               ckpt_dir=None, resume: bool = False,
+               init_state=None):
     """Execute a direct kernel set on one engine.
 
     ``model`` optionally pins the pallas sweep direction ("pull"/"push");
@@ -378,9 +613,23 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
     for one query; ``sources`` runs a [B] batch of queries (one vmapped
     launch on the pallas engine, a sequential loop elsewhere) and returns a
     list of per-query ``ExecResult``s.  Both need a source-generic kernel
-    set (``dk.source`` not None)."""
+    set (``dk.source`` not None).
+
+    Guarded execution matches ``run_program``: ``validate`` /
+    ``on_nonconverge`` / ``fallback`` + ``ft_config`` /
+    ``divergence_sentinel``, plus the chunked-checkpoint knobs
+    (``checkpoint_every``/``ckpt_dir``/``resume``/``init_state``, pallas
+    engine only; ``init_state`` warm-starts the fixpoint from per-component
+    [n] arrays)."""
     from repro.core.fusion import Prim
 
+    if on_nonconverge not in ("raise", "warn", "ignore"):
+        raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
+                         f"'ignore', got {on_nonconverge!r}")
+    if (checkpoint_every is not None or resume or init_state is not None) \
+            and engine != "pallas":
+        raise ValueError("checkpointed/warm-started fixpoints are a "
+                         f"pallas-engine feature; got engine={engine!r}")
     if (source is not None or sources is not None) and dk.source is None:
         raise ValueError(
             "run_direct source overrides need a source-generic DirectKernels "
@@ -392,17 +641,39 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
             "a single-argument closure bakes its own source, so re-sourcing "
             "would move the ⊥-mask without moving the init value")
     pallas_kw = dict(switch_k=switch_k, push_resolution=push_resolution)
+    guard_kw = dict(validate=validate, on_nonconverge=on_nonconverge,
+                    fallback=fallback, ft_config=ft_config)
+    chk = _validate_inputs(g, source=source, sources=sources) \
+        if validate else None
+    max_iter_eff = dk.max_iter if dk.max_iter is not None else 2 * g.n + 4
+    comp = iterate.CompRuntime(
+        idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
+        p_fn=dk.p_fn, init_fn=dk.init_fn, source=dk.source, e_fn=dk.e_fn)
+    plans = [Prim(dk.rop, 0)]
+    _check_preconditions(chk, [comp], plans)
     if sources is not None:
         if engine == "pallas":
             from repro.kernels import ops as kops
-            comp = iterate.CompRuntime(
-                idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
-                p_fn=dk.p_fn, init_fn=dk.init_fn, source=dk.source,
-                e_fn=dk.e_fn)
-            res = kops.iterate_pallas_batch(
-                g, [comp], [Prim(dk.rop, 0)], sources,
-                max_iter=dk.max_iter, tol=dk.tol,
-                direction=_pallas_direction(model), **pallas_kw)
+            try:
+                res = kops.iterate_pallas_batch(
+                    g, [comp], plans, sources,
+                    max_iter=dk.max_iter, tol=dk.tol,
+                    direction=_pallas_direction(model), **pallas_kw)
+            except Exception as exc:
+                if not fallback or not guard.recoverable(exc):
+                    raise
+                ev = guard.FallbackEvent(
+                    "pallas", "adaptive",
+                    f"{type(exc).__name__}: {exc}").as_tuple()
+                outs = [run_direct(g, dk, engine="adaptive", model=None,
+                                   source=int(s), **guard_kw)
+                        for s in sources]
+                for o in outs:
+                    o.stats.fallbacks = (ev,) + o.stats.fallbacks
+                    o.stats.engine_used = "adaptive"
+                return outs
+            _check_batch_outcomes(res, [int(s) for s in sources],
+                                  max_iter_eff, on_nonconverge)
             iters = np.asarray(res.iterations)
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
@@ -413,56 +684,70 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
                                 edge_work=float(works[b]),
                                 push_iters=int(pushes[b]),
                                 pull_iters=int(iters[b]) - int(pushes[b]),
-                                resolve_work=float(res_ws[b])))
+                                resolve_work=float(res_ws[b]),
+                                engine_used="pallas"))
                 for b in range(len(iters))]
         return [run_direct(g, dk, engine=engine, mesh=mesh, axes=axes,
                            model=model, source=int(s),
                            push_resolution=push_resolution,
                            switch_k=switch_k,
-                           shard_strategy=shard_strategy) for s in sources]
+                           shard_strategy=shard_strategy, **guard_kw)
+                for s in sources]
 
-    comp = iterate.CompRuntime(
-        idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
-        p_fn=dk.p_fn, init_fn=dk.init_fn, source=dk.source, e_fn=dk.e_fn)
-    plans = [Prim(dk.rop, 0)]
     src_over = None if source is None else {0: int(source)}
     # frontier-masked (+) models for idempotent kernels (BFS/CC/SSSP/WP);
     # full-recompute (−) for non-idempotent / epilogue kernels (PageRank)
     idempotent = dk.rop in iterate._IDEMPOTENT_OPS and dk.e_fn is None
-    pull_like = engine in ("pull", "dense", "distributed")
-    eng_model = ("pull+" if pull_like else "push+") if idempotent else \
-        ("pull-" if pull_like else "push-")
-    if engine in ("pull", "push"):
-        res = iterate.iterate_graph(g, [comp], plans, model=eng_model,
-                                    max_iter=dk.max_iter, tol=dk.tol,
-                                    sources=src_over)
-    elif engine == "dense":
-        res = iterate.iterate_dense(g, [comp], plans, max_iter=dk.max_iter,
-                                    tol=dk.tol, sources=src_over)
-    elif engine == "distributed":
-        res = iterate.iterate_distributed(g, [comp], plans, mesh, axes=axes,
-                                          model="pull-", max_iter=dk.max_iter,
-                                          tol=dk.tol, sources=src_over)
-    elif engine == "pallas":
-        # The engine's documented default: per-iteration direction heuristic
-        # for idempotent kernels (pull− recompute otherwise), forced only by
-        # an explicit model — NOT derived from pull_like, which omits pallas
-        # and used to pin push for every direct kernel.
-        from repro.kernels import ops as kops
-        res = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
-                                  tol=dk.tol,
-                                  direction=_pallas_direction(model),
-                                  sources=src_over, **pallas_kw)
-    elif engine == "pallas_sharded":
-        assert mesh is not None, "pallas_sharded engine needs a mesh"
-        from repro.kernels import ops as kops
-        res = kops.iterate_pallas_sharded(
-            g, [comp], plans, mesh, axes=axes, strategy=shard_strategy,
-            max_iter=dk.max_iter, tol=dk.tol,
-            direction=_pallas_direction(model), sources=src_over,
-            **pallas_kw)
-    else:
+
+    def call(engine):
+        pull_like = engine in ("pull", "dense", "distributed")
+        eng_model = ("pull+" if pull_like else "push+") if idempotent else \
+            ("pull-" if pull_like else "push-")
+        if engine in ("pull", "push"):
+            return iterate.iterate_graph(g, [comp], plans, model=eng_model,
+                                         max_iter=dk.max_iter, tol=dk.tol,
+                                         sources=src_over)
+        if engine == "adaptive":
+            return iterate.iterate_adaptive(g, [comp], plans,
+                                            max_iter=dk.max_iter, tol=dk.tol,
+                                            sources=src_over)
+        if engine == "dense":
+            return iterate.iterate_dense(g, [comp], plans,
+                                         max_iter=dk.max_iter,
+                                         tol=dk.tol, sources=src_over)
+        if engine == "distributed":
+            assert mesh is not None, "distributed engine needs a mesh"
+            return iterate.iterate_distributed(
+                g, [comp], plans, mesh, axes=axes, model="pull-",
+                max_iter=dk.max_iter, tol=dk.tol, sources=src_over)
+        if engine == "pallas":
+            # The engine's documented default: per-iteration direction
+            # heuristic for idempotent kernels (pull− recompute otherwise),
+            # forced only by an explicit model — NOT derived from pull_like,
+            # which omits pallas and used to pin push for every direct
+            # kernel.
+            from repro.kernels import ops as kops
+            return kops.iterate_pallas(
+                g, [comp], plans, max_iter=dk.max_iter, tol=dk.tol,
+                direction=_pallas_direction(model), sources=src_over,
+                divergence_sentinel=divergence_sentinel,
+                checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
+                resume=resume, init_state=init_state, **pallas_kw)
+        if engine == "pallas_sharded":
+            assert mesh is not None, "pallas_sharded engine needs a mesh"
+            from repro.kernels import ops as kops
+            return kops.iterate_pallas_sharded(
+                g, [comp], plans, mesh, axes=axes, strategy=shard_strategy,
+                max_iter=dk.max_iter, tol=dk.tol,
+                direction=_pallas_direction(model), sources=src_over,
+                **pallas_kw)
         raise ValueError(engine)
-    stats = ExecStats()
+
+    res, eng_used, events, retries = _dispatch_guarded(call, engine,
+                                                       fallback, ft_config)
+    stats = ExecStats(engine_used=eng_used,
+                      fallbacks=tuple(ev.as_tuple() for ev in events),
+                      exec_retries=retries)
     _accumulate(stats, res, 0.0)
+    _check_outcome(res, max_iter_eff, on_nonconverge)
     return ExecResult(value=res.state[0], named={}, stats=stats)

@@ -1,0 +1,116 @@
+"""Structured errors and policies of the guarded execution layer.
+
+The paper separates *what* a fused program computes from the *conditions*
+under which the iterative models are correct and terminate (Fig. 9).  The
+engines enforce the execution-side half of that contract at runtime:
+
+  * malformed graphs (out-of-range indices, non-finite weights) fail
+    ``GraphValidationError`` before any kernel launches
+    (``structure.validate_graph``);
+  * specs whose termination proof assumed graph contracts the input breaks
+    (min-plus on negative weights) fail ``TerminationPreconditionError``
+    naming the violated condition (``conditions.violated_preconditions``);
+  * fixpoints that exhaust ``max_iter`` raise ``NonConvergenceError`` with
+    the exit diagnostics (iterations, residual, active count) instead of
+    returning a silent partial state;
+  * NaN/Inf blow-ups inside the fixpoint trip a divergence sentinel folded
+    into the loop condition (zero extra launches) and raise
+    ``DivergenceError`` with the iteration they fired on;
+  * infrastructure failures degrade down ``FALLBACK_CHAIN`` with bounded
+    retry (``runtime.ft.bounded_retry``), recorded in ``ExecStats``.
+
+This module is dependency-free (no jax, no repro imports) so every layer —
+graph containers, reference engines, pallas kernels, the executor — can
+raise the same exception types without import cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class GuardError(Exception):
+    """Base of every structured guard failure."""
+
+
+class GraphValidationError(GuardError, ValueError):
+    """The input graph (or a query source) violates the structural contract:
+    edge indices out of [0, n), wrong dtype, non-finite weights/capacities,
+    or a policy violation (self-loops/duplicates under an 'error' policy)."""
+
+
+class TerminationPreconditionError(GuardError, ValueError):
+    """The spec's termination condition is violated by this graph's actual
+    edge-value ranges (e.g. strengthened C10 fails for min-plus once weights
+    go negative).  ``condition`` names the violated paper condition."""
+
+    def __init__(self, message: str, condition: str = "C10",
+                 component: int = -1, detail: str = ""):
+        super().__init__(message)
+        self.condition = condition
+        self.component = component
+        self.detail = detail
+
+
+class NonConvergenceError(GuardError, RuntimeError):
+    """The fixpoint exhausted ``max_iter`` with vertices still active."""
+
+    def __init__(self, message: str, iterations: int = 0, max_iter: int = 0,
+                 active_count: int = 0, residual: float = float("nan")):
+        super().__init__(message)
+        self.iterations = iterations
+        self.max_iter = max_iter
+        self.active_count = active_count
+        self.residual = residual
+
+
+class DivergenceError(GuardError, RuntimeError):
+    """The in-loop NaN/Inf sentinel fired: the iteration produced values
+    outside the monoid's meaningful domain (a blown-up sum/prod component or
+    a NaN anywhere)."""
+
+    def __init__(self, message: str, iterations: int = 0):
+        super().__init__(message)
+        self.iterations = iterations
+
+
+class CheckpointMismatchError(GuardError, RuntimeError):
+    """A fixpoint checkpoint's fingerprint (graph shape, plan structure,
+    query sources, knobs) does not match the resuming executor — resuming
+    would silently continue a DIFFERENT query."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackEvent:
+    """One engine-degradation step, recorded in ``ExecStats.fallbacks``."""
+    from_engine: str
+    to_engine: str
+    error: str
+
+    def as_tuple(self):
+        return (self.from_engine, self.to_engine, self.error)
+
+
+# Degradation order: the sharded kernel engine falls back to the
+# single-device kernel engine (same fused sweeps, no collectives), which
+# falls back to the adaptive reference engine (plain segment ops — the
+# semantics every kernel engine is tested against).  ``adaptive`` is the
+# floor: its failures propagate.
+FALLBACK_CHAIN = {
+    "pallas_sharded": "pallas",
+    "pallas": "adaptive",
+}
+
+
+# Failures that retry/fallback must NEVER swallow: guard verdicts are
+# engine-independent (a validation error or a diverged fixpoint fails the
+# same way on every engine), and programming errors (bad knobs, wrong
+# types, broken invariants) are not infrastructure flakes.
+NON_RECOVERABLE = (GuardError, ValueError, TypeError, AssertionError,
+                   KeyboardInterrupt)
+
+
+def recoverable(exc: BaseException) -> bool:
+    """True for infrastructure-shaped failures worth a retry or a fallback
+    (lowering errors, runtime launch failures, OOM); False for guard
+    verdicts and programming errors, which must propagate unchanged."""
+    return isinstance(exc, Exception) and not isinstance(exc, NON_RECOVERABLE)

@@ -196,6 +196,76 @@ class IterationResult:
     state: tuple                     # per-component [n] arrays
     iterations: int
     edge_work: float
+    converged: object = True         # fixpoint reached (no active vertices,
+                                     # sentinel clean) — bool, or [B]/tracer
+    diverged: object = False         # NaN/Inf sentinel fired in-loop
+    active_count: object = 0         # still-active vertices at exit (> 0
+                                     # exactly when max_iter exhausted)
+    residual: object = 0.0           # max |Δ| of the LAST iteration over
+                                     # float components (0 if none)
+
+
+def _divergence(comps, new):
+    """In-loop NaN/Inf sentinel (zero extra launches: elementwise reductions
+    folded into the fixpoint body).  NaN anywhere is divergence; ±Inf is
+    divergence only for non-extremal components (sum/prod or an epilogue),
+    where the identities are finite and Inf means overflow — for min/max
+    components ±Inf is the legitimate ⊥."""
+    bad = jnp.asarray(False)
+    for i, cr in enumerate(comps):
+        if not jnp.issubdtype(cr.dtype, jnp.floating):
+            continue
+        bad = bad | jnp.any(jnp.isnan(new[i]))
+        if cr.op in ("sum", "prod") or cr.e_fn is not None:
+            bad = bad | jnp.any(jnp.isinf(new[i]))
+    return bad
+
+
+def _residual(comps, new, old):
+    """Max |new − old| over float components — the last iteration's residual,
+    reported in NonConvergence diagnostics.  Non-finite diffs (a vertex
+    leaving ⊥) are masked: 'changed from unreachable' is active_count's
+    story, not a numeric residual."""
+    r = jnp.float32(0)
+    for i, cr in enumerate(comps):
+        if not jnp.issubdtype(cr.dtype, jnp.floating):
+            continue
+        d = jnp.abs(new[i] - old[i])
+        r = jnp.maximum(r, jnp.max(jnp.where(jnp.isfinite(d), d,
+                                             jnp.float32(0))))
+    return r
+
+
+def _finish_result(comps, state, active, k, work, div, resid) -> IterationResult:
+    """Shared exit bookkeeping: host-convert the loop carry into an
+    ``IterationResult`` with structured convergence fields.  ``active`` may
+    be longer than n (padded engines pass the logical slice)."""
+    active_n = jnp.sum(active.astype(jnp.int32))
+    return IterationResult(
+        state=state, iterations=_host(k, int), edge_work=_host(work, float),
+        converged=_host(jnp.logical_and(~div, active_n == 0), bool),
+        diverged=_host(div, bool),
+        active_count=_host(active_n, int),
+        residual=_host(resid, float))
+
+
+def check_shard_replication(counts, what: str, engine: str) -> None:
+    """Replication contract of the sharded engines: state (and with it the
+    iteration count / direction sequence) is replicated, so every shard must
+    report the identical value.  On divergence, report the per-shard values
+    and the offending shard ids — the minority shards whose collectives
+    broke — instead of a bare mismatch."""
+    counts = np.asarray(counts)
+    if counts.size == 0 or (counts == counts.flat[0]).all():
+        return
+    vals, freq = np.unique(counts, return_counts=True)
+    majority = vals[int(freq.argmax())]
+    offenders = np.flatnonzero(counts != majority)
+    raise RuntimeError(
+        f"{engine} shards diverged on {what}: per-shard {what} = "
+        f"{counts.tolist()}; majority value {majority} held by "
+        f"{int(freq.max())}/{counts.size} shards, offending shard ids "
+        f"{offenders.tolist()} — replicated-state contract broken")
 
 
 def _init_arity(init_fn) -> int:
@@ -309,7 +379,7 @@ def iterate_graph(g: Graph, comps, plans, model: str = "pull+",
     valid_e = jnp.ones_like(src, dtype=bool)
 
     def body(carry):
-        state, active, k, work = carry
+        state, active, k, work, div, resid = carry
         state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
         evals = _propagate(comps, state, src, env)
         if model in ("pull+", "push+"):
@@ -348,17 +418,20 @@ def iterate_graph(g: Graph, comps, plans, model: str = "pull+",
             new_d = _recompute_merge(plans, comps_by_idx, state_d, red, has_pred)
         new = tuple(new_d[cr.idx] for cr in comps)
         ch = _changed(comps, new, state, tol)
-        return new, ch, k + 1, work
+        div = div | _divergence(comps, new)
+        resid = _residual(comps, new, state)
+        ch = ch & ~div                     # divergence drains the frontier:
+        return new, ch, k + 1, work, div, resid   # the loop exits next cond
 
     def cond(carry):
-        _, active, k, _ = carry
+        _, active, k, _, _, _ = carry
         return jnp.any(active) & (k < max_iter)
 
     state0 = _init_state(comps, n, sources)
-    state, active, k, work = jax.lax.while_loop(
-        cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0)))
-    return IterationResult(state=state, iterations=_host(k, int),
-                           edge_work=_host(work, float))
+    state, active, k, work, div, resid = jax.lax.while_loop(
+        cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0),
+                     jnp.asarray(False), jnp.float32(0)))
+    return _finish_result(comps, state, active, k, work, div, resid)
 
 
 # ---------------------------------------------------------------------------
@@ -416,7 +489,7 @@ def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
         return tuple(new_d[cr.idx] for cr in comps)
 
     def body(carry):
-        state, active, k, work, pulls = carry
+        state, active, k, work, pulls, div, resid = carry
         frac = jnp.mean(active.astype(jnp.float32))
         use_pull = frac > dense_threshold
         new = jax.lax.cond(use_pull, pull_branch, push_branch,
@@ -424,19 +497,22 @@ def iterate_adaptive(g: Graph, comps, plans, max_iter: Optional[int] = None,
         work = work + jnp.sum(active.astype(jnp.float32)
                               * g.out_deg.astype(jnp.float32))
         ch = _changed(comps, new, state, tol)
-        return new, ch, k + 1, work, pulls + use_pull.astype(jnp.int32)
+        div = div | _divergence(comps, new)
+        resid = _residual(comps, new, state)
+        ch = ch & ~div
+        return (new, ch, k + 1, work, pulls + use_pull.astype(jnp.int32),
+                div, resid)
 
     def cond(carry):
-        _, active, k, _, _ = carry
+        _, active, k, _, _, _, _ = carry
         return jnp.any(active) & (k < max_iter)
 
     state0 = _init_state(comps, n, sources)
-    state, active, k, work, pulls = jax.lax.while_loop(
+    state, active, k, work, pulls, div, resid = jax.lax.while_loop(
         cond, body,
         (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0),
-         jnp.int32(0)))
-    res = IterationResult(state=state, iterations=_host(k, int),
-                          edge_work=_host(work, float))
+         jnp.int32(0), jnp.asarray(False), jnp.float32(0)))
+    res = _finish_result(comps, state, active, k, work, div, resid)
     res.pull_iters = _host(pulls, int)
     return res
 
@@ -488,7 +564,7 @@ def iterate_dense(g: Graph, comps, plans, model: str = "pull+",
         return {cidx: prim, **dense_reduce(plan.secondary, masked)}
 
     def body(carry):
-        state, active, k, work = carry
+        state, active, k, work, div, resid = carry
         state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
         work = work + jnp.float32(g.num_edges)
         mats = {}
@@ -511,17 +587,20 @@ def iterate_dense(g: Graph, comps, plans, model: str = "pull+",
             new_d = _recompute_merge(plans, comps_by_idx, state_d, red, has_pred)
         new = tuple(new_d[cr.idx] for cr in comps)
         ch = _changed(comps, new, state, tol)
-        return new, ch, k + 1, work
+        div = div | _divergence(comps, new)
+        resid = _residual(comps, new, state)
+        ch = ch & ~div
+        return new, ch, k + 1, work, div, resid
 
     def cond(carry):
-        _, active, k, _ = carry
+        _, active, k, _, _, _ = carry
         return jnp.any(active) & (k < max_iter)
 
     state0 = _init_state(comps, n, sources)
-    state, active, k, work = jax.lax.while_loop(
-        cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0)))
-    return IterationResult(state=state, iterations=_host(k, int),
-                           edge_work=_host(work, float))
+    state, active, k, work, div, resid = jax.lax.while_loop(
+        cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0),
+                     jnp.asarray(False), jnp.float32(0)))
+    return _finish_result(comps, state, active, k, work, div, resid)
 
 
 # ---------------------------------------------------------------------------
@@ -580,7 +659,7 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
             return out
 
         def body(carry):
-            state, active, k, work = carry
+            state, active, k, work, div, resid = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             evals = _propagate(comps, state, src, env)
             eactive = (active[src] & mask) if model == "pull+" else mask
@@ -607,34 +686,46 @@ def iterate_distributed(g: Graph, comps, plans, mesh, axes=("data",),
                 new_d = _recompute_merge(plans, comps_by_idx, state_d, red, has_pred)
             new = tuple(new_d[cr.idx] for cr in comps)
             ch = _changed(comps, new, state, tol)
-            return new, ch, k + 1, work
+            # sentinel on the replicated post-combine state: every shard
+            # computes the identical flag, so the drain stays collective-safe
+            div = div | _divergence(comps, new)
+            resid = _residual(comps, new, state)
+            ch = ch & ~div
+            return new, ch, k + 1, work, div, resid
 
         def cond(carry):
-            _, active, k, _ = carry
+            _, active, k, _, _, _ = carry
             return jnp.any(active) & (k < max_iter)
 
         state0 = _init_state(comps, n, sources)
-        state, active, k, work = jax.lax.while_loop(
-            cond, body, (state0, jnp.ones(n, bool), jnp.int32(0), jnp.float32(0)))
-        return state, k[None], work[None]
+        state, active, k, work, div, resid = jax.lax.while_loop(
+            cond, body, (state0, jnp.ones(n, bool), jnp.int32(0),
+                         jnp.float32(0), jnp.asarray(False), jnp.float32(0)))
+        active_n = jnp.sum(active.astype(jnp.int32))
+        return (state, k[None], work[None], div[None], resid[None],
+                active_n[None])
 
     pspec = P(axes)
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(pspec, pspec, pspec, pspec, pspec),
-                   out_specs=(tuple(P() for _ in comps), P(axes), P(axes)))
-    state, k, work = fn(part.src, part.dst, part.weight, part.capacity, part.mask)
+                   out_specs=(tuple(P() for _ in comps), P(axes), P(axes),
+                              P(axes), P(axes), P(axes)))
+    state, k, work, div, resid, active_n = fn(
+        part.src, part.dst, part.weight, part.capacity, part.mask)
     k_host = np.asarray(k)
     work_host = np.asarray(work)
     # Replication contract: the state (and with it the convergence flag) is
     # replicated, so every shard must report the same iteration count.  A
-    # mismatch means a collective went wrong — fail loud instead of silently
-    # trusting shard 0 (the old ``np.asarray(k)[0]`` behaviour).
-    if not (k_host == k_host[0]).all():
-        raise RuntimeError(
-            f"distributed shards diverged on iteration count "
-            f"{k_host.tolist()} — replicated-state contract broken")
+    # mismatch means a collective went wrong — fail loud (naming the
+    # offending shards) instead of silently trusting shard 0.
+    check_shard_replication(k_host, "iteration count", "distributed")
+    div_h = bool(np.asarray(div)[0])
+    act_h = int(np.asarray(active_n)[0])
     res = IterationResult(state=state, iterations=int(k_host[0]),
-                          edge_work=float(work_host.sum()))
+                          edge_work=float(work_host.sum()),
+                          converged=(not div_h) and act_h == 0,
+                          diverged=div_h, active_count=act_h,
+                          residual=float(np.asarray(resid)[0]))
     res.shards = k_shards
     res.shard_work = tuple(float(w) for w in work_host)   # per-shard balance
     return res

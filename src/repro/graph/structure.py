@@ -19,6 +19,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.guard import GraphValidationError
+
 
 @dataclasses.dataclass(frozen=True)
 class EdgeOrder:
@@ -49,16 +51,97 @@ class Graph:
                 np.asarray(e.weight), np.asarray(e.capacity))
 
 
-def from_edges(n: int, src, dst, weight=None, capacity=None) -> Graph:
-    src = np.asarray(src, dtype=np.int32)
-    dst = np.asarray(dst, dtype=np.int32)
-    e = src.shape[0]
+def _check_edge_arrays(n: int, src, dst, weight, capacity,
+                       self_loops: str, duplicates: str):
+    """Host-side structural validation of raw edge arrays (the contract of
+    every engine: DESIGN.md §12).  Raises ``GraphValidationError``; returns
+    a boolean keep-mask when ``self_loops="drop"`` asks for filtering, else
+    None."""
+    if n < 1:
+        raise GraphValidationError(f"graph needs n >= 1 vertices, got {n}")
+    for name, a in (("src", src), ("dst", dst)):
+        if a.ndim != 1:
+            raise GraphValidationError(
+                f"{name} must be a 1-d index vector, got shape {a.shape}")
+        if not np.issubdtype(a.dtype, np.integer):
+            raise GraphValidationError(
+                f"{name} must be an integer vector, got dtype {a.dtype}")
+    if src.shape != dst.shape:
+        raise GraphValidationError(
+            f"src/dst length mismatch: {src.shape[0]} vs {dst.shape[0]}")
+    if src.size and (src.min() < 0 or src.max() >= n or
+                     dst.min() < 0 or dst.max() >= n):
+        bad = np.flatnonzero((src < 0) | (src >= n) | (dst < 0) | (dst >= n))
+        raise GraphValidationError(
+            f"edge endpoints out of range [0, {n}): {bad.size} bad edges, "
+            f"first at position {int(bad[0])} "
+            f"({int(src[bad[0]])} -> {int(dst[bad[0]])})")
+    for name, a in (("weight", weight), ("capacity", capacity)):
+        if a.shape != src.shape:
+            raise GraphValidationError(
+                f"{name} length {a.shape} does not match edge count "
+                f"{src.shape}")
+        if a.size and not np.isfinite(a).all():
+            bad = np.flatnonzero(~np.isfinite(a))
+            raise GraphValidationError(
+                f"{name} has {bad.size} non-finite entries (NaN/Inf), "
+                f"first at edge {int(bad[0])}")
+    loops = src == dst
+    n_loops = int(loops.sum())
+    if n_loops and self_loops == "error":
+        raise GraphValidationError(
+            f"graph has {n_loops} self-loops under self_loops='error' "
+            f"policy, first at edge {int(np.flatnonzero(loops)[0])}")
+    if duplicates == "error" and src.size:
+        key = src.astype(np.int64) * n + dst
+        n_dup = key.size - np.unique(key).size
+        if n_dup:
+            raise GraphValidationError(
+                f"graph has {n_dup} duplicate edges under "
+                "duplicates='error' policy")
+    if n_loops and self_loops == "drop":
+        return ~loops
+    return None
+
+
+def from_edges(n: int, src, dst, weight=None, capacity=None,
+               validate: bool = True, self_loops: str = "allow",
+               duplicates: str = "allow") -> Graph:
+    """Build a Graph from raw edge arrays.
+
+    ``validate`` (default on) runs the host-side structural checks —
+    index bounds, dtypes, finite weights/capacities — and the
+    ``self_loops`` ("allow" | "drop" | "error") and ``duplicates``
+    ("allow" | "error") policies; violations raise a structured
+    ``GraphValidationError`` instead of corrupting engine state downstream.
+    The generators below pre-dedupe, so their calls keep the default
+    allow-all policies."""
+    if self_loops not in ("allow", "drop", "error"):
+        raise ValueError(f"self_loops must be allow|drop|error, "
+                         f"got {self_loops!r}")
+    if duplicates not in ("allow", "error"):
+        raise ValueError(f"duplicates must be allow|error, got {duplicates!r}")
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if src.size == 0:                    # [] defaults to float64; the
+        src = src.astype(np.int32)       # zero-edge graph is legal
+    if dst.size == 0:
+        dst = dst.astype(np.int32)
+    e = src.shape[0] if src.ndim else 0
     if weight is None:
         weight = np.ones((e,), dtype=np.float32)
     if capacity is None:
         capacity = np.ones((e,), dtype=np.float32)
     weight = np.asarray(weight, dtype=np.float32)
     capacity = np.asarray(capacity, dtype=np.float32)
+    if validate:
+        keep = _check_edge_arrays(n, src, dst, weight, capacity,
+                                  self_loops, duplicates)
+        if keep is not None:
+            src, dst = src[keep], dst[keep]
+            weight, capacity = weight[keep], capacity[keep]
+    src = src.astype(np.int32, copy=False)
+    dst = dst.astype(np.int32, copy=False)
 
     def order(key):
         perm = np.argsort(key, kind="stable")
@@ -73,6 +156,61 @@ def from_edges(n: int, src, dst, weight=None, capacity=None) -> Graph:
     return Graph(n=n, by_dst=order(dst), by_src=order(src),
                  in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg),
                  w_out_deg=jnp.asarray(w_out))
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCheck:
+    """Validation summary of one graph: the facts engine entry points need
+    to guard a query — value ranges for the termination-precondition probe
+    (conditions.violated_preconditions), loop/duplicate counts for
+    diagnostics.  Computed once per graph (identity-keyed weakref cache,
+    like the layout caches) so per-query serving never re-scans edges."""
+    n: int
+    num_edges: int
+    w_min: float
+    w_max: float
+    c_min: float
+    c_max: float
+    self_loops: int
+    duplicates: int
+
+
+_VALID_CACHE: dict = {}
+
+
+def validate_graph(g: Graph) -> GraphCheck:
+    """Validate an already-built Graph and return its ``GraphCheck``.
+
+    Engine entry points (``engine.run_program`` / ``run_direct`` /
+    ``run_program_batch``) call this on every query; the O(E) host scan runs
+    once per graph and is memoized.  Graphs built by ``from_edges`` with
+    ``validate=True`` re-verify here too — cheap, and it catches graphs
+    assembled by hand or mutated layouts."""
+    key = id(g)
+    hit = _VALID_CACHE.get(key)
+    if hit is not None:
+        ref, chk = hit
+        if ref() is g:
+            return chk
+    src, dst, w, c = g.host_edges()
+    _check_edge_arrays(g.n, src, dst, w, c,
+                       self_loops="allow", duplicates="allow")
+    loops = int((src == dst).sum())
+    if src.size:
+        key64 = src.astype(np.int64) * g.n + dst
+        dups = int(key64.size - np.unique(key64).size)
+    else:
+        dups = 0
+    chk = GraphCheck(
+        n=g.n, num_edges=int(src.shape[0]),
+        w_min=float(w.min()) if w.size else 0.0,
+        w_max=float(w.max()) if w.size else 0.0,
+        c_min=float(c.min()) if c.size else 0.0,
+        c_max=float(c.max()) if c.size else 0.0,
+        self_loops=loops, duplicates=dups)
+    _VALID_CACHE[key] = (weakref.ref(g), chk)
+    weakref.finalize(g, _VALID_CACHE.pop, key, None)
+    return chk
 
 
 _WDEG_CACHE: dict = {}

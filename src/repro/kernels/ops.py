@@ -210,7 +210,8 @@ def _padded_init_state(comps, n, n_pad, srcs):
 
 def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                            interpret, use, dense_threshold, switch_k,
-                           push_resolution, batch=False):
+                           push_resolution, batch=False, sentinel=True,
+                           chunked=False):
     """Trace + jit the whole fixpoint once.  The returned function takes the
     blocked-ELL arrays (one 5-tuple per direction in ``use``, pull first),
     out-degrees (plain + weighted), the dst-sorted resolution arrays (when
@@ -218,7 +219,8 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     sources as arguments (NOT closure constants): ``run(*arrays, srcs)``
     with ``srcs`` an [n_comps] int32 vector, so one compiled executor serves
     every graph with the same padded shapes and EVERY query source without
-    retracing.
+    retracing.  It returns the full exit diagnostics
+    ``(state, k, work, pushes, res_work, div, resid, active_n)``.
 
     ``use`` = ("pull",) | ("push",) | ("pull", "push"); with both, each
     iteration picks its sweep via ``lax.cond`` — both branches trace (two
@@ -232,7 +234,21 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     and frontier grow a batch dimension, the while_loop's batching rule
     keeps per-query convergence exact (converged queries stop updating via
     the per-element carry select), and the direction lax.cond lowers to a
-    per-query select — bit-identical to the sequential runs (DESIGN.md §9)."""
+    per-query select — bit-identical to the sequential runs (DESIGN.md §9).
+
+    ``sentinel`` folds the NaN/Inf divergence sentinel + last-iteration
+    residual into the loop carry (elementwise reductions, zero extra
+    launches); off, the carry keeps constant placeholders so both variants
+    share one signature.
+
+    With ``chunked=True`` the SAME traced body is exposed as a host-steppable
+    pair ``(init, step)``: ``init(*arrays, srcs)`` builds the initial carry,
+    ``step(*arrays, carry, k_stop)`` advances the while_loop until ``k ==
+    k_stop`` or quiescence.  The loop body is the identical jaxpr in both
+    variants and the carry crosses the host boundary as concrete buffers, so
+    a chunked run visits the exact iteration sequence of the monolithic one
+    and stays bitwise-identical (DESIGN.md §12) — which is what lets long
+    fixpoints snapshot through CheckpointManager and warm-resume."""
     comps_by_idx = {cr.idx: cr for cr in comps}
     plan_levels = tuple(tuple(_plan_levels(p)) for p in plans)
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
@@ -241,16 +257,27 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     p_fns = {c: comps_by_idx[c].p_fn for c in comps_order}
     sorted_res = push_resolution == "sorted" and "push" in use
 
-    def run(*arrays):
+    def _split(arrays):
+        """(ELL dict, out_deg, wdeg, resolution arrays|None, rest)."""
         ell = {d: arrays[5 * i:5 * i + 5] for i, d in enumerate(use)}
         idx = 5 * len(use)
         out_deg = arrays[idx]
         wdeg = arrays[idx + 1]
         idx += 2
+        res = None
         if sorted_res:
-            res_in2out, res_valid, res_src_tile, res_nnz = arrays[idx:idx + 4]
+            res = arrays[idx:idx + 4]
             idx += 4
-        srcs = arrays[idx]
+        return ell, out_deg, wdeg, res, arrays[idx:]
+
+    def _fixpoint(arrays, carry0, k_stop):
+        """Run the while_loop from ``carry0`` until quiescence or ``k ==
+        k_stop`` — THE single traced body both the monolithic executor
+        (k_stop = max_iter, static) and the chunked stepper (k_stop traced)
+        share."""
+        ell, out_deg, wdeg, res_arrays, _ = _split(arrays)
+        if sorted_res:
+            res_in2out, res_valid, res_src_tile, res_nnz = res_arrays
         n_pad = ell[use[0]][0].shape[0]
         out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
             jnp.maximum(out_deg, 1).astype(jnp.float32))
@@ -314,7 +341,7 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             return branch
 
         def body(carry):
-            state, active, k, work, pushes, res_work = carry
+            state, active, k, work, pushes, res_work, div, resid = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             if idempotent:
                 active_i32 = active.astype(jnp.int32)
@@ -364,18 +391,50 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 pushes = pushes + (1 if d == "push" else 0)
             new = tuple(new_d[cr.idx] for cr in comps)
             ch = iterate._changed(comps, new, state, tol)
-            return new, ch, k + 1, work, pushes, res_work
+            if sentinel:
+                # fold divergence + residual into the existing carry: pure
+                # elementwise reductions, no extra kernel launches.  A fired
+                # sentinel drains the frontier so the loop exits on its own
+                # condition.
+                div = div | iterate._divergence(comps, new)
+                resid = iterate._residual(comps, new, state)
+                ch = ch & ~div
+            return new, ch, k + 1, work, pushes, res_work, div, resid
 
         def cond(carry):
-            _, active, k, _, _, _ = carry
-            return jnp.any(active) & (k < max_iter)
+            _, active, k, _, _, _, _, _ = carry
+            return jnp.any(active) & (k < k_stop)
 
+        return jax.lax.while_loop(cond, body, carry0)
+
+    def _init(arrays):
+        """Initial carry from the shared arrays (+ srcs, the trailing one)."""
+        ell, _, _, _, rest = _split(arrays)
+        srcs = rest[0]
+        n_pad = ell[use[0]][0].shape[0]
         state0 = _padded_init_state(comps, n, n_pad, srcs)
-        state, active, k, work, pushes, res_work = jax.lax.while_loop(
-            cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
-                         jnp.float32(0), jnp.int32(0), jnp.float32(0)))
-        return state, k, work, pushes, res_work
+        return (state0, jnp.ones(n_pad, bool), jnp.int32(0),
+                jnp.float32(0), jnp.int32(0), jnp.float32(0),
+                jnp.asarray(False), jnp.float32(0))
 
+    def run(*arrays):
+        carry = _fixpoint(arrays, _init(arrays), max_iter)
+        state, active, k, work, pushes, res_work, div, resid = carry
+        active_n = jnp.sum(active[:n].astype(jnp.int32))
+        return state, k, work, pushes, res_work, div, resid, active_n
+
+    if chunked:
+        if batch:
+            raise ValueError("chunked execution does not batch")
+
+        def step(*args_carry):
+            *arrays, carry, k_stop = args_carry
+            return _fixpoint(tuple(arrays), carry, k_stop)
+
+        def init(*arrays):
+            return _init(tuple(arrays))
+
+        return jax.jit(init), jax.jit(step)
     if batch:
         # everything but srcs (ELL tuples, degrees, resolution arrays) is
         # shared across the batch
@@ -402,7 +461,8 @@ def _srcs_vector(comps, sources=None):
 
 def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
                      interpret, use, dense_threshold, switch_k,
-                     push_resolution, batch=False):
+                     push_resolution, batch=False, sentinel=True,
+                     chunked=False):
     """Cache lookup / build of the compiled fixpoint, plus the shared
     argument prefix (ELL arrays + degree vectors + dst-sorted resolution
     arrays) it runs on."""
@@ -422,13 +482,15 @@ def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
         if (push_resolution == "sorted" and "push" in use) else None
     key = (g.n, tuple(tuple(_plan_levels(p)) for p in plans),
            _comps_key(comps), max_iter, tol, block_v, block_e, interpret,
-           use, dense_threshold, switch_k, push_resolution, batch)
+           use, dense_threshold, switch_k, push_resolution, batch,
+           sentinel, chunked)
     run = _exec_cache_get(key)
     if run is None:
         run = _build_pallas_executor(comps, plans, g.n, max_iter, tol,
                                      block_v, block_e, interpret, use,
                                      dense_threshold, switch_k,
-                                     push_resolution, batch=batch)
+                                     push_resolution, batch=batch,
+                                     sentinel=sentinel, chunked=chunked)
         _exec_cache_put(key, run, comps)
     args = []
     for d in use:
@@ -441,12 +503,58 @@ def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
     return run, args
 
 
+def _fixpoint_fingerprint(g, comps, plans, use, max_iter, tol, block_v,
+                          block_e, push_resolution, switch_k, srcs):
+    """JSON-able identity of a chunked fixpoint: a checkpoint written under
+    one fingerprint must never warm-resume an executor built for another
+    (different graph, plan structure, query sources, or knobs would silently
+    continue a DIFFERENT query — ``CheckpointMismatchError`` instead)."""
+    return {
+        "n": int(g.n), "num_edges": int(g.num_edges),
+        "plans": repr(tuple(tuple(_plan_levels(p)) for p in plans)),
+        "comps": repr(tuple((cr.idx, cr.op, str(np.dtype(cr.dtype)),
+                             cr.e_fn is not None) for cr in comps)),
+        "use": list(use), "max_iter": int(max_iter), "tol": float(tol),
+        "block_v": int(block_v), "block_e": int(block_e),
+        "push_resolution": str(push_resolution),
+        "switch_k": None if switch_k is None else float(switch_k),
+        "srcs": [int(s) for s in np.asarray(srcs)],
+    }
+
+
+def _warm_start_carry(carry, comps, init_state, n):
+    """Override the initial carry's state with user-supplied per-component
+    [n] arrays (the warm-start primitive): padding rows keep the reduction
+    identity, the frontier resets to all-ones so the first sweep re-derives
+    the true active set from the supplied state."""
+    state0, active, k, work, pushes, res_work, div, resid = carry
+    init_state = tuple(init_state)
+    if len(init_state) != len(comps):
+        raise ValueError(
+            f"init_state has {len(init_state)} arrays for "
+            f"{len(comps)} components")
+    new_state = []
+    for ref, cr, arr in zip(state0, comps, init_state):
+        a = jnp.asarray(arr, dtype=ref.dtype)
+        if a.shape != (n,):
+            raise ValueError(
+                f"init_state for component {cr.idx} has shape {a.shape}, "
+                f"expected ({n},)")
+        new_state.append(ref.at[:n].set(a))
+    return (tuple(new_state), active, k, work, pushes, res_work, div, resid)
+
+
 def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    tol: float = 0.0, block_v: int = 8, block_e: int = 128,
                    interpret: Optional[bool] = None, direction: str = "auto",
                    dense_threshold: float = DENSE_FRONTIER,
                    switch_k="auto", push_resolution: str = PUSH_RESOLUTION,
-                   sources: Optional[dict] = None) -> iterate.IterationResult:
+                   sources: Optional[dict] = None,
+                   divergence_sentinel: bool = True,
+                   init_state=None,
+                   checkpoint_every: Optional[int] = None,
+                   ckpt_dir=None, resume: bool = False,
+                   fault_hook=None) -> iterate.IterationResult:
     """Fixpoint of the fused reduction with single-launch Pallas edge sweeps.
 
     ``direction`` selects the sweep model per DESIGN.md §2:
@@ -478,6 +586,28 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     per-direction iteration counts — and ``resolve_work`` — the resolution
     edge work actually performed — which are also accumulated into
     ``edge_reduce.SWEEP_STATS`` for benchmarks.
+
+    Guarded-execution knobs (DESIGN.md §12):
+
+    ``divergence_sentinel``
+        fold the NaN/Inf sentinel + last-iteration residual into the loop
+        carry (default on; zero extra launches — off only for overhead
+        benchmarking).
+    ``init_state``
+        per-component [n] arrays to warm-start the fixpoint from (e.g. a
+        previous query's converged state); padding and the frontier reset
+        are handled here.
+    ``checkpoint_every`` / ``ckpt_dir`` / ``resume``
+        run the SAME traced loop body in host-stepped chunks of
+        ``checkpoint_every`` iterations, snapshotting the carry through
+        ``checkpoint.FixpointCheckpointer`` after each chunk;
+        ``resume=True`` restores the newest fingerprint-matching snapshot
+        and continues.  Chunked execution is bitwise-identical to the
+        monolithic loop (shared body jaxpr, exact integer chunk bounds).
+    ``fault_hook``
+        test-only callable invoked with the iteration count after each
+        chunk — fault-injection tests raise from it to kill a run
+        mid-fixpoint.
     """
     n = g.n
     if interpret is None:
@@ -490,10 +620,58 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     switch_k = _normalize_switch_k(
         switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
     push_resolution = _check_resolution(push_resolution)
-    run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
-                                 block_e, interpret, use, dense_threshold,
-                                 switch_k, push_resolution)
-    state, k, work, pushes, res_work = run(*args, _srcs_vector(comps, sources))
+    if checkpoint_every is not None and int(checkpoint_every) < 1:
+        raise ValueError("checkpoint_every must be >= 1")
+    if (checkpoint_every is not None or resume) and ckpt_dir is None:
+        raise ValueError("checkpoint_every/resume require ckpt_dir")
+    srcs = _srcs_vector(comps, sources)
+    chunk_mode = (checkpoint_every is not None or init_state is not None
+                  or resume or fault_hook is not None)
+    if not chunk_mode:
+        run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
+                                     block_e, interpret, use, dense_threshold,
+                                     switch_k, push_resolution,
+                                     sentinel=divergence_sentinel)
+        state, k, work, pushes, res_work, div, resid, act_n = run(*args, srcs)
+    else:
+        pair, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
+                                      block_e, interpret, use,
+                                      dense_threshold, switch_k,
+                                      push_resolution,
+                                      sentinel=divergence_sentinel,
+                                      chunked=True)
+        init_f, step_f = pair
+        ckpt = None
+        if ckpt_dir is not None:
+            from repro.checkpoint.fixpoint import FixpointCheckpointer
+            ckpt = FixpointCheckpointer(
+                ckpt_dir,
+                fingerprint=_fixpoint_fingerprint(
+                    g, comps, plans, use, max_iter, tol, block_v, block_e,
+                    push_resolution, switch_k, srcs))
+        carry = None
+        carry0 = init_f(*args, srcs)
+        if resume:
+            carry = ckpt.restore(carry0)
+        if carry is None:
+            carry = carry0
+            if init_state is not None:
+                carry = _warm_start_carry(carry, comps, init_state, n)
+        chunk = int(checkpoint_every) if checkpoint_every else max_iter
+        while True:
+            k_h = int(np.asarray(carry[2]))
+            # the FULL padded frontier, exactly the monolithic loop condition
+            if k_h >= max_iter or not bool(np.any(np.asarray(carry[1]))):
+                break
+            carry = step_f(*args, carry,
+                           jnp.int32(min(k_h + chunk, max_iter)))
+            k_done = int(np.asarray(carry[2]))
+            if ckpt is not None and checkpoint_every is not None:
+                ckpt.save(carry, k_done)
+            if fault_hook is not None:
+                fault_hook(k_done)
+        state, active, k, work, pushes, res_work, div, resid = carry
+        act_n = jnp.sum(active[:n].astype(jnp.int32))
     k_i = iterate._host(k, int)
     p_i = iterate._host(pushes, int)
     rw = iterate._host(res_work, float)
@@ -505,7 +683,11 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     res = iterate.IterationResult(
         state=tuple(s[:n] for s in state),
         iterations=k_i,
-        edge_work=iterate._host(work, float))
+        edge_work=iterate._host(work, float),
+        converged=iterate._host(jnp.logical_and(~div, act_n == 0), bool),
+        diverged=iterate._host(div, bool),
+        active_count=iterate._host(act_n, int),
+        residual=iterate._host(resid, float))
     res.push_iters = p_i
     res.pull_iters = k_i - p_i        # valid for ints and tracers alike
     res.resolve_work = rw
@@ -557,11 +739,15 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
                                  block_e, interpret, use, dense_threshold,
                                  switch_k, push_resolution, batch=True)
-    state, k, work, pushes, res_work = run(*args, srcs)
+    state, k, work, pushes, res_work, div, resid, act_n = run(*args, srcs)
     res = iterate.IterationResult(
         state=tuple(s[:, :n] for s in state),
         iterations=k,                     # [B] per-query iteration counts
-        edge_work=work)                   # [B] per-query edge work
+        edge_work=work,                   # [B] per-query edge work
+        converged=jnp.logical_and(~div, act_n == 0),   # [B]
+        diverged=div,                     # [B] per-query sentinel flags
+        active_count=act_n,               # [B]
+        residual=resid)                   # [B]
     res.push_iters = pushes
     res.pull_iters = k - pushes
     res.resolve_work = res_work           # [B] per-query resolution work
@@ -722,7 +908,7 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             return branch
 
         def body(carry):
-            state, active, k, work, pushes = carry
+            state, active, k, work, pushes, div, resid = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             if idempotent:
                 active_i32 = active.astype(jnp.int32)
@@ -774,22 +960,33 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 pushes = pushes + (1 if d == "push" else 0)
             new = tuple(new_d[cr.idx] for cr in comps)
             ch = iterate._changed(comps, new, state, tol)
-            return new, ch, k + 1, work, pushes
+            # divergence sentinel on the REPLICATED post-combine state: every
+            # shard computes the identical flag, so draining the frontier
+            # through it stays collective-safe.
+            div = div | iterate._divergence(comps, new)
+            resid = iterate._residual(comps, new, state)
+            ch = ch & ~div
+            return new, ch, k + 1, work, pushes, div, resid
 
         def cond(carry):
-            _, active, k, _, _ = carry
+            _, active, k, _, _, _, _ = carry
             return jnp.any(active) & (k < max_iter)
 
         state0 = _padded_init_state(comps, n, n_pad, srcs)
-        state, active, k, work, pushes = jax.lax.while_loop(
+        state, active, k, work, pushes, div, resid = jax.lax.while_loop(
             cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
-                         jnp.float32(0), jnp.int32(0)))
-        # k/pushes are replicated (asserted host-side); work is per-shard.
-        return state, k[None], work[None], pushes[None]
+                         jnp.float32(0), jnp.int32(0), jnp.asarray(False),
+                         jnp.float32(0)))
+        # k/pushes/div/resid/active_n are replicated (k and pushes asserted
+        # host-side); work is per-shard.
+        active_n = jnp.sum(active[:n].astype(jnp.int32))
+        return (state, k[None], work[None], pushes[None], div[None],
+                resid[None], active_n[None])
 
     pspec = P(ax)
     in_specs = tuple([pspec] * (6 * len(use)) + [P(), P(), P()])
-    out_specs = (tuple(P() for _ in comps), P(ax), P(ax), P(ax))
+    out_specs = (tuple(P() for _ in comps), P(ax), P(ax), P(ax), P(ax),
+                 P(ax), P(ax))
     # check_vma off: the pre-graduation checker rejects collectives inside
     # while_loop bodies, and the graduated checker cannot see through
     # interpret-mode pallas_call — replication of state/k/pushes is a
@@ -879,27 +1076,33 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
     run, args, k_shards = _sharded_executor(
         g, comps, plans, mesh, axes, strategy, max_iter, tol, block_v,
         block_e, interpret, use, dense_threshold, switch_k)
-    state, k, work, pushes = run(*args, _srcs_vector(comps, sources))
+    state, k, work, pushes, div, resid, act_n = run(
+        *args, _srcs_vector(comps, sources))
     k_host = np.asarray(k)
     work_host = np.asarray(work)
     push_host = np.asarray(pushes)
     # Replication contract: every shard must have run the identical fixpoint
     # (same iteration count, same direction sequence).  A divergence means
-    # the collective combine or the global switch broke — fail loud instead
-    # of trusting shard 0.
-    if not (k_host == k_host[0]).all() or not (push_host == push_host[0]).all():
-        raise RuntimeError(
-            f"pallas_sharded shards diverged: iterations={k_host.tolist()}, "
-            f"push_iters={push_host.tolist()} — replicated-state contract "
-            "broken")
+    # the collective combine or the global switch broke — fail loud, naming
+    # the offending shards, instead of trusting shard 0.
+    iterate.check_shard_replication(k_host, "iteration count",
+                                    "pallas_sharded")
+    iterate.check_shard_replication(push_host, "push-iteration count",
+                                    "pallas_sharded")
     k_i = int(k_host[0])
     p_i = int(push_host[0])
+    div_h = bool(np.asarray(div)[0])
+    act_h = int(np.asarray(act_n)[0])
     _er.SWEEP_STATS["push_iters"] += p_i
     _er.SWEEP_STATS["pull_iters"] += k_i - p_i
     res = iterate.IterationResult(
         state=tuple(s[:n] for s in state),
         iterations=k_i,
-        edge_work=float(work_host.sum()))
+        edge_work=float(work_host.sum()),
+        converged=(not div_h) and act_h == 0,
+        diverged=div_h,
+        active_count=act_h,
+        residual=float(np.asarray(resid)[0]))
     res.push_iters = p_i
     res.pull_iters = k_i - p_i
     res.resolve_work = 0.0

@@ -34,6 +34,30 @@ import numpy as np
 from repro.checkpoint.ckpt import CheckpointManager
 
 
+def bounded_retry(fn: Callable[[], Any], max_retries: int, backoff_s: float,
+                  retryable: Optional[Callable[[BaseException], bool]] = None):
+    """Call ``fn()`` with bounded retry + exponential backoff.  Returns
+    ``(result, retries_used)``.  ``retryable`` filters which exceptions are
+    worth another attempt (default: any ``Exception``); a non-retryable
+    failure — or exhausting the budget — re-raises the last error.
+
+    This is the engine fallback chain's retry primitive (DESIGN.md §12): the
+    same budget/backoff policy as ``FaultTolerantDriver.run_step`` but free
+    of checkpoint/stream state, so ``core.engine`` can wrap a whole engine
+    invocation without owning a driver."""
+    attempt = 0
+    while True:
+        try:
+            return fn(), attempt
+        except Exception as exc:
+            if retryable is not None and not retryable(exc):
+                raise
+            attempt += 1
+            if attempt > max_retries:
+                raise
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
 @dataclasses.dataclass
 class FTConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
@@ -120,9 +144,11 @@ class FaultTolerantDriver:
 
     # -- the guarded step ---------------------------------------------------
     def run_step(self, state, batch, state_like=None):
-        """Run one step with bounded retry; on persistent failure restores
-        the latest checkpoint and re-raises if that also fails."""
+        """Run one step with bounded retry; on exhausting the retry budget
+        restores the latest checkpoint (at most ``max_retries`` restores for
+        THIS incident) and re-raises once the restore budget is spent too."""
         attempt = 0
+        incident_restores = 0
         while True:
             try:
                 t0 = time.perf_counter()
@@ -139,12 +165,19 @@ class FaultTolerantDriver:
                 attempt += 1
                 self.stats.retries += 1
                 if attempt > self.cfg.max_retries:
-                    if state_like is None:
+                    # Retry budget spent: restore and restart the budget.
+                    # The abort decision uses the PER-INCIDENT restore
+                    # count — the lifetime ``stats.restores`` keeps
+                    # accumulating across healthy calls and must never
+                    # abort a run that merely survived many incidents.
+                    if state_like is None or \
+                            incident_restores >= self.cfg.max_retries:
                         raise
                     state, _ = self.restore(state_like)
+                    incident_restores += 1
                     attempt = 0
-                    if self.stats.restores > self.cfg.max_retries:
-                        raise
+                    continue      # restored state retries immediately — no
+                                  # backoff_s * 2**(-1) sleep from the reset
                 time.sleep(self.cfg.backoff_s * (2 ** (attempt - 1)))
 
     def train(self, state, n_steps: int, next_batch: Callable[[], Any],

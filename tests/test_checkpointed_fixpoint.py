@@ -1,0 +1,265 @@
+"""Checkpointed/chunked fixpoints + engine fallback chain (DESIGN.md §12).
+
+The contract under test: restructuring the jitted ``while_loop`` into
+host-stepped chunks — with or without ``CheckpointManager`` snapshots, kill
+and resume, or a warm start — must stay BITWISE-identical to the monolithic
+loop; and infrastructure failures must degrade down ``guard.FALLBACK_CHAIN``
+without changing results.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engine, guard, iterate
+from repro.core import usecases as U
+from repro.core.fusion import Prim
+from repro.graph.structure import uniform_graph
+from repro.kernels import ops as kops
+
+pytestmark = pytest.mark.faults
+
+
+def _comp(dk):
+    return iterate.CompRuntime(idx=0, op=dk.rop,
+                               dtype=iterate.DTYPES[dk.dtype],
+                               p_fn=dk.p_fn, init_fn=dk.init_fn,
+                               source=dk.source, e_fn=dk.e_fn)
+
+
+def _kernel_sets(n):
+    return [("bfs", U.handwritten_bfs_depth(0)),
+            ("sssp", U.handwritten_sssp(0)),
+            ("pagerank", U.pagerank_kernels(n, tol=1e-6, max_iter=60))]
+
+
+def _states(res):
+    return [np.asarray(s) for s in res.state]
+
+
+class _Kill(Exception):
+    pass
+
+
+@pytest.fixture
+def g():
+    return uniform_graph(16, 48, seed=5, weighted=True)
+
+
+# ---------------------------------------------------------------------------
+# Chunked ≡ monolithic (bitwise, no fault fired)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("direction", ["pull", "push", "auto"])
+def test_chunked_bitwise_equals_monolithic(g, direction, tmp_path):
+    for name, dk in _kernel_sets(g.n):
+        comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+        mono = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
+                                   tol=dk.tol, direction=direction)
+        chunked = kops.iterate_pallas(
+            g, [comp], plans, max_iter=dk.max_iter, tol=dk.tol,
+            direction=direction, checkpoint_every=2,
+            ckpt_dir=str(tmp_path / f"{name}_{direction}"))
+        assert chunked.iterations == mono.iterations, name
+        for a, b in zip(_states(mono), _states(chunked)):
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        assert chunked.converged == mono.converged
+
+
+def test_single_chunk_mode_bitwise(g):
+    """fault_hook alone flips to chunked execution with one max_iter-sized
+    chunk — still bitwise-identical."""
+    dk = U.handwritten_sssp(0)
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    mono = kops.iterate_pallas(g, [comp], plans)
+    seen = []
+    chunked = kops.iterate_pallas(g, [comp], plans, fault_hook=seen.append)
+    np.testing.assert_array_equal(_states(mono)[0], _states(chunked)[0])
+    assert seen == [mono.iterations]
+
+
+# ---------------------------------------------------------------------------
+# Kill mid-fixpoint → resume → bitwise match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["bfs", "pagerank"])
+def test_kill_and_resume_bitwise(g, kernel, tmp_path):
+    dk = dict(_kernel_sets(g.n))[kernel]
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    ref = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
+                              tol=dk.tol)
+    assert ref.iterations > 2, "need a multi-chunk fixpoint to kill"
+    d = str(tmp_path / kernel)
+
+    def killer(k):
+        if k >= 2:
+            raise _Kill()
+
+    with pytest.raises(_Kill):
+        kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
+                            tol=dk.tol, checkpoint_every=1, ckpt_dir=d,
+                            fault_hook=killer)
+    resumed = kops.iterate_pallas(g, [comp], plans, max_iter=dk.max_iter,
+                                  tol=dk.tol, checkpoint_every=1,
+                                  ckpt_dir=d, resume=True)
+    assert resumed.iterations == ref.iterations
+    for a, b in zip(_states(ref), _states(resumed)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_resume_on_empty_dir_is_fresh_start(g, tmp_path):
+    dk = U.handwritten_bfs_depth(0)
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    ref = kops.iterate_pallas(g, [comp], plans)
+    res = kops.iterate_pallas(g, [comp], plans, checkpoint_every=2,
+                              ckpt_dir=str(tmp_path / "fresh"), resume=True)
+    np.testing.assert_array_equal(_states(ref)[0], _states(res)[0])
+
+
+def test_resume_rejects_fingerprint_mismatch(g, tmp_path):
+    dk = U.handwritten_bfs_depth(0)
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    d = str(tmp_path / "fp")
+    kops.iterate_pallas(g, [comp], plans, checkpoint_every=1, ckpt_dir=d)
+    # a DIFFERENT query source must refuse the stored snapshot
+    with pytest.raises(guard.CheckpointMismatchError):
+        kops.iterate_pallas(g, [comp], plans, sources={0: 3},
+                            checkpoint_every=1, ckpt_dir=d, resume=True)
+
+
+def test_checkpoint_knob_validation(g):
+    dk = U.handwritten_bfs_depth(0)
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        kops.iterate_pallas(g, [comp], plans, checkpoint_every=2)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        kops.iterate_pallas(g, [comp], plans, checkpoint_every=0,
+                            ckpt_dir="/tmp/x")
+
+
+# ---------------------------------------------------------------------------
+# Warm start (init_state override — the ROADMAP warm-start primitive)
+# ---------------------------------------------------------------------------
+
+def test_warm_start_from_converged_state(g):
+    dk = U.handwritten_sssp(0)
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    cold = kops.iterate_pallas(g, [comp], plans)
+    warm = kops.iterate_pallas(g, [comp], plans, init_state=cold.state)
+    assert warm.iterations <= 1 < cold.iterations
+    np.testing.assert_array_equal(_states(cold)[0], _states(warm)[0])
+
+
+def test_warm_start_shape_validation(g):
+    dk = U.handwritten_bfs_depth(0)
+    comp, plans = _comp(dk), [Prim(dk.rop, 0)]
+    with pytest.raises(ValueError, match="init_state"):
+        kops.iterate_pallas(g, [comp], plans,
+                            init_state=[np.zeros(g.n - 1, np.int32)])
+    with pytest.raises(ValueError, match="components"):
+        kops.iterate_pallas(g, [comp], plans,
+                            init_state=[np.zeros(g.n, np.int32)] * 2)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level threading (run_direct / run_program)
+# ---------------------------------------------------------------------------
+
+def test_run_direct_checkpointed_matches_plain(g, tmp_path):
+    dk = U.pagerank_kernels(g.n, tol=1e-6, max_iter=60)
+    plain = engine.run_direct(g, dk, engine="pallas")
+    ck = engine.run_direct(g, dk, engine="pallas", checkpoint_every=3,
+                           ckpt_dir=str(tmp_path / "pr"))
+    np.testing.assert_array_equal(np.asarray(plain.value),
+                                  np.asarray(ck.value))
+    assert ck.stats.iterations == plain.stats.iterations
+
+
+def test_checkpoint_knobs_rejected_off_pallas(g, tmp_path):
+    dk = U.handwritten_bfs_depth(0)
+    with pytest.raises(ValueError, match="pallas"):
+        engine.run_direct(g, dk, engine="pull", checkpoint_every=2,
+                          ckpt_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="pallas"):
+        engine.run_direct(g, dk, engine="adaptive",
+                          init_state=[np.zeros(g.n, np.int32)])
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: the engine fallback chain
+# ---------------------------------------------------------------------------
+
+def test_pallas_falls_back_to_adaptive(g, monkeypatch):
+    dk = U.handwritten_bfs_depth(0)
+    ref = engine.run_direct(g, dk, engine="adaptive")
+
+    def boom(*a, **k):
+        raise RuntimeError("forced lowering failure")
+
+    monkeypatch.setattr(kops, "iterate_pallas", boom)
+    r = engine.run_direct(g, dk, engine="pallas", fallback=True)
+    np.testing.assert_array_equal(np.asarray(ref.value), np.asarray(r.value))
+    assert r.stats.engine_used == "adaptive"
+    assert len(r.stats.fallbacks) == 1
+    frm, to, err = r.stats.fallbacks[0]
+    assert (frm, to) == ("pallas", "adaptive")
+    assert "forced lowering failure" in err
+    assert r.stats.exec_retries >= 1          # same-engine retry spent first
+
+
+def test_sharded_falls_back_down_the_chain(g, monkeypatch):
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    dk = U.handwritten_bfs_depth(0)
+    ref = engine.run_direct(g, dk, engine="pallas")
+
+    def boom(*a, **k):
+        raise RuntimeError("forced collective failure")
+
+    monkeypatch.setattr(kops, "iterate_pallas_sharded", boom)
+    r = engine.run_direct(g, dk, engine="pallas_sharded", mesh=mesh,
+                          fallback=True)
+    np.testing.assert_array_equal(np.asarray(ref.value), np.asarray(r.value))
+    assert r.stats.engine_used == "pallas"
+    assert [(f, t) for f, t, _ in r.stats.fallbacks] == \
+        [("pallas_sharded", "pallas")]
+
+
+def test_fallback_never_swallows_guard_verdicts(g, monkeypatch):
+    from repro.graph.structure import from_edges
+    gneg = from_edges(4, [0, 1, 2, 3], [1, 2, 3, 0],
+                      weight=[1.0, -2.0, 1.0, 1.0])
+    with pytest.raises(guard.TerminationPreconditionError):
+        engine.run_direct(gneg, U.handwritten_sssp(0), engine="pallas",
+                          fallback=True)
+    dk1 = dataclasses.replace(U.handwritten_bfs_depth(0), max_iter=1)
+    with pytest.raises(guard.NonConvergenceError):
+        engine.run_direct(g, dk1, engine="pallas", fallback=True)
+
+
+def test_fallback_off_propagates(g, monkeypatch):
+    def boom(*a, **k):
+        raise RuntimeError("forced lowering failure")
+    monkeypatch.setattr(kops, "iterate_pallas", boom)
+    with pytest.raises(RuntimeError, match="forced lowering"):
+        engine.run_direct(g, U.handwritten_bfs_depth(0), engine="pallas")
+
+
+def test_batched_launch_degrades_to_sequential(g, monkeypatch):
+    dk = U.handwritten_bfs_depth(0)
+    refs = engine.run_direct(g, dk, engine="adaptive",
+                             sources=[0, 3, 5])
+
+    def boom(*a, **k):
+        raise RuntimeError("forced batch failure")
+
+    monkeypatch.setattr(kops, "iterate_pallas_batch", boom)
+    outs = engine.run_direct(g, dk, engine="pallas", sources=[0, 3, 5],
+                             fallback=True)
+    assert len(outs) == 3
+    for ref, out in zip(refs, outs):
+        np.testing.assert_array_equal(np.asarray(ref.value),
+                                      np.asarray(out.value))
+        assert out.stats.engine_used == "adaptive"
+        assert out.stats.fallbacks[0][:2] == ("pallas", "adaptive")

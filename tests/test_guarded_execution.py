@@ -1,0 +1,214 @@
+"""Guarded execution layer (DESIGN.md §12): input validation, termination
+preconditions, structured convergence outcomes, divergence sentinels, and
+the engine fallback chain."""
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, guard, iterate
+from repro.core import usecases as U
+from repro.core.fusion import Prim
+from repro.core.synthesis import DirectKernels
+from repro.graph import structure
+from repro.graph.structure import from_edges, uniform_graph
+
+
+# ---------------------------------------------------------------------------
+# Graph validation (structure.validate_graph / from_edges)
+# ---------------------------------------------------------------------------
+
+def test_from_edges_rejects_out_of_range_indices():
+    with pytest.raises(guard.GraphValidationError, match="out of range"):
+        from_edges(4, [0, 1, 9], [1, 2, 3])
+    with pytest.raises(guard.GraphValidationError, match="out of range"):
+        from_edges(4, [0, 1, 2], [1, -1, 3])
+
+
+def test_from_edges_rejects_non_finite_weights():
+    with pytest.raises(guard.GraphValidationError, match="non-finite"):
+        from_edges(3, [0, 1], [1, 2], weight=[1.0, np.nan])
+    with pytest.raises(guard.GraphValidationError, match="non-finite"):
+        from_edges(3, [0, 1], [1, 2], capacity=[np.inf, 1.0])
+
+
+def test_from_edges_rejects_float_index_arrays():
+    with pytest.raises(guard.GraphValidationError, match="integer"):
+        from_edges(3, np.array([0.5, 1.0]), np.array([1, 2]))
+
+
+def test_from_edges_length_mismatch_and_empty():
+    with pytest.raises(guard.GraphValidationError, match="length"):
+        from_edges(3, [0, 1], [1])
+    g = from_edges(4, [], [])                 # zero-edge graph is LEGAL
+    assert g.num_edges == 0 and g.n == 4
+
+
+def test_self_loop_and_duplicate_policies():
+    src, dst = [0, 1, 1], [0, 2, 2]
+    assert from_edges(3, src, dst).num_edges == 3          # allow (default)
+    with pytest.raises(guard.GraphValidationError, match="self-loop"):
+        from_edges(3, src, dst, self_loops="error")
+    g = from_edges(3, src, dst, self_loops="drop")
+    assert g.num_edges == 2
+    with pytest.raises(guard.GraphValidationError, match="duplicate"):
+        from_edges(3, src, dst, duplicates="error")
+    with pytest.raises(ValueError, match="self_loops"):
+        from_edges(3, src, dst, self_loops="maybe")
+
+
+def test_validate_graph_check_and_cache():
+    g = from_edges(4, [0, 1, 2], [1, 2, 0], weight=[1.0, 2.0, -3.0])
+    chk = structure.validate_graph(g)
+    assert chk.n == 4 and chk.num_edges == 3
+    assert chk.w_min == -3.0 and chk.w_max == 2.0
+    assert structure.validate_graph(g) is chk     # identity-keyed cache hit
+
+
+def test_source_out_of_range_rejected():
+    g = uniform_graph(9, 18, seed=3)
+    dk = U.handwritten_bfs_depth(0)
+    with pytest.raises(guard.GraphValidationError, match="out of range"):
+        engine.run_direct(g, dk, engine="pull", source=9)
+    with pytest.raises(guard.GraphValidationError, match="out of range"):
+        engine.run_direct(g, dk, engine="pallas", sources=[0, 99])
+
+
+# ---------------------------------------------------------------------------
+# Termination preconditions (strengthened C10 vs actual edge ranges)
+# ---------------------------------------------------------------------------
+
+def _neg_weight_graph():
+    return from_edges(4, [0, 1, 2, 3], [1, 2, 3, 0],
+                      weight=[1.0, -2.0, 1.0, 1.0])
+
+
+@pytest.mark.parametrize("eng", ["pull", "adaptive", "pallas"])
+def test_min_plus_on_negative_weights_rejected(eng):
+    dk = U.handwritten_sssp(0)
+    with pytest.raises(guard.TerminationPreconditionError) as ei:
+        engine.run_direct(_neg_weight_graph(), dk, engine=eng)
+    assert ei.value.condition == "C10"
+    assert ei.value.component == 0
+
+
+def test_validate_false_skips_precondition():
+    dk = U.handwritten_sssp(0)
+    r = engine.run_direct(_neg_weight_graph(), dk, engine="pull",
+                          validate=False, on_nonconverge="ignore")
+    assert r.stats.iterations > 0
+
+
+def test_in_contract_graph_not_probed():
+    g = uniform_graph(9, 18, seed=3, weighted=True)   # w >= 0 generator
+    dk = U.handwritten_sssp(0)
+    r = engine.run_direct(g, dk, engine="pull")
+    assert r.stats.iterations > 0
+
+
+def test_bfs_unaffected_by_negative_weights():
+    """BFS ignores w (P = n + 1), so C10 holds even out of contract."""
+    dk = U.handwritten_bfs_depth(0)
+    r = engine.run_direct(_neg_weight_graph(), dk, engine="pull")
+    assert int(np.asarray(r.value)[3]) == 3
+
+
+# ---------------------------------------------------------------------------
+# Structured convergence outcomes
+# ---------------------------------------------------------------------------
+
+def test_iteration_result_converged_fields():
+    g = uniform_graph(12, 30, seed=7)
+    dk = U.handwritten_bfs_depth(0)
+    comp = iterate.CompRuntime(idx=0, op=dk.rop,
+                               dtype=iterate.DTYPES[dk.dtype],
+                               p_fn=dk.p_fn, init_fn=dk.init_fn,
+                               source=dk.source)
+    res = iterate.iterate_graph(g, [comp], [Prim(dk.rop, 0)])
+    assert res.converged is True and res.diverged is False
+    assert res.active_count == 0
+    res1 = iterate.iterate_graph(g, [comp], [Prim(dk.rop, 0)], max_iter=1)
+    assert res1.converged is False and res1.active_count > 0
+
+
+@pytest.mark.parametrize("eng", ["pull", "dense", "pallas"])
+def test_nonconvergence_raises_with_diagnostics(eng):
+    g = uniform_graph(12, 30, seed=7)
+    dk = dataclasses.replace(U.handwritten_bfs_depth(0), max_iter=1)
+    with pytest.raises(guard.NonConvergenceError) as ei:
+        engine.run_direct(g, dk, engine=eng)
+    assert ei.value.iterations == 1 and ei.value.max_iter == 1
+    assert ei.value.active_count > 0
+
+
+def test_nonconvergence_warn_and_ignore():
+    g = uniform_graph(12, 30, seed=7)
+    dk = dataclasses.replace(U.handwritten_bfs_depth(0), max_iter=1)
+    r = engine.run_direct(g, dk, engine="pull", on_nonconverge="ignore")
+    assert r.stats.iterations == 1
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        engine.run_direct(g, dk, engine="pull", on_nonconverge="warn")
+    assert any(issubclass(x.category, RuntimeWarning) for x in w)
+    with pytest.raises(ValueError, match="on_nonconverge"):
+        engine.run_direct(g, dk, engine="pull", on_nonconverge="explode")
+
+
+def _doubling_kernels(max_iter=300):
+    """A non-idempotent kernel whose fixpoint blows up: new[v] = 4 · Σ n —
+    values grow geometrically until float32 overflows to inf."""
+    return DirectKernels(
+        name="blowup", rop="sum", dtype="float",
+        p_fn=lambda env: env["n"] * 4.0,
+        init_fn=lambda v, s: jnp.where(v == s, 1.0, 0.0),
+        source=0, max_iter=max_iter)
+
+
+@pytest.mark.parametrize("eng", ["pull", "pallas"])
+def test_divergence_sentinel_fires(eng):
+    g = from_edges(3, [0, 1, 2], [1, 2, 0], weight=[1.0, 1.0, 1.0])
+    with pytest.raises(guard.DivergenceError):
+        engine.run_direct(g, dk=_doubling_kernels(), engine=eng)
+
+
+def test_divergence_sentinel_off_returns_silent_state():
+    g = from_edges(3, [0, 1, 2], [1, 2, 0], weight=[1.0, 1.0, 1.0])
+    r = engine.run_direct(g, _doubling_kernels(), engine="pallas",
+                          divergence_sentinel=False,
+                          on_nonconverge="ignore")
+    assert np.isinf(np.asarray(r.value)).any()    # the silent wrong answer
+
+
+def test_batched_outcomes_name_offending_sources():
+    g = uniform_graph(12, 30, seed=7)
+    dk = dataclasses.replace(U.handwritten_bfs_depth(0), max_iter=1)
+    with pytest.raises(guard.NonConvergenceError, match="sources"):
+        engine.run_direct(g, dk, engine="pallas", sources=[0, 3])
+    outs = engine.run_direct(g, dk, engine="pallas", sources=[0, 3],
+                             on_nonconverge="ignore")
+    assert len(outs) == 2
+
+
+# ---------------------------------------------------------------------------
+# Per-shard replication diagnostics (satellite: distributed iteration-count
+# divergence error reports per-shard counts and offending shard ids)
+# ---------------------------------------------------------------------------
+
+def test_check_shard_replication_names_offenders():
+    iterate.check_shard_replication(np.array([5, 5, 5]), "iteration count",
+                                    "distributed")          # no raise
+    with pytest.raises(RuntimeError) as ei:
+        iterate.check_shard_replication(np.array([5, 5, 7, 5, 9]),
+                                        "iteration count", "distributed")
+    msg = str(ei.value)
+    assert "[5, 5, 7, 5, 9]" in msg          # per-shard counts
+    assert "offending shard ids [2, 4]" in msg
+    assert "majority value 5" in msg
+
+
+def test_check_shard_replication_two_way_tie():
+    with pytest.raises(RuntimeError, match="offending shard ids"):
+        iterate.check_shard_replication(np.array([5, 7]), "iteration count",
+                                        "pallas_sharded")

@@ -163,6 +163,115 @@ def test_ft_restore_after_persistent_failure(tmp_ckpt):
     assert ft2.stats.restores == 1
 
 
+def test_ft_restore_budget_is_per_incident(tmp_ckpt):
+    """Regression: the abort decision must use the per-incident restore
+    count, not lifetime ``stats.restores`` — a long run that survives many
+    separate incidents (each healed by one restore) must never abort."""
+    stream = TokenStream(vocab=17, batch=2, seq=4, seed=1)
+
+    def good(state, batch):
+        return {"w": state["w"] + 1.0}, {}
+
+    ft = _driver(tmp_ckpt, good, stream)
+    state = {"w": jnp.zeros(())}
+    state, step, _ = ft.train(state, 4, stream.next_batch)   # ckpt at 4
+
+    crash = {"on": False}
+
+    def flaky(st, batch):
+        if crash["on"]:
+            raise RuntimeError("injected node failure")
+        return {"w": st["w"] + 1.0}, {}
+
+    ft2 = _driver(tmp_ckpt, flaky, stream)
+    orig_restore = ft2.restore
+
+    def restore_and_heal(like):
+        crash["on"] = False
+        return orig_restore(like)
+
+    ft2.restore = restore_and_heal
+    # three independent incidents; each exhausts the retry budget and needs
+    # one restore.  Lifetime restores (3) exceeds max_retries (2) — the old
+    # lifetime-budget code aborted on the second incident.
+    for _ in range(3):
+        crash["on"] = True
+        out, _ = ft2.run_step({"w": jnp.full((), 99.0)}, stream.next_batch(),
+                              state_like={"w": jnp.zeros(())})
+        assert float(out["w"]) == 5.0      # restored 4.0 + one good step
+    assert ft2.stats.restores == 3
+
+
+def test_ft_no_fractional_backoff_after_restore(tmp_ckpt, monkeypatch):
+    """Regression: after a restore resets the attempt counter the driver
+    retries immediately; it must never sleep ``backoff_s * 2**(-1)``."""
+    import repro.runtime.ft as ft_mod
+    sleeps = []
+    monkeypatch.setattr(ft_mod.time, "sleep", sleeps.append)
+
+    stream = TokenStream(vocab=17, batch=2, seq=4, seed=1)
+
+    def good(state, batch):
+        return {"w": state["w"] + 1.0}, {}
+
+    ft = _driver(tmp_ckpt, good, stream)
+    state, step, _ = ft.train({"w": jnp.zeros(())}, 4, stream.next_batch)
+
+    crash = {"on": True}
+
+    def flaky(st, batch):
+        if crash["on"]:
+            raise RuntimeError("persistent node failure")
+        return {"w": st["w"] + 1.0}, {}
+
+    ft2 = _driver(tmp_ckpt, flaky, stream)
+    orig_restore = ft2.restore
+
+    def restore_and_heal(like):
+        crash["on"] = False
+        return orig_restore(like)
+
+    ft2.restore = restore_and_heal
+    sleeps.clear()
+    ft2.run_step({"w": jnp.zeros(())}, stream.next_batch(),
+                 state_like={"w": jnp.zeros(())})
+    b = ft2.cfg.backoff_s
+    assert sleeps == [b, 2 * b]            # attempts 1..2 only, no 0.5·b
+    assert all(s >= b for s in sleeps)
+
+
+def test_bounded_retry():
+    from repro.runtime.ft import bounded_retry
+    fails = {"n": 2}
+
+    def fn():
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise RuntimeError("transient")
+        return 42
+
+    out, retries = bounded_retry(fn, max_retries=3, backoff_s=0.0)
+    assert (out, retries) == (42, 2)
+
+    calls = {"n": 0}
+
+    def always(exc_type):
+        def f():
+            calls["n"] += 1
+            raise exc_type("boom")
+        return f
+
+    with pytest.raises(RuntimeError):      # budget exhausted → re-raise
+        bounded_retry(always(RuntimeError), max_retries=2, backoff_s=0.0)
+    assert calls["n"] == 3                 # initial call + 2 retries
+
+    calls["n"] = 0
+    with pytest.raises(ValueError):        # non-retryable → no retry at all
+        bounded_retry(always(ValueError), max_retries=2, backoff_s=0.0,
+                      retryable=lambda e: not isinstance(e, ValueError))
+    assert calls["n"] == 1
+
+
 def test_gradient_compression_error_feedback():
     from repro.optim.compress import (compress_grads, decompress_grads,
                                       init_compress_state)
