@@ -50,13 +50,25 @@ guards are free at the fixpoint level, so the gated quantities are
 deterministic: bitwise values, identical iterations/edge work, and traced
 launches guarded ≤ guards-off.
 
+``--engines pallas`` also runs the serving section (DESIGN.md §13): the
+continuous-batching analytics service (``repro.launch.service``) driven by
+a seeded open-loop arrival trace — mixed BFS/SSSP sweep queries through
+the fixed-slot chunked batch lanes plus scalar radius/drr queries paired
+via ``fusion.fuse_many``.  The scheduler runs on a virtual clock, so the
+serving metrics (queries-per-launch, batch occupancy, launch/fused-round
+counts, executor-cache entries, virtual p50/p99 latency and queries/sec)
+are a deterministic function of the seed; every served answer is asserted
+bitwise-equal to a solo ``run_program`` in-bench.  Wall-clock latency is
+reported, never gated.
+
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
 run regresses on traced launches, the fused/unfused edge-work ratio, the
 push-vs-pull work advantage, the batched executor/retrace counts, the
-sharded engine's iteration parity / launch / combine counts, or the guard
-section's launch parity — the one comparison path shared by the CI
-bench-smoke gate and local runs.
+sharded engine's iteration parity / launch / combine counts, the guard
+section's launch parity, or the serving section's queries-per-launch /
+launch / fused-round / cache-entry counts — the one comparison path shared
+by the CI bench-smoke gate and local runs.
 """
 from __future__ import annotations
 
@@ -88,8 +100,15 @@ SHARDED = ["BFS", "SSSP", "PR"]         # shard_map composition (PR = direct
                                         # PageRank, the epilogue pull− round)
 GUARDED = ["BFS", "SSSP", "PR"]         # guarded vs guards-off execution
                                         # (validation + divergence sentinel)
+SERVING = ["MIX"]                       # open-loop serving traces (the MIX
+                                        # trace: BFS/SSSP sweeps + fused
+                                        # radius/drr scalars)
 _BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
 _BATCH_B = 8                            # sources per batched sweep
+_SERVE_B = 6                            # continuous-batch slots per lane
+_SERVE_CHUNK = 4                        # fixpoint iterations per launch
+_SERVE_REQUESTS = 16                    # open-loop trace length
+_SERVE_SEED = 0
 _SHARD_K = 2                            # shards of the sharded section's mesh
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
@@ -364,10 +383,71 @@ def bench_guard(g, gname: str, weighted: bool, name: str) -> dict:
     }
 
 
+def bench_serving(g, gname: str, weighted: bool, name: str) -> dict:
+    """Serving section (DESIGN.md §13): the continuous-batching analytics
+    service under a seeded open-loop arrival trace.  The scheduler's virtual
+    clock makes every serving metric deterministic — queries-per-launch
+    (the continuous-batching win: answers per compiled launch), batch
+    occupancy, launch and fused-round counts, executor-cache entries, and
+    the virtual p50/p99 latencies — and every served answer is asserted
+    bitwise-equal to a solo ``run_program`` here, in-bench.  Only wall time
+    is machine-dependent, and only wall time goes ungated."""
+    from repro.kernels import edge_reduce as er
+    from repro.kernels import ops as kops
+    from repro.launch import service as S
+
+    engine.clear_program_caches()
+    er.reset_sweep_stats()
+    cfg = S.ServiceConfig(engine="pallas", max_batch=_SERVE_B,
+                          chunk_iters=_SERVE_CHUNK)
+    svc = S.AnalyticsService(cfg)
+    svc.add_graph(gname, g)
+    svc.register("BFS", U.bfs)
+    svc.register("SSSP", U.sssp)
+    # arrival rate ~16× the per-chunk virtual service time: the whole trace
+    # lands within the first launches, so batches fill and scalar requests
+    # queue up to be paired (the bench measures batching under pressure,
+    # not an idle service)
+    rate = 16.0 / (cfg.launch_overhead_s + cfg.chunk_iters * cfg.iter_cost_s)
+    arrivals = S.open_loop_arrivals(
+        _SERVE_REQUESTS, rate=rate, seed=_SERVE_SEED,
+        make_request=S.standard_mix(gname, g.n))
+    m = svc.run_open_loop(arrivals)
+    # capture the gated execution-layer counters BEFORE verification runs
+    # its own solo programs
+    launches = er.SWEEP_STATS["launches"]
+    exec_entries = kops.executor_cache_size()
+    assert m["completed"] == _SERVE_REQUESTS, \
+        f"serving trace lost requests: {m['completed']}/{_SERVE_REQUESTS}"
+    checked = S.verify_sequential(svc)
+    assert checked == _SERVE_REQUESTS, \
+        f"serving answers not bitwise-equal to solo runs ({checked} checked)"
+    assert m["queries_per_launch"] > 1.0, \
+        f"continuous batching did not batch: queries_per_launch = " \
+        f"{m['queries_per_launch']}"
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "requests": _SERVE_REQUESTS,
+        "completed": m["completed"],
+        "batch_launches": m["batch_launches"],
+        "queries_per_launch": m["queries_per_launch"],
+        "occupancy": m["occupancy"],
+        "scalar_rounds": m["scalar_rounds"],
+        "scalar_fused": m["scalar_fused"],
+        "solo_runs": m["solo_runs"],
+        "total_iterations": m["total_iterations"],
+        "launches_traced": launches,
+        "exec_entries": exec_entries,
+        "v_p50_ms": m["v_p50_ms"], "v_p99_ms": m["v_p99_ms"],
+        "v_qps": m["v_qps"],
+        "t_wall_ms": m["wall_s"] * 1e3,
+    }
+
+
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         engines=("pull", "push"), json_out=None, direction_usecases=None,
         batched_usecases=None, resolution_usecases=None,
-        sharded_usecases=None, guard_usecases=None):
+        sharded_usecases=None, guard_usecases=None, serving_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
@@ -375,6 +455,7 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     resolution_rows = []
     sharded_rows = []
     guard_rows = []
+    serving_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
@@ -390,6 +471,10 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     if guard_usecases and "pallas" not in engines:
         raise ValueError("guard_usecases bench the pallas engine's guarded "
                          "execution; add 'pallas' to engines")
+    if serving_usecases and "pallas" not in engines:
+        raise ValueError("serving_usecases bench the continuous-batching "
+                         "service on the pallas engine; add 'pallas' to "
+                         "engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
     if batched_usecases is None:
@@ -400,6 +485,8 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         sharded_usecases = SHARDED if "pallas" in engines else []
     if guard_usecases is None:
         guard_usecases = GUARDED if "pallas" in engines else []
+    if serving_usecases is None:
+        serving_usecases = SERVING if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -461,6 +548,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                         sharded_rows.append(row)
                 for name in guard_usecases:
                     guard_rows.append(bench_guard(g, gname, weighted, name))
+                for name in serving_usecases:
+                    serving_rows.append(
+                        bench_serving(g, gname, weighted, name))
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
@@ -516,15 +606,29 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
               for r in guard_rows],
              ["graph", "weights", "usecase", "iters", "edge_work",
               "traced_guarded", "traced_off", "t_guarded_ms", "t_off_ms"])
+    if serving_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["requests"], r["batch_launches"],
+               round(r["queries_per_launch"], 2), round(r["occupancy"], 2),
+               r["scalar_rounds"], r["scalar_fused"],
+               r["launches_traced"], r["exec_entries"],
+               round(r["v_p50_ms"], 2), round(r["v_p99_ms"], 2),
+               r["v_qps"], round(r["t_wall_ms"], 1)]
+              for r in serving_rows],
+             ["graph", "weights", "trace", "requests", "batch_launches",
+              "q_per_launch", "occupancy", "scalar_rounds", "scalar_fused",
+              "traced", "exec_entries", "v_p50_ms", "v_p99_ms", "v_qps",
+              "t_wall_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
            "resolution_rows": resolution_rows,
            "batched_rows": batched_rows,
            "sharded_rows": sharded_rows,
            "guard_rows": guard_rows,
+           "serving_rows": serving_rows,
            "table": out}
     if json_rows or direction_rows or batched_rows or resolution_rows \
-            or sharded_rows or guard_rows:
+            or sharded_rows or guard_rows or serving_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -719,6 +823,38 @@ def compare_baseline(current: dict, baseline: dict,
                 f"{key}: guarded traced launches "
                 f"{r['launches_traced_guarded']} > baseline "
                 f"{b['launches_traced_guarded']}")
+    base_serving = {_row_key(r): r for r in baseline.get("serving_rows", [])}
+    for r in current.get("serving_rows", []):
+        key = _row_key(r)
+        # Standing property (DESIGN.md §13): continuous batching must
+        # actually batch — more than one answer per compiled launch on the
+        # seeded trace (bench_serving additionally asserts every answer
+        # bitwise-equal to its solo run, in-bench).
+        if r["queries_per_launch"] <= 1.0:
+            errors.append(
+                f"{key}: serving queries_per_launch "
+                f"{r['queries_per_launch']:.3f} <= 1 — continuous batching "
+                "disengaged")
+        b = base_serving.get(key)
+        if b is None:
+            continue
+        # every gated quantity here is a deterministic function of the
+        # seeded trace and the virtual clock — wall time is never compared
+        if r["queries_per_launch"] < b["queries_per_launch"] * (1 - rtol):
+            errors.append(
+                f"{key}: queries_per_launch {r['queries_per_launch']:.3f} < "
+                f"baseline {b['queries_per_launch']:.3f} (-{rtol:.0%})")
+        for field in ("batch_launches", "scalar_rounds", "launches_traced",
+                      "exec_entries"):
+            if r[field] > b[field]:
+                errors.append(
+                    f"{key}: serving {field} {r[field]} > baseline "
+                    f"{b[field]}")
+        if r["scalar_fused"] < b["scalar_fused"]:
+            errors.append(
+                f"{key}: serving scalar_fused {r['scalar_fused']} < "
+                f"baseline {b['scalar_fused']} — fuse_many pairing "
+                "stopped absorbing scalar requests")
     return errors
 
 
@@ -747,6 +883,10 @@ if __name__ == "__main__":
     ap.add_argument("--guard", default=None, metavar="NAMES",
                     help="comma list of guard-overhead workloads "
                          f"(default {','.join(GUARDED)} when pallas is "
+                         "benchmarked; pass '' to skip)")
+    ap.add_argument("--serving", default=None, metavar="NAMES",
+                    help="comma list of open-loop serving traces "
+                         f"(default {','.join(SERVING)} when pallas is "
                          "benchmarked; pass '' to skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
@@ -778,15 +918,19 @@ if __name__ == "__main__":
         tuple(u for u in args.sharded.split(",") if u)
     guard = None if args.guard is None else \
         tuple(u for u in args.guard.split(",") if u)
+    serving = None if args.serving is None else \
+        tuple(u for u in args.serving.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
                  engines=engines, json_out=json_out,
                  batched_usecases=batched, resolution_usecases=resolution,
-                 sharded_usecases=sharded, guard_usecases=guard)
+                 sharded_usecases=sharded, guard_usecases=guard,
+                 serving_usecases=serving)
     if baseline is not None:
         if not (result["rows"] or result["direction_rows"]
                 or result["batched_rows"] or result["resolution_rows"]
-                or result["sharded_rows"] or result["guard_rows"]):
+                or result["sharded_rows"] or result["guard_rows"]
+                or result["serving_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -802,4 +946,5 @@ if __name__ == "__main__":
               f"{len(baseline.get('resolution_rows', []))} resolution rows, "
               f"{len(baseline.get('batched_rows', []))} batched rows, "
               f"{len(baseline.get('sharded_rows', []))} sharded rows, "
-              f"{len(baseline.get('guard_rows', []))} guard rows)")
+              f"{len(baseline.get('guard_rows', []))} guard rows, "
+              f"{len(baseline.get('serving_rows', []))} serving rows)")

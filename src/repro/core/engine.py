@@ -69,6 +69,17 @@ def clear_program_caches():
         pass
 
 
+def clear_graph_caches(g) -> int:
+    """Selective per-graph eviction (DESIGN.md §13): drop ONE graph's
+    derived layouts / degrees / validation summary from the structure
+    caches, leaving other resident graphs and the graph-shape-generic
+    compiled executors alone.  The serving layer's bounded graph LRU calls
+    this when a graph loses residency; ``program_cache_stats`` verifies the
+    bound.  Returns the number of cache entries dropped."""
+    from repro.graph import structure
+    return structure.clear_graph_caches(g)
+
+
 def program_cache_stats() -> dict:
     from repro.core import synthesis
     from repro.graph import structure
@@ -110,6 +121,11 @@ class ExecStats:
     engine_used: str = ""           # engine that actually produced the
                                     # result (differs from the request only
                                     # after a fallback)
+    converged: bool = True          # False when a round exhausted max_iter
+                                    # with live vertices (only observable
+                                    # under on_nonconverge="ignore"/"warn" —
+                                    # the continuous-batching scheduler's
+                                    # retire-or-carry signal)
     fallbacks: tuple = ()           # (from_engine, to_engine, error) per
                                     # degradation step (guard.FallbackEvent)
     exec_retries: int = 0           # same-engine retries spent before each
@@ -371,6 +387,10 @@ def _finish_round(g, round_: FusedRound, env: dict):
             cond = jnp.asarray(env[cond_name])
             mask = mask & jnp.broadcast_to(cond.astype(bool), (g.n,))
         env[name] = _vertex_reduce(op, vals, mask)
+    if getattr(round_, "multi_out", None):
+        # fuse_many round: every paired request's own answer from the ONE
+        # shared execution — {key: scalar}, no re-execution.
+        return {key: eval_expr(e, env, jnp) for key, e in round_.multi_out}
     return eval_expr(round_.out, env, jnp)
 
 
@@ -379,6 +399,9 @@ def _accumulate(stats: ExecStats, res, synth_ms: float) -> None:
     stats.iterations += res.iterations
     stats.edge_work += res.edge_work
     stats.synth_ms += synth_ms
+    conv = getattr(res, "converged", True)
+    if isinstance(conv, (bool, np.bool_)):      # tracer-valued on vmapped runs
+        stats.converged = stats.converged and bool(conv)
     pi = getattr(res, "push_iters", 0)
     li = getattr(res, "pull_iters", 0)
     rw = getattr(res, "resolve_work", 0.0)
@@ -485,7 +508,8 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                       switch_k="auto",
                       validate: bool = True,
                       on_nonconverge: str = "raise",
-                      fallback: bool = False, ft_config=None) -> list:
+                      fallback: bool = False, ft_config=None,
+                      init_state=None, return_state=False):
     """Serve B concurrent single-source queries of one program in ONE
     compiled launch per round (DESIGN.md §9).
 
@@ -506,10 +530,35 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
     every batch source), per-round termination preconditions, per-QUERY
     convergence outcomes, and — with ``fallback=True`` — degradation of a
     recoverably-failing batched pallas launch to the sequential reference
-    loop (recorded in each query's stats)."""
+    loop (recorded in each query's stats).
+
+    Continuous-batching hooks (DESIGN.md §13; pallas engine, single-round
+    programs only): ``init_state`` warm-starts every batch slot from one
+    per-component ``[B, n]`` array (an earlier chunk's carried state, with
+    fresh ``batch_init_state`` rows spliced in where new queries joined);
+    ``return_state=True`` returns ``(results, state)`` where ``state`` is
+    the round's final per-component ``[B, n]`` state — feed it back as the
+    next chunk's ``init_state``.  Bound ``max_iter`` to the scheduler's
+    chunk quantum and read each query's ``stats.converged`` (under
+    ``on_nonconverge="ignore"``) to decide retire-vs-carry per slot."""
     if on_nonconverge not in ("raise", "warn", "ignore"):
         raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
                          f"'ignore', got {on_nonconverge!r}")
+    if init_state is not None or return_state:
+        if engine != "pallas":
+            raise ValueError("init_state/return_state are pallas-engine "
+                             f"continuous-batching hooks; got {engine!r}")
+        if fallback:
+            raise ValueError("init_state/return_state cannot degrade to the "
+                             "sequential fallback loop (a warm-started batch "
+                             "has no per-query equivalent there); run with "
+                             "fallback=False")
+        iter_rounds = [r for _, r in prog.rounds if r.leaves]
+        if len(prog.rounds) != 1 or len(iter_rounds) != 1:
+            raise ValueError(
+                "init_state/return_state need a single-round program (one "
+                f"iteration round, no LetRound chain); got "
+                f"{len(prog.rounds)} rounds")
     src_arr = np.asarray(sources)
     if src_arr.ndim != 1:
         raise ValueError(
@@ -532,6 +581,7 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
     stats = [ExecStats(engine_used="pallas") for _ in range(B)]
     named: list = [{} for _ in range(B)]
     finals: list = [None] * B
+    state_out = None
     for bind_name, round_ in prog.rounds:
         envs = [dict(nm) for nm in named]
         if round_.leaves:
@@ -541,7 +591,8 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
             try:
                 res = kops.iterate_pallas_batch(
                     g, comps, plans, src_list, max_iter=max_iter, tol=tol,
-                    direction=_pallas_direction(model), **pallas_kw)
+                    direction=_pallas_direction(model),
+                    init_state=init_state, **pallas_kw)
             except Exception as exc:
                 if not fallback or not guard.recoverable(exc):
                     raise
@@ -564,6 +615,7 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
             res_ws = np.asarray(res.resolve_work)
+            convs = np.asarray(res.converged)
             for b in range(B):
                 st = stats[b]
                 st.rounds += 1
@@ -573,16 +625,60 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                 st.push_iters += int(pushes[b])
                 st.pull_iters += int(iters[b]) - int(pushes[b])
                 st.resolve_work += float(res_ws[b])
+                st.converged = st.converged and bool(convs[b])
                 for leaf in round_.leaves:
                     envs[b][leaf.name] = res.state[plan_output(leaf.plan)][b]
+            if return_state:
+                state_out = res.state
         for b in range(B):
             out = _finish_round(g, round_, envs[b])
             if bind_name is not None:
                 prefix = "$vec:" if round_.out_kind == "vertex" else "$scalar:"
                 named[b][prefix + bind_name] = out
             finals[b] = out
-    return [ExecResult(value=finals[b], named=named[b], stats=stats[b])
-            for b in range(B)]
+    results = [ExecResult(value=finals[b], named=named[b], stats=stats[b])
+               for b in range(B)]
+    if return_state:
+        return results, state_out
+    return results
+
+
+def batchable_program(prog: FusedProgram) -> bool:
+    """True when a fused program fits the continuous-batching contract
+    (DESIGN.md §13): exactly one round, with an iteration (leaves), every
+    plan idempotent (monotone (+) rounds — the unique-fixpoint argument that
+    makes chunked warm-resume bitwise-safe; (−) recompute rounds depend on
+    the iteration count and must run monolithically), and every component
+    sourced (so a per-slot source re-sources the whole round).  Programs
+    that fail this run solo or through the scalar fuse_many lane."""
+    if len(prog.rounds) != 1:
+        return False
+    _, round_ = prog.rounds[0]
+    if not round_.leaves:
+        return False
+    if not all(iterate.plan_idempotent(leaf.plan) for leaf in round_.leaves):
+        return False
+    return all(c.source is not None for c in round_.components)
+
+
+def batch_init_state(g, prog: FusedProgram, sources: Sequence) -> tuple:
+    """Fresh per-component ``[B, n]`` initial state blocks for a batch of
+    query sources of a single-round program — the rows a continuous-batching
+    scheduler splices into its carried state when new queries take over
+    retired slots (``run_program_batch(init_state=...)``).  Row b is exactly
+    the C1/C2 initial state of a solo ``source=sources[b]`` run."""
+    iter_rounds = [r for _, r in prog.rounds if r.leaves]
+    if len(iter_rounds) != 1:
+        raise ValueError("batch_init_state needs a single-round program; "
+                         f"got {len(iter_rounds)} iteration rounds")
+    round_ = iter_rounds[0]
+    synth, _ = _synthesize_timed(round_)
+    comps, _plans = _round_runtime(round_, synth)
+    rows = [iterate._init_state(comps, g.n,
+                                _source_overrides(round_, int(s)))
+            for s in sources]
+    return tuple(jnp.stack([r[i] for r in rows])
+                 for i in range(len(comps)))
 
 
 # ---------------------------------------------------------------------------

@@ -95,6 +95,11 @@ class FusedRound:
     vreduces: list                 # [(name, op, map_name, cond_map_name|None)]
     out_kind: str                  # "vertex" | "scalar"
     out: Expr                      # over map names (vertex) or vreduce names
+    multi_out: Optional[list] = None
+                                   # [(key, Expr)] set by fuse_many: every
+                                   # paired request's OWN output expression —
+                                   # the engine returns {key: value} instead
+                                   # of evaluating ``out`` alone
 
 
 @dataclasses.dataclass
@@ -276,6 +281,45 @@ def fuse(term, stats: Optional[FusionStats] = None) -> FusedProgram:
     walk(term, None)
     stats.wall_ms = (time.perf_counter() - t0) * 1e3
     return FusedProgram(rounds=rounds, stats=stats)
+
+
+def fuse_many(named_terms, stats: Optional[FusionStats] = None) -> FusedProgram:
+    """Fuse MANY scalar requests into ONE round with per-request answers.
+
+    ``named_terms`` is a dict (or [(key, term)] sequence) of single-round
+    scalar (r-term) specifications — different users' RADIUS/DRR/ECC-style
+    queries over one graph.  All of them lower into a SINGLE shared round
+    builder, so the paper's pairing rules apply across requests exactly as
+    they do within one: shared path reductions dedup through
+    common-operation elimination, distinct ones pair via FMPAIR, and the
+    vertex reductions pair via FRPAIR.  Unlike the ``r1 + 0*r2`` pairing
+    trick (the examples/analytics_service.py sketch), the fused round keeps
+    EVERY request's own output expression in ``multi_out``, so one
+    execution of the program yields ``{key: value}`` — no per-request
+    re-execution (the N+1 the sketch suffered).
+
+    Multi-round (LetRound) and vertex-valued specifications don't pair —
+    they raise ``TypeError`` and should run solo via ``fuse``."""
+    t0 = time.perf_counter()
+    stats = stats or FusionStats()
+    items = list(named_terms.items()) if isinstance(named_terms, dict) \
+        else list(named_terms)
+    if not items:
+        raise ValueError("fuse_many needs at least one request")
+    b = _RoundBuilder(stats)
+    outs = []
+    for key, t in items:
+        if isinstance(t, L.LetRound) or not _is_r_term(t):
+            raise TypeError(
+                f"fuse_many pairs single-round scalar requests; request "
+                f"{key!r} is a {type(t).__name__} (vertex-valued or "
+                "multi-round specifications run solo via fuse)")
+        outs.append((key, _lower_r(b, t)))
+    round_ = FusedRound(components=b.components, leaves=b.leaves,
+                        maps=b.maps, vreduces=b.vreduces, out_kind="scalar",
+                        out=outs[0][1], multi_out=outs)
+    stats.wall_ms = (time.perf_counter() - t0) * 1e3
+    return FusedProgram(rounds=[(None, round_)], stats=stats)
 
 
 # ---------------------------------------------------------------------------

@@ -587,6 +587,25 @@ def push_resolution_cached(g: Graph, block_v: int = 8,
     return res
 
 
+def clear_graph_caches(g: Graph) -> int:
+    """Drop every cached derived structure of ONE graph — the selective
+    counterpart of ``engine.clear_program_caches`` used by the serving
+    layer's bounded per-graph cache (DESIGN.md §13): evicting a graph from
+    residency frees its blocked-ELL layouts, sharded layouts, push
+    resolutions, weighted degrees and validation summary without disturbing
+    the other resident graphs (or the graph-shape-generic compiled
+    executors, which carry no per-graph data).  Returns the number of
+    entries dropped."""
+    dropped = 0
+    for cache in (_ELL_CACHE, _SHARDED_ELL_CACHE, _RES_CACHE, _WDEG_CACHE,
+                  _VALID_CACHE):
+        stale = [k for k, (ref, _) in list(cache.items()) if ref() is g]
+        for k in stale:
+            if cache.pop(k, None) is not None:
+                dropped += 1
+    return dropped
+
+
 # ---------------------------------------------------------------------------
 # Synthetic graph generators (seeded, host-side numpy).
 # ---------------------------------------------------------------------------

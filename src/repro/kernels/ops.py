@@ -211,7 +211,7 @@ def _padded_init_state(comps, n, n_pad, srcs):
 def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                            interpret, use, dense_threshold, switch_k,
                            push_resolution, batch=False, sentinel=True,
-                           chunked=False):
+                           chunked=False, warm=False):
     """Trace + jit the whole fixpoint once.  The returned function takes the
     blocked-ELL arrays (one 5-tuple per direction in ``use``, pull first),
     out-degrees (plain + weighted), the dst-sorted resolution arrays (when
@@ -240,6 +240,16 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     residual into the loop carry (elementwise reductions, zero extra
     launches); off, the carry keeps constant placeholders so both variants
     share one signature.
+
+    With ``warm=True`` (batch only) the vmapped fixpoint additionally takes
+    one per-component ``[B, n]`` state block after ``srcs`` —
+    ``run(*arrays, srcs, *state0)`` — and overrides each batch element's
+    initial state rows with its own supplied block (padding rows keep the
+    reduction identity, the frontier resets to all-ones exactly like
+    ``_warm_start_carry``).  This is the continuous-batching join point
+    (DESIGN.md §13): unconverged queries resume from their last chunk's
+    state while fresh joiners ride in with their C1/C2 init rows, all in
+    the same launch.
 
     With ``chunked=True`` the SAME traced body is exposed as a host-steppable
     pair ``(init, step)``: ``init(*arrays, srcs)`` builds the initial carry,
@@ -423,6 +433,10 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
         active_n = jnp.sum(active[:n].astype(jnp.int32))
         return state, k, work, pushes, res_work, div, resid, active_n
 
+    if warm and not batch:
+        raise ValueError("warm start rows are a batched-executor feature; "
+                         "single queries warm-start via init_state= on the "
+                         "chunked path")
     if chunked:
         if batch:
             raise ValueError("chunked execution does not batch")
@@ -439,6 +453,24 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
         # everything but srcs (ELL tuples, degrees, resolution arrays) is
         # shared across the batch
         n_shared = 5 * len(use) + 2 + (4 if sorted_res else 0)
+        if warm:
+            def run_warm(*all_args):
+                arrays = all_args[:n_shared + 1]      # shared + this row's srcs
+                state0 = all_args[n_shared + 1:]      # per-component [n] rows
+                st, active, k, work, pushes, res_work, div, resid = \
+                    _init(arrays)
+                st = tuple(ref.at[:n].set(s.astype(ref.dtype))
+                           for ref, s in zip(st, state0))
+                carry = _fixpoint(
+                    arrays, (st, active, k, work, pushes, res_work, div,
+                             resid), max_iter)
+                state, active, k, work, pushes, res_work, div, resid = carry
+                active_n = jnp.sum(active[:n].astype(jnp.int32))
+                return state, k, work, pushes, res_work, div, resid, active_n
+
+            return jax.jit(jax.vmap(
+                run_warm,
+                in_axes=(None,) * n_shared + (0,) * (1 + len(comps))))
         return jax.jit(jax.vmap(run, in_axes=(None,) * n_shared + (0,)))
     return jax.jit(run)
 
@@ -462,7 +494,7 @@ def _srcs_vector(comps, sources=None):
 def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
                      interpret, use, dense_threshold, switch_k,
                      push_resolution, batch=False, sentinel=True,
-                     chunked=False):
+                     chunked=False, warm=False):
     """Cache lookup / build of the compiled fixpoint, plus the shared
     argument prefix (ELL arrays + degree vectors + dst-sorted resolution
     arrays) it runs on."""
@@ -483,14 +515,15 @@ def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
     key = (g.n, tuple(tuple(_plan_levels(p)) for p in plans),
            _comps_key(comps), max_iter, tol, block_v, block_e, interpret,
            use, dense_threshold, switch_k, push_resolution, batch,
-           sentinel, chunked)
+           sentinel, chunked, warm)
     run = _exec_cache_get(key)
     if run is None:
         run = _build_pallas_executor(comps, plans, g.n, max_iter, tol,
                                      block_v, block_e, interpret, use,
                                      dense_threshold, switch_k,
                                      push_resolution, batch=batch,
-                                     sentinel=sentinel, chunked=chunked)
+                                     sentinel=sentinel, chunked=chunked,
+                                     warm=warm)
         _exec_cache_put(key, run, comps)
     args = []
     for d in use:
@@ -701,7 +734,8 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
                          direction: str = "auto",
                          dense_threshold: float = DENSE_FRONTIER,
                          switch_k="auto",
-                         push_resolution: str = PUSH_RESOLUTION) -> iterate.IterationResult:
+                         push_resolution: str = PUSH_RESOLUTION,
+                         init_state=None) -> iterate.IterationResult:
     """Run B concurrent queries of one fused round in ONE launch (DESIGN.md
     §9): the compiled fixpoint of ``iterate_pallas``, ``jax.vmap``ped over a
     batch of query sources sharing one blocked-ELL layout.
@@ -714,6 +748,14 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     sequential ``iterate_pallas`` calls; the batch reuses the SAME traced
     executor family (one ``_EXEC_CACHE`` entry per direction set, regardless
     of B — jit re-specializes on the batch shape inside the entry).
+
+    ``init_state`` optionally warm-starts every batch element: one
+    per-component ``[B, n]`` array, each row overriding that element's
+    initial state (the frontier resets to all-ones, mirroring the
+    single-query ``iterate_pallas(init_state=...)`` contract).  This is the
+    continuous-batching join hook (DESIGN.md §13): carry the returned state
+    between bounded-``max_iter`` chunk launches, splicing fresh C1/C2 init
+    rows into retired slots as new queries join.
 
     Returns an ``IterationResult`` whose ``state`` entries are [B, n], and
     whose ``iterations`` / ``edge_work`` / ``push_iters`` / ``pull_iters``
@@ -736,10 +778,26 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     switch_k = _normalize_switch_k(
         switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
     push_resolution = _check_resolution(push_resolution)
+    if init_state is not None:
+        init_state = tuple(jnp.asarray(a) for a in init_state)
+        if len(init_state) != len(comps):
+            raise ValueError(f"init_state has {len(init_state)} arrays for "
+                             f"{len(comps)} components")
+        B = int(srcs.shape[0])
+        for cr, a in zip(comps, init_state):
+            if a.shape != (B, n):
+                raise ValueError(
+                    f"init_state for component {cr.idx} has shape "
+                    f"{a.shape}, expected ({B}, {n})")
     run, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
                                  block_e, interpret, use, dense_threshold,
-                                 switch_k, push_resolution, batch=True)
-    state, k, work, pushes, res_work, div, resid, act_n = run(*args, srcs)
+                                 switch_k, push_resolution, batch=True,
+                                 warm=init_state is not None)
+    if init_state is not None:
+        state, k, work, pushes, res_work, div, resid, act_n = \
+            run(*args, srcs, *init_state)
+    else:
+        state, k, work, pushes, res_work, div, resid, act_n = run(*args, srcs)
     res = iterate.IterationResult(
         state=tuple(s[:, :n] for s in state),
         iterations=k,                     # [B] per-query iteration counts

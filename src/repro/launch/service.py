@@ -1,0 +1,511 @@
+"""Continuous-batching analytics service (DESIGN.md §13).
+
+The deployment story the paper's fusion rules exist for: a long-lived
+service holds resident graphs and answers declarative analytics REQUESTS,
+and the runtime — not the caller — decides how each request executes:
+
+* **Continuous batching** (LLM-serving style): same-(graph, kind)
+  single-source queries share a fixed-slot vmapped batch.  The scheduler
+  launches the fused fixpoint in bounded chunks (``chunk_iters`` iterations
+  per launch, ``run_program_batch(init_state=..., return_state=True)``);
+  converged slots retire with their answers while unconverged queries carry
+  their state into the next launch, and queued arrivals join retired slots
+  with fresh C1/C2 init rows (``batch_init_state``).  A short query never
+  waits for a long one sharing its batch, and a late joiner produces the
+  exact bits of a solo run (the idempotent-round unique-fixpoint argument,
+  verified by ``verify_sequential``).
+* **Cross-kind scalar fusion**: queued scalar requests (radius/drr/ecc
+  style r-terms) fuse into ONE round via ``fusion.fuse_many`` — FRPAIR
+  pairs the vertex reductions, common-operation elimination dedups shared
+  eccentricity sweeps — and every request reads its OWN answer from the
+  single execution (no N+1 re-runs).
+* **Solo lane**: everything else (multi-round LetRound chains,
+  vertex-valued one-offs) runs as a plain ``run_program``.
+* **Bounded graph residency**: an LRU over resident graphs; evicting a
+  graph drops exactly its derived layouts via
+  ``engine.clear_graph_caches`` (compiled executors are shape-generic and
+  stay, bounded by their own LRU), so a service under graph churn holds
+  cache memory ∝ ``max_graphs``, verified by ``program_cache_stats``.
+
+Scheduling runs on a **virtual clock**: each launch advances simulated
+time by ``launch_overhead_s + iter_cost_s × (max live-slot iterations)``.
+Arrivals are an OPEN-loop process (timestamps independent of service
+progress — ``open_loop_arrivals``), so queueing pressure is real, yet
+every scheduling decision — batch membership, launch counts, occupancy,
+virtual latencies — is a deterministic function of the seeded trace and
+the graph.  That is what lets CI gate the serving bench on its metrics;
+wall-clock latencies are measured too but only ever reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import engine, fusion
+from repro.core import lang as L
+
+# virtual service-time model: deterministic stand-ins for device time, so
+# the simulated schedule (and every gated metric) reproduces bit-for-bit
+# across machines.  One fixpoint iteration costs ITER_COST_S; every launch
+# pays LAUNCH_OVERHEAD_S dispatch overhead.
+ITER_COST_S = 1e-3
+LAUNCH_OVERHEAD_S = 5e-4
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    engine: str = "pallas"
+    max_batch: int = 8             # continuous-batch slots per (graph, kind)
+    chunk_iters: int = 4           # scheduler quantum: fixpoint iterations
+                                   # per launch (small → short queries retire
+                                   # fast; large → fewer launch overheads)
+    max_scalar_fuse: int = 8       # scalar requests paired per fused round
+    max_graphs: int = 4            # resident-graph LRU bound
+    iter_cost_s: float = ITER_COST_S
+    launch_overhead_s: float = LAUNCH_OVERHEAD_S
+    max_chunks_per_query: int = 1000   # scheduler livelock guard
+
+
+@dataclasses.dataclass
+class Request:
+    """One analytics request.  Either a registered ``kind`` + query
+    ``source`` (continuous-batch candidates: BFS/SSSP/WP-style sweeps) or a
+    raw ``spec`` term (scalar requests pair via fuse_many; anything else
+    runs solo)."""
+    rid: int = -1
+    kind: Optional[str] = None
+    source: Optional[int] = None
+    spec: Optional[object] = None
+    # filled by the service:
+    gname: str = ""
+    lane: str = ""                 # "batch" | "scalar" | "solo"
+    arrival: float = 0.0           # virtual admission time
+    completed: float = 0.0         # virtual completion time
+    wall_latency_s: float = 0.0    # wall time submit→answer (reported only)
+    value: object = None
+    iterations: int = 0
+    chunks: int = 0                # chunk launches this request rode
+    joined_launch: int = -1        # global launch seq of its first chunk
+
+
+class _BatchLane:
+    """Fixed-slot continuous batch for one (graph, kind): per-slot request,
+    per-slot source, and the carried per-component [B, n] fixpoint state."""
+
+    def __init__(self, prog, max_batch):
+        self.prog = prog
+        self.pending: deque = deque()
+        self.slots: list = [None] * max_batch
+        self.sources = np.zeros(max_batch, np.int64)
+        self.state: Optional[list] = None   # [comp][B, n] carried between
+                                            # launches; None ⇒ cold batch
+
+    def live(self):
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def busy(self):
+        return bool(self.pending) or any(r is not None for r in self.slots)
+
+
+class _QueueLane:
+    def __init__(self):
+        self.pending: deque = deque()
+
+    def busy(self):
+        return bool(self.pending)
+
+
+def _fusable_scalar(spec) -> bool:
+    """Single-round scalar r-terms pair via fuse_many; LetRound chains and
+    vertex-valued terms run solo."""
+    return fusion._is_r_term(spec) and not isinstance(spec, L.LetRound)
+
+
+class AnalyticsService:
+    """Admission queues + lane scheduler over resident graphs.
+
+    ``register(kind, spec_fn)`` declares a query shape (``spec_fn(source)``
+    → Term); shapes whose fused program passes
+    ``engine.batchable_program`` serve through the continuous-batching
+    lane, the rest solo.  ``submit`` enqueues, ``step`` executes one
+    launch, ``run_open_loop`` drives a whole seeded arrival trace."""
+
+    def __init__(self, config: Optional[ServiceConfig] = None):
+        self.cfg = config or ServiceConfig()
+        self.clock = 0.0               # virtual seconds
+        self._graphs: OrderedDict = OrderedDict()
+        self._kinds: dict = {}         # kind -> (spec_fn, prog, batchable)
+        self._lanes: OrderedDict = OrderedDict()  # key -> lane
+        self._rr = 0                   # round-robin cursor over lane keys
+        self._launch_seq = 0
+        self.completed: list = []      # finished Requests, completion order
+        # counters (all deterministic under the virtual clock)
+        self.batch_launches = 0
+        self.batch_completed = 0
+        self.scalar_rounds = 0
+        self.scalar_fused = 0
+        self.solo_runs = 0
+        self.graph_evictions = 0
+        self.total_iterations = 0
+        self._occupancy: list = []     # live/max per batch launch
+        self._wall_t0: Optional[float] = None
+        self.wall_s = 0.0
+
+    # ----- graphs (bounded residency, LRU) ---------------------------------
+
+    @property
+    def graphs(self):
+        return dict(self._graphs)
+
+    def add_graph(self, name: str, g) -> None:
+        if name in self._graphs:
+            self._graphs.move_to_end(name)
+            self._graphs[name] = g
+            return
+        self._graphs[name] = g
+        self._evict_over_capacity()
+
+    def _graph_busy(self, name: str) -> bool:
+        return any(lane.busy() for key, lane in self._lanes.items()
+                   if key[1] == name)
+
+    def _evict_over_capacity(self) -> None:
+        """Evict least-recently-used IDLE graphs down to ``max_graphs``:
+        drop the graph's derived-structure caches (clear_graph_caches) and
+        its lanes.  Graphs with queued or in-flight work are never evicted
+        (capacity is a soft bound under pathological pinning)."""
+        while len(self._graphs) > self.cfg.max_graphs:
+            victim = None
+            names = list(self._graphs)
+            for name in names[:-1]:        # newest (just added) is protected
+                if not self._graph_busy(name):
+                    victim = name
+                    break
+            if victim is None:
+                break
+            g = self._graphs.pop(victim)
+            engine.clear_graph_caches(g)
+            for key in [k for k in self._lanes if k[1] == victim]:
+                del self._lanes[key]
+            self._rr = 0
+            self.graph_evictions += 1
+
+    # ----- registration / admission ----------------------------------------
+
+    def register(self, kind: str, spec_fn: Callable) -> bool:
+        """Declare a query shape.  Returns True when it will serve through
+        the continuous-batching lane (single idempotent sourced round)."""
+        prog = fusion.fuse(spec_fn(0))
+        batchable = engine.batchable_program(prog)
+        self._kinds[kind] = (spec_fn, prog, batchable)
+        return batchable
+
+    def _lane(self, key):
+        lane = self._lanes.get(key)
+        if lane is None:
+            if key[0] == "batch":
+                _, prog, _ = self._kinds[key[2]]
+                lane = _BatchLane(prog, self.cfg.max_batch)
+            else:
+                lane = _QueueLane()
+            self._lanes[key] = lane
+        return lane
+
+    def submit(self, gname: str, req: Request) -> None:
+        if gname not in self._graphs:
+            raise KeyError(f"graph {gname!r} is not resident; add_graph it")
+        self._graphs.move_to_end(gname)    # touch: residency is usage-driven
+        req.gname = gname
+        req._wall_submit = time.perf_counter()
+        if req.kind is not None:
+            if req.kind not in self._kinds:
+                raise KeyError(f"unregistered request kind {req.kind!r}")
+            spec_fn, _, batchable = self._kinds[req.kind]
+            if batchable and req.source is not None:
+                req.lane = "batch"
+                self._lane(("batch", gname, req.kind)).pending.append(req)
+                return
+            req.spec = spec_fn(req.source)
+            req.lane = "solo"
+            self._lane(("solo", gname, None)).pending.append(req)
+            return
+        if req.spec is None:
+            raise ValueError("a request needs a registered kind or a spec")
+        if _fusable_scalar(req.spec):
+            req.lane = "scalar"
+            self._lane(("scalar", gname, None)).pending.append(req)
+        else:
+            req.lane = "solo"
+            self._lane(("solo", gname, None)).pending.append(req)
+
+    def _has_work(self) -> bool:
+        return any(lane.busy() for lane in self._lanes.values())
+
+    # ----- one scheduling step ---------------------------------------------
+
+    def step(self) -> bool:
+        """Execute ONE launch on the next lane with work (round-robin over
+        lanes for fairness) and advance the virtual clock.  Returns False
+        when every lane is idle."""
+        keys = list(self._lanes)
+        if not keys:
+            return False
+        for off in range(len(keys)):
+            key = keys[(self._rr + off) % len(keys)]
+            lane = self._lanes[key]
+            if not lane.busy():
+                continue
+            self._rr = (self._rr + off + 1) % len(keys)
+            if key[0] == "batch":
+                return self._step_batch(key[1], lane)
+            if key[0] == "scalar":
+                return self._step_scalar(key[1], lane)
+            return self._step_solo(key[1], lane)
+        return False
+
+    def _advance(self, iterations: int) -> None:
+        self.clock += (self.cfg.launch_overhead_s
+                       + self.cfg.iter_cost_s * int(iterations))
+
+    def _complete(self, req: Request) -> None:
+        req.completed = self.clock
+        req.wall_latency_s = time.perf_counter() - req._wall_submit
+        self.completed.append(req)
+
+    def _step_batch(self, gname: str, lane: _BatchLane) -> bool:
+        g = self._graphs[gname]
+        B = self.cfg.max_batch
+        # 1. join: queued arrivals take over free slots with fresh init rows
+        joiners = []
+        for i in range(B):
+            if lane.slots[i] is None and lane.pending:
+                req = lane.pending.popleft()
+                lane.slots[i] = req
+                lane.sources[i] = int(req.source)
+                req.joined_launch = self._launch_seq
+                joiners.append(i)
+        live = lane.live()
+        if not live:
+            return False
+        if lane.state is None:
+            init = None                # cold batch: C1/C2 init from sources
+        else:
+            if joiners:
+                rows = engine.batch_init_state(
+                    g, lane.prog, [int(lane.sources[i]) for i in joiners])
+                for c in range(len(lane.state)):
+                    for j, i in enumerate(joiners):
+                        lane.state[c][i] = np.asarray(rows[c][j])
+            init = tuple(lane.state)
+        # 2. one bounded chunk launch; converged slots retire, the rest carry
+        outs, state = engine.run_program_batch(
+            g, lane.prog, [int(s) for s in lane.sources],
+            engine=self.cfg.engine, max_iter=self.cfg.chunk_iters,
+            on_nonconverge="ignore", init_state=init, return_state=True)
+        lane.state = [np.array(s) for s in state]   # host copy: splices write
+        self._launch_seq += 1
+        self.batch_launches += 1
+        self._occupancy.append(len(live) / B)
+        chunk_iters = 0
+        for i in live:
+            req = lane.slots[i]
+            it = int(outs[i].stats.iterations)
+            req.iterations += it
+            req.chunks += 1
+            chunk_iters = max(chunk_iters, it)
+            if req.chunks > self.cfg.max_chunks_per_query:
+                raise RuntimeError(
+                    f"request {req.rid} ({req.kind}@{req.source}) exceeded "
+                    f"{self.cfg.max_chunks_per_query} chunks without "
+                    "converging")
+        self.total_iterations += chunk_iters
+        self._advance(chunk_iters)
+        for i in live:
+            req = lane.slots[i]
+            if outs[i].stats.converged:
+                req.value = np.array(np.asarray(outs[i].value))
+                self.batch_completed += 1
+                self._complete(req)
+                lane.slots[i] = None
+        if not lane.busy():
+            lane.state = None          # drained: next arrival cold-starts
+        return True
+
+    def _step_scalar(self, gname: str, lane: _QueueLane) -> bool:
+        g = self._graphs[gname]
+        batch = []
+        while lane.pending and len(batch) < self.cfg.max_scalar_fuse:
+            batch.append(lane.pending.popleft())
+        prog = fusion.fuse_many([(r.rid, r.spec) for r in batch])
+        res = engine.run_program(g, prog, engine=self.cfg.engine)
+        self.scalar_rounds += 1
+        self.scalar_fused += len(batch)
+        self.total_iterations += int(res.stats.iterations)
+        self._advance(res.stats.iterations)
+        for r in batch:
+            r.value = float(np.asarray(res.value[r.rid]))
+            r.iterations = int(res.stats.iterations)
+            self._complete(r)
+        return True
+
+    def _step_solo(self, gname: str, lane: _QueueLane) -> bool:
+        g = self._graphs[gname]
+        req = lane.pending.popleft()
+        res = engine.run_program(g, fusion.fuse(req.spec),
+                                 engine=self.cfg.engine)
+        self.solo_runs += 1
+        self.total_iterations += int(res.stats.iterations)
+        self._advance(res.stats.iterations)
+        v = np.asarray(res.value)
+        req.value = np.array(v) if v.ndim else float(v)
+        req.iterations = int(res.stats.iterations)
+        self._complete(req)
+        return True
+
+    # ----- the open-loop driver --------------------------------------------
+
+    def run_open_loop(self, arrivals) -> dict:
+        """Drive a whole arrival trace ([(t, gname, Request)] — see
+        ``open_loop_arrivals``) to completion on the virtual clock: admit
+        everything due, launch, repeat; idle gaps fast-forward to the next
+        arrival.  Returns ``metrics()``."""
+        evs = sorted(arrivals, key=lambda e: (e[0], e[2].rid))
+        self._wall_t0 = time.perf_counter()
+        i = 0
+        while i < len(evs) or self._has_work():
+            while i < len(evs) and evs[i][0] <= self.clock + 1e-12:
+                t, gname, req = evs[i]
+                req.arrival = t
+                self.submit(gname, req)
+                i += 1
+            if not self._has_work():
+                self.clock = evs[i][0]     # idle: jump to the next arrival
+                continue
+            self.step()
+        self.wall_s = time.perf_counter() - self._wall_t0
+        return self.metrics()
+
+    def metrics(self) -> dict:
+        """Deterministic serving metrics (virtual clock) + reported-only
+        wall numbers.  ``queries_per_launch`` > 1 is the continuous-batching
+        win: more than one answer per compiled launch."""
+        v_lat = np.array([r.completed - r.arrival for r in self.completed]
+                         or [0.0])
+        w_lat = np.array([r.wall_latency_s for r in self.completed] or [0.0])
+        bl = max(self.batch_launches, 1)
+        return {
+            "completed": len(self.completed),
+            "batch_launches": self.batch_launches,
+            "batch_completed": self.batch_completed,
+            "queries_per_launch": round(self.batch_completed / bl, 6),
+            "occupancy": round(float(np.mean(self._occupancy))
+                               if self._occupancy else 0.0, 6),
+            "scalar_rounds": self.scalar_rounds,
+            "scalar_fused": self.scalar_fused,
+            "solo_runs": self.solo_runs,
+            "graph_evictions": self.graph_evictions,
+            "total_iterations": self.total_iterations,
+            "virtual_s": round(self.clock, 9),
+            "v_p50_ms": round(float(np.percentile(v_lat, 50)) * 1e3, 6),
+            "v_p99_ms": round(float(np.percentile(v_lat, 99)) * 1e3, 6),
+            "v_qps": round(len(self.completed) / self.clock, 3)
+            if self.clock > 0 else 0.0,
+            # wall numbers: machine-dependent, never gated
+            "wall_s": round(self.wall_s, 6),
+            "wall_qps": round(len(self.completed) / self.wall_s, 3)
+            if self.wall_s > 0 else 0.0,
+            "wall_p50_ms": round(float(np.percentile(w_lat, 50)) * 1e3, 3),
+            "wall_p99_ms": round(float(np.percentile(w_lat, 99)) * 1e3, 3),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Synthetic open-loop arrivals + the bitwise verification oracle.
+# ---------------------------------------------------------------------------
+
+
+def open_loop_arrivals(n_requests: int, rate: float, seed: int,
+                       make_request: Callable) -> list:
+    """Seeded OPEN-loop arrival trace: exponential interarrival times
+    (Poisson process) whose timestamps are independent of service progress —
+    a backed-up service keeps receiving work, so queueing pressure (and the
+    batching opportunity) is real.  ``make_request(rng, i) -> (gname,
+    Request)`` draws each request; the trace is a pure function of the seed,
+    which is what makes every downstream scheduling metric CI-gateable.
+    Returns [(t, gname, Request)]."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(int(n_requests)):
+        t += float(rng.exponential(1.0 / rate))
+        gname, req = make_request(rng, i)
+        req.rid = i
+        out.append((t, gname, req))
+    return out
+
+
+def standard_mix(gname: str, n_vertices: int,
+                 batch_kinds=("BFS", "SSSP"), scalar_share: float = 0.25):
+    """``make_request`` factory for the serving bench/smoke: a seeded mix
+    of single-source sweep queries over the registered ``batch_kinds``
+    (random sources — the continuous-batching traffic) and cross-kind
+    scalar queries (radius/drr over random vertex pairs — the fuse_many
+    traffic)."""
+    from repro.core import usecases as U
+
+    def make(rng, i):
+        if rng.random() >= scalar_share:
+            kind = batch_kinds[int(rng.integers(len(batch_kinds)))]
+            return gname, Request(kind=kind,
+                                  source=int(rng.integers(n_vertices)))
+        a = int(rng.integers(n_vertices))
+        b = int(rng.integers(n_vertices))
+        spec = U.radius(a, b) if rng.random() < 0.5 else U.drr(a, b)
+        return gname, Request(spec=spec)
+    return make
+
+
+def _bitwise_equal(a, b) -> bool:
+    a = np.asarray(a)
+    b = np.asarray(b)
+    return a.shape == b.shape and a.dtype == b.dtype \
+        and a.tobytes() == b.tobytes()
+
+
+def verify_sequential(svc: AnalyticsService, graphs: Optional[dict] = None,
+                      engine_name: Optional[str] = None) -> int:
+    """Re-run every completed request SOLO (plain ``run_program`` — one
+    monolithic, unbatched, unchunked execution per request) and assert each
+    service answer is bitwise-identical.  This is the serving layer's
+    correctness oracle: continuous batching, chunked warm-resume, slot
+    joins and cross-kind scalar fusion must all be invisible in the bits.
+    Returns the number of requests checked."""
+    graphs = dict(svc.graphs, **(graphs or {}))
+    eng = engine_name or svc.cfg.engine
+    checked = 0
+    for req in svc.completed:
+        g = graphs.get(req.gname)
+        if g is None:                  # evicted graph without an override
+            continue
+        if req.lane == "batch":
+            _, prog, _ = svc._kinds[req.kind]
+            ref = engine.run_program(g, prog, engine=eng,
+                                     source=req.source).value
+        else:
+            ref = engine.run_program(g, fusion.fuse(req.spec),
+                                     engine=eng).value
+        ref = np.asarray(ref)
+        got = np.asarray(req.value)
+        if ref.ndim == 0:
+            ref = ref.astype(np.float64)
+            got = np.asarray(float(got), np.float64)
+        if not _bitwise_equal(got, ref):
+            raise AssertionError(
+                f"request {req.rid} ({req.lane} lane, kind={req.kind!r}, "
+                f"source={req.source}) diverged from its solo run")
+        checked += 1
+    return checked
