@@ -61,6 +61,16 @@ are a deterministic function of the seed; every served answer is asserted
 bitwise-equal to a solo ``run_program`` in-bench.  Wall-clock latency is
 reported, never gated.
 
+``--engines pallas`` also runs the planner section (DESIGN.md §14): the
+query planner's default ``ExecutionPlan`` vs the same knobs pinned
+explicitly (the historical kwarg surface) on BFS/SSSP/PageRank.  The gated
+properties are deterministic: planned and pinned runs must produce
+bitwise-identical values with identical iteration counts and edge work
+(default plans reproduce the documented heuristics exactly), the planner
+must add ZERO traced launches and zero executor-cache entries (planning is
+a host-side cache lookup, invisible to the compiled program), and the
+recorded-stats feedback cache must hold an entry per benched query shape.
+
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
 run regresses on traced launches, the fused/unfused edge-work ratio, the
@@ -103,6 +113,9 @@ GUARDED = ["BFS", "SSSP", "PR"]         # guarded vs guards-off execution
 SERVING = ["MIX"]                       # open-loop serving traces (the MIX
                                         # trace: BFS/SSSP sweeps + fused
                                         # radius/drr scalars)
+PLANNER = ["BFS", "SSSP", "PR"]         # planned vs pinned-knob execution
+                                        # (the ExecutionPlan default-parity
+                                        # and zero-overhead contract)
 _BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
 _BATCH_B = 8                            # sources per batched sweep
 _SERVE_B = 6                            # continuous-batch slots per lane
@@ -444,10 +457,68 @@ def bench_serving(g, gname: str, weighted: bool, name: str) -> dict:
     }
 
 
+def bench_planner(g, gname: str, weighted: bool, name: str) -> dict:
+    """Planner section (DESIGN.md §14): the default ``ExecutionPlan`` vs the
+    same decisions pinned through the explicit kwarg surface on one
+    workload.  Default plans must reproduce the documented heuristics
+    BITWISE (asserted here, in-bench: values, iterations, edge work), and
+    planning must be invisible to the compiled program — zero extra traced
+    launches, zero extra executor-cache entries (a plan is a host-side LRU
+    lookup).  Wall time is reported, never gated."""
+    import numpy as np
+
+    from repro.core import plan as P
+    from repro.kernels import edge_reduce as er
+    from repro.kernels import ops as kops
+
+    pinned_kw = dict(model=None, switch_k=20.0, push_resolution="sorted")
+
+    def one(kw):
+        engine.clear_program_caches()
+        er.reset_sweep_stats()
+        if name == "PR":
+            dk = U.handwritten_pagerank(g.n)
+            t, res = timed(lambda: engine.run_direct(
+                g, dk, engine="pallas", **kw), repeats=1)
+        else:
+            prog = fusion.fuse(U.ALL_SPECS[name]())
+            t, res = timed(lambda: engine.run_program(
+                g, prog, engine="pallas", **kw), repeats=1)
+        return t, res, dict(er.SWEEP_STATS), kops.executor_cache_size()
+
+    t_plan, res_plan, s_plan, exec_plan = one({})
+    t_pin, res_pin, s_pin, exec_pin = one(pinned_kw)
+    assert np.array_equal(np.asarray(res_plan.value),
+                          np.asarray(res_pin.value)), \
+        f"{name}: planned execution diverged from pinned knobs"
+    assert res_plan.stats.iterations == res_pin.stats.iterations, \
+        f"{name}: planner changed the iteration count " \
+        f"({res_plan.stats.iterations} vs {res_pin.stats.iterations})"
+    assert float(res_plan.stats.edge_work) == \
+        float(res_pin.stats.edge_work), \
+        f"{name}: planner changed the edge work"
+    assert res_plan.stats.plan is not None and \
+        res_plan.stats.plan.engine == "pallas", \
+        f"{name}: resolved plan missing from ExecStats"
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "iterations": res_plan.stats.iterations,
+        "edge_work": float(res_plan.stats.edge_work),
+        "launches_traced_planned": s_plan["launches"],
+        "launches_traced_pinned": s_pin["launches"],
+        "exec_entries_planned": exec_plan,
+        "exec_entries_pinned": exec_pin,
+        "plan_entries": P.plan_cache_size(),
+        "feedback_entries": P.feedback_cache_size(),
+        "t_planned_ms": t_plan * 1e3, "t_pinned_ms": t_pin * 1e3,
+    }
+
+
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         engines=("pull", "push"), json_out=None, direction_usecases=None,
         batched_usecases=None, resolution_usecases=None,
-        sharded_usecases=None, guard_usecases=None, serving_usecases=None):
+        sharded_usecases=None, guard_usecases=None, serving_usecases=None,
+        planner_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
@@ -456,6 +527,7 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     sharded_rows = []
     guard_rows = []
     serving_rows = []
+    planner_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
@@ -475,6 +547,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         raise ValueError("serving_usecases bench the continuous-batching "
                          "service on the pallas engine; add 'pallas' to "
                          "engines")
+    if planner_usecases and "pallas" not in engines:
+        raise ValueError("planner_usecases bench the query planner on the "
+                         "pallas engine; add 'pallas' to engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
     if batched_usecases is None:
@@ -487,6 +562,8 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         guard_usecases = GUARDED if "pallas" in engines else []
     if serving_usecases is None:
         serving_usecases = SERVING if "pallas" in engines else []
+    if planner_usecases is None:
+        planner_usecases = PLANNER if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -551,6 +628,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                 for name in serving_usecases:
                     serving_rows.append(
                         bench_serving(g, gname, weighted, name))
+                for name in planner_usecases:
+                    planner_rows.append(
+                        bench_planner(g, gname, weighted, name))
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
@@ -619,6 +699,18 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
               "q_per_launch", "occupancy", "scalar_rounds", "scalar_fused",
               "traced", "exec_entries", "v_p50_ms", "v_p99_ms", "v_qps",
               "t_wall_ms"])
+    if planner_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["iterations"], round(r["edge_work"], 1),
+               r["launches_traced_planned"], r["launches_traced_pinned"],
+               r["exec_entries_planned"], r["exec_entries_pinned"],
+               r["plan_entries"], r["feedback_entries"],
+               round(r["t_planned_ms"], 1), round(r["t_pinned_ms"], 1)]
+              for r in planner_rows],
+             ["graph", "weights", "usecase", "iters", "edge_work",
+              "traced_planned", "traced_pinned", "exec_planned",
+              "exec_pinned", "plan_entries", "feedback", "t_planned_ms",
+              "t_pinned_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
            "resolution_rows": resolution_rows,
@@ -626,9 +718,10 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
            "sharded_rows": sharded_rows,
            "guard_rows": guard_rows,
            "serving_rows": serving_rows,
+           "planner_rows": planner_rows,
            "table": out}
     if json_rows or direction_rows or batched_rows or resolution_rows \
-            or sharded_rows or guard_rows or serving_rows:
+            or sharded_rows or guard_rows or serving_rows or planner_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -855,6 +948,44 @@ def compare_baseline(current: dict, baseline: dict,
                 f"{key}: serving scalar_fused {r['scalar_fused']} < "
                 f"baseline {b['scalar_fused']} — fuse_many pairing "
                 "stopped absorbing scalar requests")
+    base_planner = {_row_key(r): r for r in baseline.get("planner_rows", [])}
+    for r in current.get("planner_rows", []):
+        key = _row_key(r)
+        # Standing properties (DESIGN.md §14): planning is a host-side cache
+        # lookup, so the planned run must trace exactly what the pinned run
+        # traces and hold the same executor entries (bitwise value /
+        # iteration / edge-work parity is asserted inside bench_planner
+        # itself); and executed queries must leave recorded-stats feedback
+        # for the adaptive loop to consume.
+        if r["launches_traced_planned"] != r["launches_traced_pinned"]:
+            errors.append(
+                f"{key}: planner changed traced launches "
+                f"({r['launches_traced_planned']} vs pinned "
+                f"{r['launches_traced_pinned']}) — planning must be "
+                "invisible to the compiled program")
+        if r["exec_entries_planned"] != r["exec_entries_pinned"]:
+            errors.append(
+                f"{key}: planner changed executor-cache entries "
+                f"({r['exec_entries_planned']} vs pinned "
+                f"{r['exec_entries_pinned']})")
+        if r["feedback_entries"] < 1:
+            errors.append(
+                f"{key}: no recorded-stats feedback after an executed "
+                "query — the planner's feedback loop is disconnected")
+        b = base_planner.get(key)
+        if b is None:
+            continue
+        # strict vs the committed baseline, like launches_traced
+        if r["launches_traced_planned"] > b["launches_traced_planned"]:
+            errors.append(
+                f"{key}: planned traced launches "
+                f"{r['launches_traced_planned']} > baseline "
+                f"{b['launches_traced_planned']}")
+        if r["exec_entries_planned"] > b["exec_entries_planned"]:
+            errors.append(
+                f"{key}: planned executor entries "
+                f"{r['exec_entries_planned']} > baseline "
+                f"{b['exec_entries_planned']}")
     return errors
 
 
@@ -888,6 +1019,10 @@ if __name__ == "__main__":
                     help="comma list of open-loop serving traces "
                          f"(default {','.join(SERVING)} when pallas is "
                          "benchmarked; pass '' to skip)")
+    ap.add_argument("--planner", default=None, metavar="NAMES",
+                    help="comma list of planner-parity workloads "
+                         f"(default {','.join(PLANNER)} when pallas is "
+                         "benchmarked; pass '' to skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
                          f"(default {_JSON_PATH})")
@@ -920,17 +1055,19 @@ if __name__ == "__main__":
         tuple(u for u in args.guard.split(",") if u)
     serving = None if args.serving is None else \
         tuple(u for u in args.serving.split(",") if u)
+    planner = None if args.planner is None else \
+        tuple(u for u in args.planner.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
                  engines=engines, json_out=json_out,
                  batched_usecases=batched, resolution_usecases=resolution,
                  sharded_usecases=sharded, guard_usecases=guard,
-                 serving_usecases=serving)
+                 serving_usecases=serving, planner_usecases=planner)
     if baseline is not None:
         if not (result["rows"] or result["direction_rows"]
                 or result["batched_rows"] or result["resolution_rows"]
                 or result["sharded_rows"] or result["guard_rows"]
-                or result["serving_rows"]):
+                or result["serving_rows"] or result["planner_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -947,4 +1084,5 @@ if __name__ == "__main__":
               f"{len(baseline.get('batched_rows', []))} batched rows, "
               f"{len(baseline.get('sharded_rows', []))} sharded rows, "
               f"{len(baseline.get('guard_rows', []))} guard rows, "
-              f"{len(baseline.get('serving_rows', []))} serving rows)")
+              f"{len(baseline.get('serving_rows', []))} serving rows, "
+              f"{len(baseline.get('planner_rows', []))} planner rows)")

@@ -34,8 +34,10 @@ import numpy as np
 
 from repro.core import conditions as _conditions
 from repro.core import guard, iterate
+from repro.core import plan as _plan
 from repro.core.fusion import FusedProgram, FusedRound, plan_output
 from repro.core.kernel_lang import eval_expr
+from repro.core.plan import ExecutionPlan, plan_execution  # noqa: F401
 from repro.core.synthesis import DirectKernels, synthesize_round
 
 _BOT_CUTOFF = 1e8
@@ -62,6 +64,8 @@ def clear_program_caches():
     structure._WDEG_CACHE.clear()
     structure._SHARDED_ELL_CACHE.clear()
     structure._VALID_CACHE.clear()
+    structure._STATS_CACHE.clear()
+    _plan.clear_plan_caches()
     try:
         from repro.kernels import ops as kops
         kops.clear_executor_cache()
@@ -75,9 +79,11 @@ def clear_graph_caches(g) -> int:
     caches, leaving other resident graphs and the graph-shape-generic
     compiled executors alone.  The serving layer's bounded graph LRU calls
     this when a graph loses residency; ``program_cache_stats`` verifies the
-    bound.  Returns the number of cache entries dropped."""
+    bound.  Also evicts the graph's cached plans and recorded-stats feedback
+    (core.plan) so an evicted graph's adaptation history dies with it.
+    Returns the number of cache entries dropped."""
     from repro.graph import structure
-    return structure.clear_graph_caches(g)
+    return structure.clear_graph_caches(g) + _plan.clear_graph_plans(g)
 
 
 def program_cache_stats() -> dict:
@@ -86,7 +92,10 @@ def program_cache_stats() -> dict:
     out = {"synth_rounds": len(synthesis._ROUND_CACHE),
            "ell_layouts": len(structure._ELL_CACHE),
            "sharded_layouts": len(structure._SHARDED_ELL_CACHE),
-           "push_resolutions": len(structure._RES_CACHE)}
+           "push_resolutions": len(structure._RES_CACHE),
+           "graph_stats": len(structure._STATS_CACHE),
+           "plans": _plan.plan_cache_size(),
+           "feedback": _plan.feedback_cache_size()}
     try:
         from repro.kernels import ops as kops
         out["pallas_executors"] = kops.executor_cache_size()
@@ -130,6 +139,10 @@ class ExecStats:
                                     # degradation step (guard.FallbackEvent)
     exec_retries: int = 0           # same-engine retries spent before each
                                     # success/fallback (ft.bounded_retry)
+    plan: object = None             # the resolved core.plan.ExecutionPlan
+                                    # this query lowered through — every
+                                    # knob decision, inspectable after the
+                                    # fact (None only on hand-built stats)
 
 
 @dataclasses.dataclass
@@ -137,18 +150,6 @@ class ExecResult:
     value: object                  # final result (array for vertex queries)
     named: dict                    # bound intermediate results
     stats: ExecStats
-
-
-def _pallas_direction(model) -> str:
-    """Map run_program's ``model`` to the pallas engine's sweep direction:
-    None/"auto" → per-iteration heuristic, "pull"/"pull+"/"pull−" → pull
-    sweeps only, "push"/… → push sweeps only."""
-    if model in (None, "auto"):
-        return "auto"
-    base = str(model).rstrip("+-")
-    if base in ("pull", "push"):
-        return base
-    raise ValueError(f"pallas engine: unknown model {model!r}")
 
 
 def _valid_mask(x):
@@ -323,12 +324,15 @@ def _dispatch_guarded(call, engine, fallback, ft_config):
             eng = nxt
 
 
-def _run_iteration(g, round_: FusedRound, engine: str, model: str,
+def _run_iteration(g, round_: FusedRound, engine: str, plan: ExecutionPlan,
                    mesh, axes, max_iter, tol, synth_override=None,
-                   source=None, push_resolution=None, switch_k="auto",
-                   shard_strategy="contiguous", graph_check=None,
-                   divergence_sentinel=True, checkpoint_every=None,
+                   source=None, graph_check=None, checkpoint_every=None,
                    ckpt_dir=None, resume=False, init_state=None):
+    """One iteration round under ``plan`` on ``engine`` — which differs from
+    ``plan.engine`` only while walking the guard fallback chain, in which
+    case the engine-dependent plan fields re-resolve (``degrade_plan``)."""
+    eff = _plan.degrade_plan(plan, engine)
+    model = eff.model
     synth, synth_ms = _synthesize_timed(round_, synth_override)
     comps, plans = _round_runtime(round_, synth)
     _check_preconditions(graph_check, comps, plans)
@@ -353,10 +357,7 @@ def _run_iteration(g, round_: FusedRound, engine: str, model: str,
     elif engine == "pallas":
         from repro.kernels import ops as kops
         res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol,
-                                  direction=_pallas_direction(model),
-                                  sources=sources, switch_k=switch_k,
-                                  push_resolution=push_resolution,
-                                  divergence_sentinel=divergence_sentinel,
+                                  sources=sources, plan=eff,
                                   checkpoint_every=checkpoint_every,
                                   ckpt_dir=ckpt_dir, resume=resume,
                                   init_state=init_state)
@@ -364,10 +365,8 @@ def _run_iteration(g, round_: FusedRound, engine: str, model: str,
         assert mesh is not None, "pallas_sharded engine needs a mesh"
         from repro.kernels import ops as kops
         res = kops.iterate_pallas_sharded(
-            g, comps, plans, mesh, axes=axes, strategy=shard_strategy,
-            max_iter=max_iter, tol=tol, direction=_pallas_direction(model),
-            sources=sources, switch_k=switch_k,
-            push_resolution=push_resolution)
+            g, comps, plans, mesh, axes=axes,
+            max_iter=max_iter, tol=tol, sources=sources, plan=eff)
     else:
         raise ValueError(f"unknown engine {engine}")
     return res, comps, synth_ms
@@ -425,30 +424,40 @@ def _accumulate(stats: ExecStats, res, synth_ms: float) -> None:
             stats.shard_work = stats.shard_work + sw
 
 
-def run_program(g, prog: FusedProgram, engine: str = "pull",
+def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
                 model: Optional[str] = None, mesh=None, axes=("data",),
                 max_iter: Optional[int] = None, tol: float = 0.0,
                 source: Optional[int] = None,
                 push_resolution: Optional[str] = None,
                 switch_k="auto",
-                shard_strategy: str = "contiguous",
+                shard_strategy: Optional[str] = None,
                 validate: bool = True,
                 on_nonconverge: str = "raise",
                 fallback: bool = False, ft_config=None,
                 divergence_sentinel: bool = True,
                 checkpoint_every: Optional[int] = None,
-                ckpt_dir=None, resume: bool = False) -> ExecResult:
+                ckpt_dir=None, resume: bool = False,
+                adaptive: bool = False,
+                plan: Optional[ExecutionPlan] = None,
+                explain: bool = False) -> ExecResult:
     """Execute a fused program.  ``source`` optionally re-sources every
     sourced component to one query source — the program (and with it every
     compiled-executor cache entry) is source-generic, so querying another
     source never re-fuses, re-synthesizes or retraces (DESIGN.md §8).
 
-    ``push_resolution`` ("sorted"/"scatter", pallas engine only) selects
-    the push sweep's dst-keyed resolution path; ``switch_k`` tunes the
-    direction switch per query (DESIGN.md §2/§10) — None falls back to the
-    frontier-fraction threshold, a number overrides the Gemini k.
-    ``shard_strategy`` picks the vertex-cut edge partitioning of the
-    ``pallas_sharded`` engine ("contiguous" | "dst_hash").
+    Every knob kwarg is a HINT to the query planner (``core.plan``,
+    DESIGN.md §14): ``plan_execution`` resolves engine (None → "pull",
+    "auto" → statistics-driven), direction, ``switch_k`` (the Gemini rule;
+    None falls back to the frontier-fraction threshold), ``push_resolution``
+    ("sorted"/"scatter", pallas engine only) and ``shard_strategy``
+    ("contiguous" | "dst_hash", ``pallas_sharded``) into one frozen
+    ``ExecutionPlan``, normalized exactly once; explicit hints always win,
+    and default plans reproduce the documented heuristics bitwise.  The
+    resolved plan is recorded in ``ExecResult.stats.plan``; ``explain=True``
+    skips execution and returns the ``PlanExplanation`` (plan + the graph
+    statistics and per-field reasons behind it).  ``adaptive=True`` lets
+    unpinned knobs consult the recorded-stats feedback of this
+    (graph, kind).  A pre-resolved ``plan=`` bypasses planning entirely.
 
     Guarded execution (DESIGN.md §12): ``validate`` (default on) checks the
     graph's structural contract, the query source's range, and the per-round
@@ -461,15 +470,23 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
     tunes the budget), recording every event in the stats.
     ``checkpoint_every``/``ckpt_dir``/``resume`` thread the chunked
     checkpointed fixpoint (pallas engine only)."""
-    if on_nonconverge not in ("raise", "warn", "ignore"):
-        raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
-                         f"'ignore', got {on_nonconverge!r}")
-    if (checkpoint_every is not None or resume) and engine != "pallas":
+    if plan is None or explain:
+        planned = plan_execution(
+            g, prog, engine=engine, model=model, mesh=mesh, axes=axes,
+            switch_k=switch_k, push_resolution=push_resolution,
+            shard_strategy=shard_strategy, validate=validate,
+            on_nonconverge=on_nonconverge, fallback=fallback,
+            divergence_sentinel=divergence_sentinel, adaptive=adaptive,
+            default_engine="pull", explain=explain)
+        if explain:
+            return planned
+        plan = planned
+    if (checkpoint_every is not None or resume) and plan.engine != "pallas":
         raise ValueError("checkpointed fixpoints are a pallas-engine "
-                         f"feature; got engine={engine!r}")
-    chk = _validate_inputs(g, source=source) if validate else None
+                         f"feature; got engine={plan.engine!r}")
+    chk = _validate_inputs(g, source=source) if plan.validate else None
     max_iter_eff = max_iter if max_iter is not None else 2 * g.n + 4
-    stats = ExecStats(engine_used=engine)
+    stats = ExecStats(engine_used=plan.engine, plan=plan)
     named: dict = {}
     final = None
     for bind_name, round_ in prog.rounds:
@@ -477,19 +494,17 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
         if round_.leaves:
             def call(eng, round_=round_):
                 return _run_iteration(
-                    g, round_, eng, model, mesh, axes, max_iter, tol,
-                    source=source, push_resolution=push_resolution,
-                    switch_k=switch_k, shard_strategy=shard_strategy,
-                    graph_check=chk, divergence_sentinel=divergence_sentinel,
+                    g, round_, eng, plan, mesh, axes, max_iter, tol,
+                    source=source, graph_check=chk,
                     checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
                     resume=resume)
             (res, comps, synth_ms), eng_used, events, retries = \
-                _dispatch_guarded(call, engine, fallback, ft_config)
+                _dispatch_guarded(call, plan.engine, plan.fallback, ft_config)
             stats.engine_used = eng_used
             stats.fallbacks += tuple(ev.as_tuple() for ev in events)
             stats.exec_retries += retries
             _accumulate(stats, res, synth_ms)
-            _check_outcome(res, max_iter_eff, on_nonconverge)
+            _check_outcome(res, max_iter_eff, plan.on_nonconverge)
             for leaf in round_.leaves:
                 env[leaf.name] = res.state[plan_output(leaf.plan)]
         out = _finish_round(g, round_, env)
@@ -497,11 +512,12 @@ def run_program(g, prog: FusedProgram, engine: str = "pull",
             prefix = "$vec:" if round_.out_kind == "vertex" else "$scalar:"
             named[prefix + bind_name] = out
         final = out
+    _plan.record_feedback(g, plan.kind, stats)
     return ExecResult(value=final, named=named, stats=stats)
 
 
 def run_program_batch(g, prog: FusedProgram, sources: Sequence,
-                      engine: str = "pallas", model: Optional[str] = None,
+                      engine: Optional[str] = None, model: Optional[str] = None,
                       mesh=None, axes=("data",),
                       max_iter: Optional[int] = None, tol: float = 0.0,
                       push_resolution: Optional[str] = None,
@@ -509,7 +525,10 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                       validate: bool = True,
                       on_nonconverge: str = "raise",
                       fallback: bool = False, ft_config=None,
-                      init_state=None, return_state=False):
+                      init_state=None, return_state=False,
+                      adaptive: bool = False,
+                      plan: Optional[ExecutionPlan] = None,
+                      explain: bool = False):
     """Serve B concurrent single-source queries of one program in ONE
     compiled launch per round (DESIGN.md §9).
 
@@ -540,15 +559,35 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
     the round's final per-component ``[B, n]`` state — feed it back as the
     next chunk's ``init_state``.  Bound ``max_iter`` to the scheduler's
     chunk quantum and read each query's ``stats.converged`` (under
-    ``on_nonconverge="ignore"``) to decide retire-vs-carry per slot."""
-    if on_nonconverge not in ("raise", "warn", "ignore"):
-        raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
-                         f"'ignore', got {on_nonconverge!r}")
+    ``on_nonconverge="ignore"``) to decide retire-vs-carry per slot.
+
+    Knob kwargs are planner HINTS (``core.plan``, DESIGN.md §14), resolved
+    through ``plan_execution(default_engine="pallas", batch=B)`` exactly as
+    in ``run_program``; the resolved plan — including the explicit
+    ``batch_lane`` decision ("vmapped" one-launch batch vs. the recorded
+    "sequential" degradation of non-pallas engines) — lands in every
+    query's ``stats.plan``."""
+    src_arr = np.asarray(sources)
+    if src_arr.ndim != 1:
+        raise ValueError(
+            f"run_program_batch sources must be a [B] vector of query "
+            f"sources, got shape {src_arr.shape}; per-component [B, n_comps] "
+            "batching is the kernels-layer iterate_pallas_batch API")
+    if plan is None or explain:
+        planned = plan_execution(
+            g, prog, engine=engine, model=model, mesh=mesh, axes=axes,
+            switch_k=switch_k, push_resolution=push_resolution,
+            batch=len(src_arr), validate=validate,
+            on_nonconverge=on_nonconverge, fallback=fallback,
+            adaptive=adaptive, default_engine="pallas", explain=explain)
+        if explain:
+            return planned
+        plan = planned
     if init_state is not None or return_state:
-        if engine != "pallas":
+        if plan.engine != "pallas":
             raise ValueError("init_state/return_state are pallas-engine "
-                             f"continuous-batching hooks; got {engine!r}")
-        if fallback:
+                             f"continuous-batching hooks; got {plan.engine!r}")
+        if plan.fallback:
             raise ValueError("init_state/return_state cannot degrade to the "
                              "sequential fallback loop (a warm-started batch "
                              "has no per-query equivalent there); run with "
@@ -559,26 +598,23 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                 "init_state/return_state need a single-round program (one "
                 f"iteration round, no LetRound chain); got "
                 f"{len(prog.rounds)} rounds")
-    src_arr = np.asarray(sources)
-    if src_arr.ndim != 1:
-        raise ValueError(
-            f"run_program_batch sources must be a [B] vector of query "
-            f"sources, got shape {src_arr.shape}; per-component [B, n_comps] "
-            "batching is the kernels-layer iterate_pallas_batch API")
-    chk = _validate_inputs(g, sources=src_arr) if validate else None
+    chk = _validate_inputs(g, sources=src_arr) if plan.validate else None
     max_iter_eff = max_iter if max_iter is not None else 2 * g.n + 4
     src_list = [int(s) for s in src_arr]
     B = len(src_list)
-    guard_kw = dict(validate=validate, on_nonconverge=on_nonconverge,
-                    fallback=fallback, ft_config=ft_config)
-    if engine != "pallas":
-        return [run_program(g, prog, engine=engine, model=model, mesh=mesh,
-                            axes=axes, max_iter=max_iter, tol=tol, source=s,
-                            **guard_kw)
+    if plan.engine != "pallas":
+        # The planner already recorded this as an explicit decision
+        # (batch_lane="sequential"); the guard event makes it visible in the
+        # same place every other degradation lands (satellite 3).
+        ev = guard.batch_degradation(plan.engine, B).as_tuple()
+        outs = [run_program(g, prog, mesh=mesh, axes=axes, max_iter=max_iter,
+                            tol=tol, source=s, ft_config=ft_config, plan=plan)
                 for s in src_list]
-    pallas_kw = dict(switch_k=switch_k, push_resolution=push_resolution)
+        for o in outs:
+            o.stats.fallbacks = (ev,) + o.stats.fallbacks
+        return outs
     from repro.kernels import ops as kops
-    stats = [ExecStats(engine_used="pallas") for _ in range(B)]
+    stats = [ExecStats(engine_used="pallas", plan=plan) for _ in range(B)]
     named: list = [{} for _ in range(B)]
     finals: list = [None] * B
     state_out = None
@@ -591,10 +627,9 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
             try:
                 res = kops.iterate_pallas_batch(
                     g, comps, plans, src_list, max_iter=max_iter, tol=tol,
-                    direction=_pallas_direction(model),
-                    init_state=init_state, **pallas_kw)
+                    init_state=init_state, plan=plan)
             except Exception as exc:
-                if not fallback or not guard.recoverable(exc):
+                if not plan.fallback or not guard.recoverable(exc):
                     raise
                 # batched launch degraded: the whole batch re-runs through
                 # the sequential reference loop, the event recorded on
@@ -604,13 +639,16 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                     f"{type(exc).__name__}: {exc}").as_tuple()
                 outs = [run_program(g, prog, engine="adaptive", model=None,
                                     max_iter=max_iter, tol=tol, source=s,
-                                    **guard_kw) for s in src_list]
+                                    validate=plan.validate,
+                                    on_nonconverge=plan.on_nonconverge,
+                                    fallback=plan.fallback,
+                                    ft_config=ft_config) for s in src_list]
                 for o in outs:
                     o.stats.fallbacks = (ev,) + o.stats.fallbacks
                     o.stats.engine_used = "adaptive"
                 return outs
             _check_batch_outcomes(res, src_list, max_iter_eff,
-                                  on_nonconverge)
+                                  plan.on_nonconverge)
             iters = np.asarray(res.iterations)
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
@@ -636,6 +674,8 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                 prefix = "$vec:" if round_.out_kind == "vertex" else "$scalar:"
                 named[b][prefix + bind_name] = out
             finals[b] = out
+    for st in stats:
+        _plan.record_feedback(g, plan.kind, st)
     results = [ExecResult(value=finals[b], named=named[b], stats=stats[b])
                for b in range(B)]
     if return_state:
@@ -685,21 +725,24 @@ def batch_init_state(g, prog: FusedProgram, sources: Sequence) -> tuple:
 # Direct-kernel execution (PageRank and other Fig. 4b style kernel sets).
 # ---------------------------------------------------------------------------
 
-def run_direct(g, dk: DirectKernels, engine: str = "pull",
+def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
                mesh=None, axes=("data",),
                model: Optional[str] = None,
                source: Optional[int] = None,
                sources: Optional[Sequence] = None,
                push_resolution: Optional[str] = None,
                switch_k="auto",
-               shard_strategy: str = "contiguous",
+               shard_strategy: Optional[str] = None,
                validate: bool = True,
                on_nonconverge: str = "raise",
                fallback: bool = False, ft_config=None,
                divergence_sentinel: bool = True,
                checkpoint_every: Optional[int] = None,
                ckpt_dir=None, resume: bool = False,
-               init_state=None):
+               init_state=None,
+               adaptive: bool = False,
+               plan: Optional[ExecutionPlan] = None,
+               explain: bool = False):
     """Execute a direct kernel set on one engine.
 
     ``model`` optionally pins the pallas sweep direction ("pull"/"push");
@@ -711,6 +754,12 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
     list of per-query ``ExecResult``s.  Both need a source-generic kernel
     set (``dk.source`` not None).
 
+    As in ``run_program``, every knob kwarg is a hint resolved by the query
+    planner into one frozen ``ExecutionPlan`` (recorded in ``stats.plan``;
+    ``explain=True`` returns the ``PlanExplanation`` without executing;
+    ``plan=`` supplies a pre-resolved plan; ``adaptive=True`` opts into the
+    recorded-stats feedback for unpinned knobs).
+
     Guarded execution matches ``run_program``: ``validate`` /
     ``on_nonconverge`` / ``fallback`` + ``ft_config`` /
     ``divergence_sentinel``, plus the chunked-checkpoint knobs
@@ -719,13 +768,22 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
     [n] arrays)."""
     from repro.core.fusion import Prim
 
-    if on_nonconverge not in ("raise", "warn", "ignore"):
-        raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
-                         f"'ignore', got {on_nonconverge!r}")
+    if plan is None or explain:
+        planned = plan_execution(
+            g, dk, engine=engine, model=model, mesh=mesh, axes=axes,
+            switch_k=switch_k, push_resolution=push_resolution,
+            shard_strategy=shard_strategy,
+            batch=None if sources is None else len(sources),
+            validate=validate, on_nonconverge=on_nonconverge,
+            fallback=fallback, divergence_sentinel=divergence_sentinel,
+            adaptive=adaptive, default_engine="pull", explain=explain)
+        if explain:
+            return planned
+        plan = planned
     if (checkpoint_every is not None or resume or init_state is not None) \
-            and engine != "pallas":
+            and plan.engine != "pallas":
         raise ValueError("checkpointed/warm-started fixpoints are a "
-                         f"pallas-engine feature; got engine={engine!r}")
+                         f"pallas-engine feature; got engine={plan.engine!r}")
     if (source is not None or sources is not None) and dk.source is None:
         raise ValueError(
             "run_direct source overrides need a source-generic DirectKernels "
@@ -736,11 +794,8 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
             "DirectKernels.source requires a source-generic init_fn(v, s); "
             "a single-argument closure bakes its own source, so re-sourcing "
             "would move the ⊥-mask without moving the init value")
-    pallas_kw = dict(switch_k=switch_k, push_resolution=push_resolution)
-    guard_kw = dict(validate=validate, on_nonconverge=on_nonconverge,
-                    fallback=fallback, ft_config=ft_config)
     chk = _validate_inputs(g, source=source, sources=sources) \
-        if validate else None
+        if plan.validate else None
     max_iter_eff = dk.max_iter if dk.max_iter is not None else 2 * g.n + 4
     comp = iterate.CompRuntime(
         idx=0, op=dk.rop, dtype=iterate.DTYPES[dk.dtype],
@@ -748,47 +803,56 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
     plans = [Prim(dk.rop, 0)]
     _check_preconditions(chk, [comp], plans)
     if sources is not None:
-        if engine == "pallas":
+        if plan.engine == "pallas":
             from repro.kernels import ops as kops
             try:
                 res = kops.iterate_pallas_batch(
                     g, [comp], plans, sources,
-                    max_iter=dk.max_iter, tol=dk.tol,
-                    direction=_pallas_direction(model), **pallas_kw)
+                    max_iter=dk.max_iter, tol=dk.tol, plan=plan)
             except Exception as exc:
-                if not fallback or not guard.recoverable(exc):
+                if not plan.fallback or not guard.recoverable(exc):
                     raise
                 ev = guard.FallbackEvent(
                     "pallas", "adaptive",
                     f"{type(exc).__name__}: {exc}").as_tuple()
                 outs = [run_direct(g, dk, engine="adaptive", model=None,
-                                   source=int(s), **guard_kw)
+                                   source=int(s), validate=plan.validate,
+                                   on_nonconverge=plan.on_nonconverge,
+                                   fallback=plan.fallback,
+                                   ft_config=ft_config)
                         for s in sources]
                 for o in outs:
                     o.stats.fallbacks = (ev,) + o.stats.fallbacks
                     o.stats.engine_used = "adaptive"
                 return outs
             _check_batch_outcomes(res, [int(s) for s in sources],
-                                  max_iter_eff, on_nonconverge)
+                                  max_iter_eff, plan.on_nonconverge)
             iters = np.asarray(res.iterations)
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
             res_ws = np.asarray(res.resolve_work)
-            return [ExecResult(
+            outs = [ExecResult(
                 value=res.state[0][b], named={},
                 stats=ExecStats(rounds=1, iterations=int(iters[b]),
                                 edge_work=float(works[b]),
                                 push_iters=int(pushes[b]),
                                 pull_iters=int(iters[b]) - int(pushes[b]),
                                 resolve_work=float(res_ws[b]),
-                                engine_used="pallas"))
+                                engine_used="pallas", plan=plan))
                 for b in range(len(iters))]
-        return [run_direct(g, dk, engine=engine, mesh=mesh, axes=axes,
-                           model=model, source=int(s),
-                           push_resolution=push_resolution,
-                           switch_k=switch_k,
-                           shard_strategy=shard_strategy, **guard_kw)
+            for o in outs:
+                _plan.record_feedback(g, plan.kind, o.stats)
+            return outs
+        # Non-pallas engines have no batched fixpoint: the planner resolved
+        # batch_lane="sequential" and the guard event records the
+        # degradation on every query (satellite 3).
+        ev = guard.batch_degradation(plan.engine, len(sources)).as_tuple()
+        outs = [run_direct(g, dk, mesh=mesh, axes=axes, source=int(s),
+                           ft_config=ft_config, plan=plan)
                 for s in sources]
+        for o in outs:
+            o.stats.fallbacks = (ev,) + o.stats.fallbacks
+        return outs
 
     src_over = None if source is None else {0: int(source)}
     # frontier-masked (+) models for idempotent kernels (BFS/CC/SSSP/WP);
@@ -796,6 +860,7 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
     idempotent = dk.rop in iterate._IDEMPOTENT_OPS and dk.e_fn is None
 
     def call(engine):
+        eff = _plan.degrade_plan(plan, engine)
         pull_like = engine in ("pull", "dense", "distributed")
         eng_model = ("pull+" if pull_like else "push+") if idempotent else \
             ("pull-" if pull_like else "push-")
@@ -825,25 +890,25 @@ def run_direct(g, dk: DirectKernels, engine: str = "pull",
             from repro.kernels import ops as kops
             return kops.iterate_pallas(
                 g, [comp], plans, max_iter=dk.max_iter, tol=dk.tol,
-                direction=_pallas_direction(model), sources=src_over,
-                divergence_sentinel=divergence_sentinel,
+                sources=src_over,
                 checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
-                resume=resume, init_state=init_state, **pallas_kw)
+                resume=resume, init_state=init_state, plan=eff)
         if engine == "pallas_sharded":
             assert mesh is not None, "pallas_sharded engine needs a mesh"
             from repro.kernels import ops as kops
             return kops.iterate_pallas_sharded(
-                g, [comp], plans, mesh, axes=axes, strategy=shard_strategy,
+                g, [comp], plans, mesh, axes=axes,
                 max_iter=dk.max_iter, tol=dk.tol,
-                direction=_pallas_direction(model), sources=src_over,
-                **pallas_kw)
+                sources=src_over, plan=eff)
         raise ValueError(engine)
 
-    res, eng_used, events, retries = _dispatch_guarded(call, engine,
-                                                       fallback, ft_config)
+    res, eng_used, events, retries = _dispatch_guarded(call, plan.engine,
+                                                       plan.fallback,
+                                                       ft_config)
     stats = ExecStats(engine_used=eng_used,
                       fallbacks=tuple(ev.as_tuple() for ev in events),
-                      exec_retries=retries)
+                      exec_retries=retries, plan=plan)
     _accumulate(stats, res, 0.0)
-    _check_outcome(res, max_iter_eff, on_nonconverge)
+    _check_outcome(res, max_iter_eff, plan.on_nonconverge)
+    _plan.record_feedback(g, plan.kind, stats)
     return ExecResult(value=res.state[0], named={}, stats=stats)

@@ -90,6 +90,18 @@ class FallbackEvent:
         return (self.from_engine, self.to_engine, self.error)
 
 
+def batch_degradation(engine: str, batch_size: int) -> FallbackEvent:
+    """The planner's recorded decision that a [B]-source batch on a
+    non-pallas engine runs as B sequential queries (the engine has no
+    batched fixpoint).  Not an error — the event mirrors the plan's
+    ``batch_lane="sequential"`` so batch degradations surface in the same
+    ``ExecStats.fallbacks`` stream as guard fallbacks (DESIGN.md §14)."""
+    return FallbackEvent(
+        f"batch[{batch_size}]:{engine}", f"sequential:{engine}",
+        f"engine {engine!r} has no batched fixpoint; plan resolved "
+        "batch_lane='sequential'")
+
+
 # Degradation order: the sharded kernel engine falls back to the
 # single-device kernel engine (same fused sweeps, no collectives), which
 # falls back to the adaptive reference engine (plain segment ops — the

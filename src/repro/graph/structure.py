@@ -213,6 +213,66 @@ def validate_graph(g: Graph) -> GraphCheck:
     return chk
 
 
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """Per-graph statistics the query planner resolves knobs from
+    (``core.plan.plan_execution``; DESIGN.md §14): size, degree shape
+    (average/max out-degree and their ratio — the skew signal that separates
+    power-law R-MAT graphs from uniform ones), weight range (weighted
+    kernels engage the weighted-degree normalizer and min-plus
+    preconditions), and the process's device topology.  Computed from the
+    host arrays directly — unlike ``validate_graph`` this never *raises* on
+    contract violations, because plans must also resolve for
+    ``validate=False`` runs on malformed graphs."""
+    n: int
+    num_edges: int
+    avg_degree: float               # |E| / n (out == in in aggregate)
+    max_out_degree: int
+    max_in_degree: int
+    degree_skew: float              # max_out_degree / avg_degree (≥ 1-ish on
+                                    # uniform graphs, ≫ 1 on power-law hubs)
+    weighted: bool                  # any edge weight ≠ 1.0
+    w_min: float
+    w_max: float
+    device_count: int               # process-visible accelerator topology
+    backend: str
+
+
+_STATS_CACHE: dict = {}
+
+
+def graph_stats(g: Graph) -> GraphStats:
+    """Memoized per-graph statistics (identity key, weakref-guarded,
+    finalizer-evicted like every structure cache) — the planner's input;
+    one O(E) host scan per graph, never per query."""
+    key = id(g)
+    hit = _STATS_CACHE.get(key)
+    if hit is not None:
+        ref, st = hit
+        if ref() is g:
+            return st
+    import jax
+    out_deg = np.asarray(g.out_deg)
+    in_deg = np.asarray(g.in_deg)
+    w = np.asarray(g.by_dst.weight)
+    e = int(w.shape[0])
+    avg = e / g.n
+    max_out = int(out_deg.max()) if out_deg.size else 0
+    st = GraphStats(
+        n=g.n, num_edges=e, avg_degree=avg,
+        max_out_degree=max_out,
+        max_in_degree=int(in_deg.max()) if in_deg.size else 0,
+        degree_skew=(max_out / avg) if avg > 0 else 0.0,
+        weighted=bool(e and np.any(w != 1.0)),
+        w_min=float(w.min()) if e else 0.0,
+        w_max=float(w.max()) if e else 0.0,
+        device_count=jax.device_count(),
+        backend=jax.default_backend())
+    _STATS_CACHE[key] = (weakref.ref(g), st)
+    weakref.finalize(g, _STATS_CACHE.pop, key, None)
+    return st
+
+
 _WDEG_CACHE: dict = {}
 
 
@@ -598,7 +658,7 @@ def clear_graph_caches(g: Graph) -> int:
     entries dropped."""
     dropped = 0
     for cache in (_ELL_CACHE, _SHARDED_ELL_CACHE, _RES_CACHE, _WDEG_CACHE,
-                  _VALID_CACHE):
+                  _VALID_CACHE, _STATS_CACHE):
         stale = [k for k, (ref, _) in list(cache.items()) if ref() is g]
         for k in stale:
             if cache.pop(k, None) is not None:

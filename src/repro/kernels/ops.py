@@ -123,62 +123,32 @@ def _comps_key(comps):
                   None if cr.e_fn is None else id(cr.e_fn)) for cr in comps)
 
 
-DENSE_FRONTIER = 0.05      # documented FALLBACK switch point (switch_k=None):
-                           # frontier fraction above which the pull sweep
-                           # wins (dense reads beat frontier-proportional
-                           # row skipping)
-
-SWITCH_K = 20.0            # the default Gemini rule: push while the
-                           # frontier's outgoing edge count |E_frontier|
-                           # (Σ out_deg over active vertices — degree data
-                           # already in the layout) stays ≤ |E| / k.  This
-                           # is Gemini's actual criterion (edge mass, not
-                           # vertex fraction): a few active hubs can carry
-                           # pull-worthy edge volume, and many active leaves
-                           # can still be push-cheap.  Override per query
-                           # with switch_k=<float>; switch_k=None falls back
-                           # to the DENSE_FRONTIER vertex-fraction rule.
-
-PUSH_RESOLUTION = "sorted"  # default dst-keyed resolution of the push
-                            # sweep: "sorted" = dst-sorted segment-reduce
-                            # tile pass (frontier-proportional, DESIGN.md
-                            # §10); "scatter" = full-rectangle XLA scatter
-                            # (the reference/fallback path)
+# Knob semantics live in the planner (core.plan, DESIGN.md §14) — ops
+# re-exports the documented constants and normalizers for direct kernel
+# callers; engine-level callers arrive with an already-normalized
+# ExecutionPlan whose fields are asserted (never re-parsed) below.
+from repro.core.plan import (DENSE_FRONTIER,            # noqa: E402
+                             PUSH_RESOLUTION, SWITCH_K, _check_resolution,
+                             _normalize_switch_k, assert_normalized)
 
 
-def _normalize_switch_k(switch_k, dense_threshold=DENSE_FRONTIER):
-    """"auto" → the default Gemini k; None → the DENSE_FRONTIER fallback;
-    a positive number → that k.  Returned value is part of the executor
-    cache key.  A non-default ``dense_threshold`` combined with an active
-    Gemini rule is rejected rather than silently ignored — the fraction
-    threshold only governs the ``switch_k=None`` fallback."""
-    if isinstance(switch_k, str):
-        if switch_k != "auto":
-            raise ValueError(f"switch_k must be 'auto', None or a number, "
-                             f"got {switch_k!r}")
-        switch_k = SWITCH_K
-    elif switch_k is not None:
-        switch_k = float(switch_k)
-        if not switch_k > 0:
-            raise ValueError(f"switch_k must be > 0 (push while |E_frontier|"
-                             f" <= |E|/k), got {switch_k}")
-    if switch_k is not None and dense_threshold != DENSE_FRONTIER:
-        raise ValueError(
-            "dense_threshold only governs the switch_k=None fallback; pass "
-            "switch_k=None to use a custom frontier-fraction threshold, or "
-            "tune the Gemini rule via switch_k")
-    return switch_k
-
-
-def _check_resolution(push_resolution) -> str:
-    """None → the engine default, so callers (engine.py) can forward their
-    own optional knob unconditionally."""
-    if push_resolution is None:
-        return PUSH_RESOLUTION
-    if push_resolution not in ("scatter", "sorted"):
-        raise ValueError(f"push_resolution must be 'scatter' or 'sorted', "
-                         f"got {push_resolution!r}")
-    return push_resolution
+def _apply_plan(plan, direction, dense_threshold, switch_k, push_resolution,
+                idempotent):
+    """Resolve the direction-switch/resolution knobs of one kernels call:
+    from an ``ExecutionPlan`` (fields pre-normalized by ``plan_execution`` —
+    asserted here) when the engine lowered through the planner, else by
+    normalizing the legacy kwargs exactly as before.  Returns
+    ``(use, dense_threshold, switch_k, push_resolution)``."""
+    if plan is not None:
+        assert_normalized(plan)
+        use = _directions_used(plan.direction, idempotent)
+        return use, plan.dense_threshold, plan.switch_k, plan.push_resolution
+    use = _directions_used(direction, idempotent)
+    # the dense_threshold-vs-Gemini conflict only exists when a switch is
+    # actually traced; pinned directions ignore both knobs
+    switch_k = _normalize_switch_k(
+        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
+    return use, dense_threshold, switch_k, _check_resolution(push_resolution)
 
 
 def _directions_used(direction: str, idempotent: bool):
@@ -587,7 +557,7 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    init_state=None,
                    checkpoint_every: Optional[int] = None,
                    ckpt_dir=None, resume: bool = False,
-                   fault_hook=None) -> iterate.IterationResult:
+                   fault_hook=None, plan=None) -> iterate.IterationResult:
     """Fixpoint of the fused reduction with single-launch Pallas edge sweeps.
 
     ``direction`` selects the sweep model per DESIGN.md §2:
@@ -641,18 +611,24 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
         test-only callable invoked with the iteration count after each
         chunk — fault-injection tests raise from it to kill a run
         mid-fixpoint.
+
+    ``plan``
+        an engine-resolved ``core.plan.ExecutionPlan``: overrides
+        ``direction``/``dense_threshold``/``switch_k``/``push_resolution``/
+        ``divergence_sentinel`` with the plan's pre-normalized fields
+        (asserted, not re-parsed — DESIGN.md §14).  Cache keys are identical
+        to the legacy-kwarg path for identical decisions.
     """
     n = g.n
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
-    use = _directions_used(direction, idempotent)
-    # the dense_threshold-vs-Gemini conflict only exists when a switch is
-    # actually traced; pinned directions ignore both knobs
-    switch_k = _normalize_switch_k(
-        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
-    push_resolution = _check_resolution(push_resolution)
+    use, dense_threshold, switch_k, push_resolution = _apply_plan(
+        plan, direction, dense_threshold, switch_k, push_resolution,
+        idempotent)
+    if plan is not None:
+        divergence_sentinel = plan.divergence_sentinel
     if checkpoint_every is not None and int(checkpoint_every) < 1:
         raise ValueError("checkpoint_every must be >= 1")
     if (checkpoint_every is not None or resume) and ckpt_dir is None:
@@ -735,7 +711,7 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
                          dense_threshold: float = DENSE_FRONTIER,
                          switch_k="auto",
                          push_resolution: str = PUSH_RESOLUTION,
-                         init_state=None) -> iterate.IterationResult:
+                         init_state=None, plan=None) -> iterate.IterationResult:
     """Run B concurrent queries of one fused round in ONE launch (DESIGN.md
     §9): the compiled fixpoint of ``iterate_pallas``, ``jax.vmap``ped over a
     batch of query sources sharing one blocked-ELL layout.
@@ -765,7 +741,6 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
         interpret = jax.default_backend() != "tpu"
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
-    use = _directions_used(direction, idempotent)
     srcs = jnp.asarray(sources, jnp.int32)
     if srcs.ndim == 1:                     # [B] → [B, n_comps] per-component
         per_comp = jnp.asarray([-1 if cr.source is None else 0
@@ -775,9 +750,9 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     if srcs.ndim != 2 or srcs.shape[1] != len(comps):
         raise ValueError(f"sources must be [B] or [B, {len(comps)}], got "
                          f"shape {srcs.shape}")
-    switch_k = _normalize_switch_k(
-        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
-    push_resolution = _check_resolution(push_resolution)
+    use, dense_threshold, switch_k, push_resolution = _apply_plan(
+        plan, direction, dense_threshold, switch_k, push_resolution,
+        idempotent)
     if init_state is not None:
         init_state = tuple(jnp.asarray(a) for a in init_state)
         if len(init_state) != len(comps):
@@ -1095,7 +1070,8 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
                            dense_threshold: float = DENSE_FRONTIER,
                            switch_k="auto",
                            push_resolution: Optional[str] = None,
-                           sources: Optional[dict] = None) -> iterate.IterationResult:
+                           sources: Optional[dict] = None,
+                           plan=None) -> iterate.IterationResult:
     """Fixpoint of the fused reduction with SHARD-LOCAL fused Pallas sweeps
     under ``shard_map`` (DESIGN.md §11): each vertex-cut shard holds its own
     blocked-ELL pair, runs the existing pull/push sweeps locally (one
@@ -1121,16 +1097,25 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
         interpret = jax.default_backend() != "tpu"
     max_iter = max_iter if max_iter is not None else 2 * n + 4
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
-    use = _directions_used(direction, idempotent)
-    switch_k = _normalize_switch_k(
-        switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
-    if push_resolution not in (None, "scatter"):
-        raise ValueError(
-            "pallas_sharded resolves push sweeps with the per-shard "
-            "reference scatter; the dst-sorted resolution layout is "
-            f"single-device-only (DESIGN.md §11) — got {push_resolution!r}")
-    if strategy not in ("contiguous", "dst_hash"):
-        raise ValueError(f"unknown shard strategy {strategy!r}")
+    if plan is not None:
+        assert_normalized(plan)
+        # the planner resolves sharded push resolution to the per-shard
+        # reference scatter (an explicit "sorted" hint raised there)
+        assert plan.push_resolution == "scatter", plan.push_resolution
+        use = _directions_used(plan.direction, idempotent)
+        dense_threshold, switch_k = plan.dense_threshold, plan.switch_k
+        strategy = plan.shard_strategy
+    else:
+        use = _directions_used(direction, idempotent)
+        switch_k = _normalize_switch_k(
+            switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
+        if push_resolution not in (None, "scatter"):
+            raise ValueError(
+                "pallas_sharded resolves push sweeps with the per-shard "
+                "reference scatter; the dst-sorted resolution layout is "
+                f"single-device-only (DESIGN.md §11) — got {push_resolution!r}")
+        if strategy not in ("contiguous", "dst_hash"):
+            raise ValueError(f"unknown shard strategy {strategy!r}")
     run, args, k_shards = _sharded_executor(
         g, comps, plans, mesh, axes, strategy, max_iter, tol, block_v,
         block_e, interpret, use, dense_threshold, switch_k)

@@ -68,6 +68,10 @@ class ServiceConfig:
     iter_cost_s: float = ITER_COST_S
     launch_overhead_s: float = LAUNCH_OVERHEAD_S
     max_chunks_per_query: int = 1000   # scheduler livelock guard
+    adaptive: bool = False         # opt into the planner's recorded-stats
+                                   # feedback (switch_k/resolution adapt per
+                                   # resident graph under live traffic;
+                                   # DESIGN.md §14)
 
 
 @dataclasses.dataclass
@@ -301,11 +305,18 @@ class AnalyticsService:
                     for j, i in enumerate(joiners):
                         lane.state[c][i] = np.asarray(rows[c][j])
             init = tuple(lane.state)
-        # 2. one bounded chunk launch; converged slots retire, the rest carry
+        # 2. one bounded chunk launch; converged slots retire, the rest carry.
+        # The service plans ONCE per (graph, kind, hints) — repeated chunk
+        # launches of a lane reuse the cached ExecutionPlan (and, with
+        # cfg.adaptive, pick up the recorded-stats feedback of this graph).
+        plan = engine.plan_execution(
+            g, lane.prog, engine=self.cfg.engine, batch=B,
+            on_nonconverge="ignore", adaptive=self.cfg.adaptive,
+            default_engine="pallas")
         outs, state = engine.run_program_batch(
             g, lane.prog, [int(s) for s in lane.sources],
-            engine=self.cfg.engine, max_iter=self.cfg.chunk_iters,
-            on_nonconverge="ignore", init_state=init, return_state=True)
+            max_iter=self.cfg.chunk_iters,
+            init_state=init, return_state=True, plan=plan)
         lane.state = [np.array(s) for s in state]   # host copy: splices write
         self._launch_seq += 1
         self.batch_launches += 1
@@ -341,7 +352,8 @@ class AnalyticsService:
         while lane.pending and len(batch) < self.cfg.max_scalar_fuse:
             batch.append(lane.pending.popleft())
         prog = fusion.fuse_many([(r.rid, r.spec) for r in batch])
-        res = engine.run_program(g, prog, engine=self.cfg.engine)
+        res = engine.run_program(g, prog, engine=self.cfg.engine,
+                                 adaptive=self.cfg.adaptive)
         self.scalar_rounds += 1
         self.scalar_fused += len(batch)
         self.total_iterations += int(res.stats.iterations)
@@ -356,7 +368,8 @@ class AnalyticsService:
         g = self._graphs[gname]
         req = lane.pending.popleft()
         res = engine.run_program(g, fusion.fuse(req.spec),
-                                 engine=self.cfg.engine)
+                                 engine=self.cfg.engine,
+                                 adaptive=self.cfg.adaptive)
         self.solo_runs += 1
         self.total_iterations += int(res.stats.iterations)
         self._advance(res.stats.iterations)
