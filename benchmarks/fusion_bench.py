@@ -24,7 +24,10 @@ edge work (Σ nnz of the resolution tiles actually processed vs
 push_iters·rectangle), traced launches per class, and wall time.  The
 gated property is frontier-proportionality: sorted resolution work must
 stay strictly under the scatter rectangle whenever push iterations ran,
-and the sorted/scatter work ratio must not regress vs the baseline.
+the sorted/scatter work ratio must not regress vs the baseline, and the
+in-kernel permutation gather must move frontier-proportional bytes —
+``gather_work`` strictly under ``push_iters · n_pad · width`` with the
+scatter path reporting exactly 0 (it performs no permutation gather).
 
 ``--engines pallas`` also runs the batched-throughput section (DESIGN.md
 §9): a B-source sweep of one query shape served sequentially (the source
@@ -42,6 +45,10 @@ BFS/SSSP/PageRank — per-shard edge work and traced launches, cross-shard
 combine counts, and the compositional invariant that the global direction
 switch keeps the sharded fixpoint on the single-device iteration sequence
 (values bitwise-equal for the idempotent workloads, asserted in-bench).
+The section also compares the sharded engine's default per-shard sorted
+resolution against the per-shard scatter oracle: both must agree on
+values, and sorted resolve work must stay strictly under the scatter
+rectangle whenever push iterations ran.
 
 ``--engines pallas`` also runs the guard-overhead section (DESIGN.md §12):
 default guarded execution (validation, termination precondition, divergence
@@ -74,8 +81,9 @@ recorded-stats feedback cache must hold an entry per benched query shape.
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
 run regresses on traced launches, the fused/unfused edge-work ratio, the
-push-vs-pull work advantage, the batched executor/retrace counts, the
-sharded engine's iteration parity / launch / combine counts, the guard
+push-vs-pull work advantage, the resolution section's gather/resolve-work
+bounds, the batched executor/retrace counts, the sharded engine's
+iteration parity / launch / combine / resolution-work counts, the guard
 section's launch parity, or the serving section's queries-per-launch /
 launch / fused-round / cache-entry counts — the one comparison path shared
 by the CI bench-smoke gate and local runs.
@@ -185,13 +193,19 @@ def bench_direction(g, gname: str, weighted: bool, name: str) -> dict:
 def bench_resolution(g, gname: str, weighted: bool, name: str) -> dict:
     """Push-resolution section (DESIGN.md §10): the adaptive engine with the
     dst-sorted segment resolution vs the reference full-rectangle scatter on
-    one sparse-frontier workload.  The acceptance quantity is RESOLUTION
-    edge work: sorted must stay frontier-proportional (Σ nnz of the
+    one sparse-frontier workload.  The acceptance quantities are RESOLUTION
+    edge work — sorted must stay frontier-proportional (Σ nnz of the
     resolution tiles actually processed), strictly under the scatter path's
-    `push_iters · n_pad · width` rectangle cost, with bit-identical values.
+    `push_iters · n_pad · width` rectangle cost, with bit-identical values —
+    and GATHER work: the candidate slots the in-kernel permutation gather
+    reads, strictly under the full rectangle per push iteration (skipped
+    tiles move zero bytes) and 0 under scatter (no permutation gather).
     Wall time is reported, never gated (interpret-mode CPU noise)."""
+    from repro.graph.structure import push_resolution_cached
     from repro.kernels import edge_reduce as er
     prog = fusion.fuse(U.ALL_SPECS[name]())
+    pres = push_resolution_cached(g)
+    rectangle = float(pres.n_pad * pres.width)
 
     def one(resolution):
         engine.clear_program_caches()
@@ -219,6 +233,9 @@ def bench_resolution(g, gname: str, weighted: bool, name: str) -> dict:
         "edge_work": float(res_sorted.stats.edge_work),
         "resolve_work_sorted": float(res_sorted.stats.resolve_work),
         "resolve_work_scatter": float(res_scatter.stats.resolve_work),
+        "gather_work_sorted": float(res_sorted.stats.gather_work),
+        "gather_work_scatter": float(res_scatter.stats.gather_work),
+        "rectangle": rectangle,
         "resolve_launches": s_sorted["resolve_launches"],
         "launches_traced_sorted": s_sorted["launches"],
         "launches_traced_scatter": s_scatter["launches"],
@@ -285,9 +302,13 @@ def bench_sharded(g, gname: str, weighted: bool, name: str,
     push-iteration parity for the idempotent frontier workloads), its values
     must match (bitwise when idempotent, allclose for the float-sum PR round
     — asserted here, in-bench), and per-shard traced launches / cross-shard
-    combine counts must not grow vs the baseline.  Wall time is reported,
-    never gated.  Returns None (section skipped) when the process has fewer
-    than k devices — CI forces host devices via XLA_FLAGS."""
+    combine counts must not grow vs the baseline.  The sharded push sweep
+    resolves through its per-shard sorted stack by default — the section
+    also runs the per-shard scatter oracle and records both resolve/gather
+    works so the baseline gates the sharded sorted resolve strictly under
+    the per-shard scatter rectangle.  Wall time is reported, never gated.
+    Returns None (section skipped) when the process has fewer than k
+    devices — CI forces host devices via XLA_FLAGS."""
     import jax
     import numpy as np
     if len(jax.devices()) < k:
@@ -298,21 +319,26 @@ def bench_sharded(g, gname: str, weighted: bool, name: str,
     mesh = Mesh(np.asarray(jax.devices()[:k]), ("data",))
     idempotent = name != "PR"
 
-    def one(eng):
+    def one(eng, **kw):
         engine.clear_program_caches()
         er.reset_sweep_stats()
         if name == "PR":
             dk = U.handwritten_pagerank(g.n)
             t, res = timed(lambda: engine.run_direct(
-                g, dk, engine=eng, mesh=mesh), repeats=1)
+                g, dk, engine=eng, mesh=mesh, **kw), repeats=1)
         else:
             prog = fusion.fuse(U.ALL_SPECS[name]())
             t, res = timed(lambda: engine.run_program(
-                g, prog, engine=eng, mesh=mesh), repeats=1)
+                g, prog, engine=eng, mesh=mesh, **kw), repeats=1)
         return t, res, dict(er.SWEEP_STATS)
 
     t_s, res_s, stats_s = one("pallas_sharded")
+    _, res_sc, _ = one("pallas_sharded", push_resolution="scatter")
     t_1, res_1, stats_1 = one("pallas")
+    res_match = (np.array_equal if idempotent else
+                 lambda a, b: np.allclose(a, b, atol=1e-5))
+    assert res_match(np.asarray(res_s.value), np.asarray(res_sc.value)), \
+        f"{name}: sharded sorted resolution diverged from sharded scatter"
     v_s, v_1 = np.asarray(res_s.value), np.asarray(res_1.value)
     if idempotent:
         assert np.array_equal(v_1, v_s), \
@@ -333,6 +359,10 @@ def bench_sharded(g, gname: str, weighted: bool, name: str,
         "push_iters_sharded": res_s.stats.push_iters,
         "edge_work_sharded": float(res_s.stats.edge_work),
         "edge_work_single": float(res_1.stats.edge_work),
+        # per-shard resolution stack vs the per-shard scatter oracle
+        "resolve_work_sharded_sorted": float(res_s.stats.resolve_work),
+        "resolve_work_sharded_scatter": float(res_sc.stats.resolve_work),
+        "gather_work_sharded": float(res_s.stats.gather_work),
         "shard_work": list(res_s.stats.shard_work),
         # SPMD traces the shard body once, so trace-time sweep counts ARE
         # per-shard launches (one per direction branch per round)
@@ -650,11 +680,15 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                round(r["resolve_work_scatter"], 1),
                round(r["resolve_work_sorted"]
                      / max(r["resolve_work_scatter"], 1.0), 4),
+               round(r["gather_work_sorted"], 1),
+               round(r["gather_work_sorted"]
+                     / max(r["push_iters"] * r["rectangle"], 1.0), 4),
                r["resolve_launches"],
                round(r["t_sorted_ms"], 1), round(r["t_scatter_ms"], 1)]
               for r in resolution_rows],
              ["graph", "weights", "usecase", "push_iters", "res_work_sorted",
-              "res_work_scatter", "res_ratio", "resolve_launches",
+              "res_work_scatter", "res_ratio", "gather_work",
+              "gather_vs_rect", "resolve_launches",
               "t_sorted_ms", "t_scatter_ms"])
     if batched_rows:
         emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
@@ -671,11 +705,15 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                r["shards"], r["iterations_sharded"], r["iterations_single"],
                round(r["edge_work_sharded"], 1),
                round(r["edge_work_single"], 1),
+               round(r["resolve_work_sharded_sorted"], 1),
+               round(r["resolve_work_sharded_scatter"], 1),
+               round(r["gather_work_sharded"], 1),
                r["shard_launches_traced"], r["cross_combines"],
                round(r["t_sharded_ms"], 1), round(r["t_single_ms"], 1)]
               for r in sharded_rows],
              ["graph", "weights", "usecase", "shards", "iters_sharded",
               "iters_single", "work_sharded", "work_single",
+              "res_sorted", "res_scatter", "gather_work",
               "shard_launches", "cross_combines", "t_sharded_ms",
               "t_single_ms"])
     if guard_rows:
@@ -817,6 +855,21 @@ def compare_baseline(current: dict, baseline: dict,
                     f"{key}: sorted resolution work "
                     f"{r['resolve_work_sorted']:.0f} ≥ push_iters·|E| = "
                     f"{full_nnz:.0f} — tile compaction disengaged")
+            # in-kernel gather bounds (DESIGN.md §10): the permutation
+            # gather must be frontier-proportional — strictly under the
+            # full `push_iters · n_pad · width` rectangle it replaced —
+            # and the scatter path performs no permutation gather at all.
+            full_rect = r["push_iters"] * r.get("rectangle", 0)
+            if full_rect and not (r["gather_work_sorted"] < full_rect):
+                errors.append(
+                    f"{key}: gather work {r['gather_work_sorted']:.0f} ≥ "
+                    f"push_iters·rectangle = {full_rect:.0f} — the in-kernel "
+                    "gather stopped skipping tiles")
+            if "gather_work_scatter" in r and r["gather_work_scatter"] != 0:
+                errors.append(
+                    f"{key}: scatter path reports gather work "
+                    f"{r['gather_work_scatter']:.0f} (must be 0 — it "
+                    "performs no permutation gather)")
         b = base_res.get(key)
         if b is None:
             continue
@@ -847,6 +900,18 @@ def compare_baseline(current: dict, baseline: dict,
                 f"{key}: sharded iterations {r['iterations_sharded']} != "
                 f"single-device {r['iterations_single']} — global direction "
                 "switch diverged")
+        # Standing bound for the per-shard resolution stack (DESIGN.md
+        # §11): whenever push iterations ran, the sharded sorted resolve
+        # must stay strictly under the per-shard scatter rectangle.
+        if r.get("push_iters_sharded", 0) > 0 and \
+                "resolve_work_sharded_sorted" in r:
+            if not (r["resolve_work_sharded_sorted"]
+                    < r["resolve_work_sharded_scatter"]):
+                errors.append(
+                    f"{key}: sharded sorted resolution work "
+                    f"{r['resolve_work_sharded_sorted']:.0f} not under the "
+                    f"per-shard scatter rectangle "
+                    f"{r['resolve_work_sharded_scatter']:.0f}")
         b = base_sharded.get(key)
         if b is None:
             continue

@@ -63,6 +63,7 @@ def clear_program_caches():
     structure._RES_CACHE.clear()
     structure._WDEG_CACHE.clear()
     structure._SHARDED_ELL_CACHE.clear()
+    structure._SHARDED_RES_CACHE.clear()
     structure._VALID_CACHE.clear()
     structure._STATS_CACHE.clear()
     _plan.clear_plan_caches()
@@ -93,6 +94,7 @@ def program_cache_stats() -> dict:
            "ell_layouts": len(structure._ELL_CACHE),
            "sharded_layouts": len(structure._SHARDED_ELL_CACHE),
            "push_resolutions": len(structure._RES_CACHE),
+           "sharded_resolutions": len(structure._SHARDED_RES_CACHE),
            "graph_stats": len(structure._STATS_CACHE),
            "plans": _plan.plan_cache_size(),
            "feedback": _plan.feedback_cache_size()}
@@ -114,9 +116,16 @@ class ExecStats:
     push_iters: int = 0             # runtime per-direction iteration counts
     pull_iters: int = 0             # (direction-aware engines; 0 elsewhere)
     resolve_work: float = 0.0       # push-resolution edge work (pallas
-                                    # engine; Σ resolution-tile nnz under
+                                    # engines; Σ resolution-tile nnz under
                                     # "sorted", full rectangle under
-                                    # "scatter", 0 on pull iterations)
+                                    # "scatter", 0 on pull iterations;
+                                    # summed over shards when sharded)
+    gather_work: float = 0.0        # candidate slots read through the
+                                    # in-kernel permutation gather (pallas
+                                    # engines; equals resolve_work under
+                                    # "sorted" — skipped tiles move zero
+                                    # bytes — and 0 under "scatter", which
+                                    # performs no permutation gather)
     shards: int = 0                 # shard count of the sharded engines
                                     # (distributed / pallas_sharded)
     shard_launches: int = 0         # traced pallas launches PER SHARD
@@ -404,12 +413,15 @@ def _accumulate(stats: ExecStats, res, synth_ms: float) -> None:
     pi = getattr(res, "push_iters", 0)
     li = getattr(res, "pull_iters", 0)
     rw = getattr(res, "resolve_work", 0.0)
+    gw = getattr(res, "gather_work", 0.0)
     if isinstance(pi, int):
         stats.push_iters += pi
     if isinstance(li, int):
         stats.pull_iters += li
     if isinstance(rw, (int, float)):
         stats.resolve_work += float(rw)
+    if isinstance(gw, (int, float)):
+        stats.gather_work += float(gw)
     stats.shards = max(stats.shards, getattr(res, "shards", 0))
     stats.shard_launches += getattr(res, "shard_launches", 0)
     stats.cross_combines += getattr(res, "cross_combines", 0)
@@ -653,6 +665,7 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
             res_ws = np.asarray(res.resolve_work)
+            gat_ws = np.asarray(res.gather_work)
             convs = np.asarray(res.converged)
             for b in range(B):
                 st = stats[b]
@@ -663,6 +676,7 @@ def run_program_batch(g, prog: FusedProgram, sources: Sequence,
                 st.push_iters += int(pushes[b])
                 st.pull_iters += int(iters[b]) - int(pushes[b])
                 st.resolve_work += float(res_ws[b])
+                st.gather_work += float(gat_ws[b])
                 st.converged = st.converged and bool(convs[b])
                 for leaf in round_.leaves:
                     envs[b][leaf.name] = res.state[plan_output(leaf.plan)][b]
@@ -831,6 +845,7 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
             works = np.asarray(res.edge_work)
             pushes = np.asarray(res.push_iters)
             res_ws = np.asarray(res.resolve_work)
+            gat_ws = np.asarray(res.gather_work)
             outs = [ExecResult(
                 value=res.state[0][b], named={},
                 stats=ExecStats(rounds=1, iterations=int(iters[b]),
@@ -838,6 +853,7 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
                                 push_iters=int(pushes[b]),
                                 pull_iters=int(iters[b]) - int(pushes[b]),
                                 resolve_work=float(res_ws[b]),
+                                gather_work=float(gat_ws[b]),
                                 engine_used="pallas", plan=plan))
                 for b in range(len(iters))]
             for o in outs:

@@ -76,11 +76,6 @@ ADAPT_PUSH_LO = 0.25        # ≤ this push fraction (with pushes observed) →
 ENGINES = ("pull", "push", "adaptive", "dense", "pallas", "distributed",
            "pallas_sharded")
 
-_SHARDED_RESOLUTION_MSG = (
-    "pallas_sharded resolves push sweeps with the per-shard "
-    "reference scatter; the dst-sorted resolution layout is "
-    "single-device-only (DESIGN.md §11) — got {push_resolution!r}")
-
 
 # ---------------------------------------------------------------------------
 # Knob normalizers — THE single copy (engine.py and ops.py used to each run
@@ -139,18 +134,6 @@ def _check_on_nonconverge(on_nonconverge: str) -> str:
         raise ValueError(f"on_nonconverge must be 'raise', 'warn' or "
                          f"'ignore', got {on_nonconverge!r}")
     return on_nonconverge
-
-
-def _resolve_resolution(engine: str, hint) -> str:
-    """Engine-aware resolution: the sharded engine resolves push with the
-    per-shard reference scatter (an explicit "sorted" request raises with
-    the kernels-layer text); every other engine takes the documented
-    "sorted" default."""
-    if engine == "pallas_sharded":
-        if hint in (None, "scatter"):
-            return "scatter"
-        raise ValueError(_SHARDED_RESOLUTION_MSG.format(push_resolution=hint))
-    return _check_resolution(hint)
 
 
 def assert_normalized(plan: "ExecutionPlan") -> None:
@@ -511,13 +494,14 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
             is not None else "documented DENSE_FRONTIER default")
 
     # --- push resolution -----------------------------------------------------
-    res = _resolve_resolution(eng, push_resolution)
-    res_reason = ("per-shard reference scatter (sharded engine)"
-                  if eng == "pallas_sharded" else
-                  ("caller hint" if push_resolution is not None else
-                   "documented dst-sorted default"))
+    # Engine-independent since the sharded engine grew its own per-shard
+    # resolution stack: every pallas engine takes the dst-sorted default,
+    # "scatter" stays the reference oracle everywhere.
+    res = _check_resolution(push_resolution)
+    res_reason = ("caller hint" if push_resolution is not None else
+                  "documented dst-sorted default (all pallas engines)")
     if (adaptive and idempotent and push_resolution is None
-            and eng != "pallas_sharded" and fb is not None):
+            and fb is not None):
         flipped = _adapted_resolution(fb)
         if flipped is not None:
             res = flipped
@@ -564,14 +548,16 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
 
 def degrade_plan(plan: ExecutionPlan, engine: str) -> ExecutionPlan:
     """The plan a guard-fallback step executes under: same normalized knobs,
-    target engine, with the engine-DEPENDENT resolution re-resolved from the
-    raw hint (a sharded plan's forced scatter must not shadow the
-    single-device sorted default on the way down the chain)."""
+    target engine, with the resolution re-resolved from the raw hint —
+    resolution is engine-independent now that the sharded engine runs its
+    own per-shard sorted stack, so an explicit caller hint (e.g. a pinned
+    "scatter" oracle) survives the hop and a hintless plan lands back on
+    the documented dst-sorted default."""
     if engine == plan.engine:
         return plan
     return dataclasses.replace(
         plan, engine=engine,
-        push_resolution=_resolve_resolution(engine, plan.resolution_hint))
+        push_resolution=_check_resolution(plan.resolution_hint))
 
 
 def _axes_key(axes) -> tuple:

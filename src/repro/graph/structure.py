@@ -567,9 +567,13 @@ class PushResolution:
     ``to_blocked_ell(direction="in")`` slot order, so a reduction over this
     rectangle is bit-identical to the pull sweep's reduction tree).
     ``valid`` marks real slots; ``src_tile[v, k]`` is the flat id of the
-    out-layout grid tile owning the slot, which maps the push sweep's
-    frontier tile-activity bitmap onto resolution tiles each iteration
-    (`edge_reduce.resolution_tile_activity`) — candidates born in a
+    out-layout grid tile owning the slot.  ``contrib[t]`` is the
+    precomputed *contributing out-tile list* of resolution tile t (flat
+    row-major tile ids, −1 padded to the widest list): the unique out-tiles
+    whose candidates land in t.  The per-iteration activity test
+    (`edge_reduce.resolution_tile_activity`) ORs the push sweep's frontier
+    tile-activity bitmap over these lists — O(tiles·c_max) instead of a
+    dense O(n_pad·width) gather over ``src_tile`` — candidates born in a
     skipped out-tile are identities, so their resolution tiles skip too,
     making resolution work frontier-proportional.  ``tile_nnz`` counts real
     slots per resolution tile (the skip test + the work accounting unit).
@@ -584,21 +588,31 @@ class PushResolution:
     valid: jnp.ndarray      # [n_pad, width] bool
     src_tile: jnp.ndarray   # [n_pad, width] int32 flat out-tile id
     tile_nnz: jnp.ndarray   # [n_pad/block_v, width/block_e] int32
+    contrib: jnp.ndarray    # [n_tiles, c_max] int32 out-tile ids, −1 pad
 
 
-def to_push_resolution(g: Graph, block_v: int = 8,
-                       block_e: int = 128) -> PushResolution:
+def to_push_resolution(g: Graph, block_v: int = 8, block_e: int = 128,
+                       min_width: int = 0,
+                       min_out_width: int = 0) -> PushResolution:
     """Build the dst-major resolution permutation for the push sweep.
 
     Slot assignment replays ``_fill_order_slots`` / ``_padded_width`` — the
     exact rules ``to_blocked_ell`` builds both directions with — so the
     correspondence is exact by construction: edge i sits at out-slot
     ``(src[i], k_out)`` and dst-major slot ``(dst[i], k_in)``, and
-    ``in2out[dst[i], k_in] = src[i]·width_out + k_out``."""
+    ``in2out[dst[i], k_in] = src[i]·width_out + k_out``.
+
+    ``min_width`` / ``min_out_width`` (multiples of ``block_e``) floor the
+    padded rectangle widths: the sharded stack widens every shard's
+    resolution to the widest shard so the flat ``in2out`` indices address
+    the widened out rectangles ``to_sharded_ell`` actually sweeps.  Slot
+    assignment never changes — widening only appends padding columns."""
     src, dst, _w, _c = g.host_edges()
     n = g.n
-    w_in = _padded_width(np.bincount(dst, minlength=n), block_e)
-    w_out = _padded_width(np.bincount(src, minlength=n), block_e)
+    w_in = max(_padded_width(np.bincount(dst, minlength=n), block_e),
+               int(min_width))
+    w_out = max(_padded_width(np.bincount(src, minlength=n), block_e),
+                int(min_out_width))
     n_pad = ((n + block_v - 1) // block_v) * block_v
     in2out = np.zeros((n_pad, w_in), dtype=np.int64)
     valid = np.zeros((n_pad, w_in), dtype=bool)
@@ -618,13 +632,35 @@ def to_push_resolution(g: Graph, block_v: int = 8,
     tile_nnz = valid.reshape(n_pad // block_v, block_v,
                              w_in // block_e, block_e) \
         .sum(axis=(1, 3)).astype(np.int32)
+    # Contributing out-tile lists: for each resolution tile, the unique
+    # out-layout tiles whose real slots land in it (one host pass over the
+    # edges).  Per-edge tile coordinates need no rectangle materialisation:
+    # the edge at dst-major slot (dst, k_in) sits in resolution tile
+    # (dst//block_v, k_in//block_e) and came from out-tile
+    # (src//block_v, k_out//block_e).
+    n_j_in = w_in // block_e
+    n_tiles = (n_pad // block_v) * n_j_in
+    n_out_tiles = (n_pad // block_v) * n_j_out
+    r_tile = (dst // block_v).astype(np.int64) * n_j_in + k_in // block_e
+    s_tile = (src // block_v).astype(np.int64) * n_j_out + k_out // block_e
+    pair = np.unique(r_tile * n_out_tiles + s_tile)
+    r_ids = pair // n_out_tiles
+    s_ids = pair % n_out_tiles
+    counts = np.bincount(r_ids, minlength=n_tiles)
+    c_max = int(max(1, counts.max() if counts.size else 1))
+    contrib = np.full((n_tiles, c_max), -1, dtype=np.int32)
+    # np.unique returns pairs sorted, so r_ids is sorted: rank-within-group
+    # via searchsorted, exactly like _fill_order_slots
+    slot = np.arange(r_ids.size) - np.searchsorted(r_ids, r_ids)
+    contrib[r_ids, slot] = s_ids
     return PushResolution(
         n=n, n_pad=n_pad, width=w_in, out_width=w_out,
         block_v=block_v, block_e=block_e,
         in2out=jnp.asarray(in2out.astype(np.int32)),
         valid=jnp.asarray(valid),
         src_tile=jnp.asarray(src_tile.astype(np.int32)),
-        tile_nnz=jnp.asarray(tile_nnz))
+        tile_nnz=jnp.asarray(tile_nnz),
+        contrib=jnp.asarray(contrib))
 
 
 _RES_CACHE: dict = {}
@@ -647,6 +683,101 @@ def push_resolution_cached(g: Graph, block_v: int = 8,
     return res
 
 
+# ---------------------------------------------------------------------------
+# Sharded push-resolution stacks for the pallas_sharded engine (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPushResolution:
+    """Per-shard dst-sorted resolution layouts of one vertex-cut, stacked on
+    a leading shard axis so ``shard_map`` can split them with ``P(axes)``.
+
+    Shard j's slice ``[j]`` is ``to_push_resolution`` of the j-th
+    ``partition.shard_subgraphs`` block, built directly against the WIDENED
+    rectangle widths (max over shards, the widths ``to_sharded_ell``
+    actually sweeps) so the flat ``in2out`` indices address the widened
+    out-rectangle candidates without any re-indexing.  A shard-local sorted
+    resolve over its slice is therefore bit-identical to a single-device
+    sorted resolve over that shard's edge subset, and the cross-shard
+    monoid/lex combine contract is unchanged (DESIGN.md §11).  ``contrib``
+    slices are −1-padded to the widest shard's list width."""
+    k: int
+    n: int
+    n_pad: int
+    width: int              # dst-major width, max over shards
+    out_width: int          # out-rectangle width, max over shards
+    block_v: int
+    block_e: int
+    strategy: str
+    in2out: jnp.ndarray     # [k, n_pad, width] int32
+    valid: jnp.ndarray      # [k, n_pad, width] bool
+    src_tile: jnp.ndarray   # [k, n_pad, width] int32
+    tile_nnz: jnp.ndarray   # [k, n_pad/block_v, width/block_e] int32
+    contrib: jnp.ndarray    # [k, n_tiles, c_max] int32, −1 pad
+
+
+def to_sharded_push_resolution(g: Graph, k: int, strategy: str = "contiguous",
+                               block_v: int = 8,
+                               block_e: int = 128) -> ShardedPushResolution:
+    """Build the stacked per-shard push-resolution stack of a k-way
+    vertex-cut.  The widened widths are computed FIRST (max over shards of
+    each shard's own padded widths — the same rule ``to_sharded_ell`` pads
+    with) and every shard's permutation is built against them, so in2out is
+    valid for the widened out rectangles by construction rather than by a
+    fragile post-hoc index fixup."""
+    from repro.graph.partition import shard_subgraphs  # lazy (see above)
+    subs = shard_subgraphs(g, k, strategy)
+    w_in = w_out = 0
+    for sub in subs:
+        s_src, s_dst, _w, _c = sub.host_edges()
+        w_in = max(w_in, _padded_width(np.bincount(s_dst, minlength=sub.n),
+                                       block_e))
+        w_out = max(w_out, _padded_width(np.bincount(s_src, minlength=sub.n),
+                                         block_e))
+    rs = [to_push_resolution(sub, block_v=block_v, block_e=block_e,
+                             min_width=w_in, min_out_width=w_out)
+          for sub in subs]
+    c_max = max(r.contrib.shape[1] for r in rs)
+
+    def widen_contrib(c):
+        out = np.full((c.shape[0], c_max), -1, dtype=np.int32)
+        out[:, :c.shape[1]] = np.asarray(c)
+        return out
+
+    return ShardedPushResolution(
+        k=k, n=g.n, n_pad=rs[0].n_pad, width=w_in, out_width=w_out,
+        block_v=block_v, block_e=block_e, strategy=strategy,
+        in2out=jnp.asarray(np.stack([np.asarray(r.in2out) for r in rs])),
+        valid=jnp.asarray(np.stack([np.asarray(r.valid) for r in rs])),
+        src_tile=jnp.asarray(np.stack([np.asarray(r.src_tile) for r in rs])),
+        tile_nnz=jnp.asarray(np.stack([np.asarray(r.tile_nnz) for r in rs])),
+        contrib=jnp.asarray(np.stack([widen_contrib(r.contrib) for r in rs])))
+
+
+_SHARDED_RES_CACHE: dict = {}
+
+
+def sharded_push_resolution_cached(g: Graph, k: int,
+                                   strategy: str = "contiguous",
+                                   block_v: int = 8,
+                                   block_e: int = 128) -> ShardedPushResolution:
+    """Memoized ``to_sharded_push_resolution`` — cached per (graph, k,
+    strategy, tile shape) exactly like ``sharded_ell_cached`` (identity key,
+    weakref-guarded, finalizer-evicted), so repeated sharded push queries
+    never re-partition or re-sort."""
+    key = (id(g), k, strategy, block_v, block_e)
+    hit = _SHARDED_RES_CACHE.get(key)
+    if hit is not None:
+        ref, res = hit
+        if ref() is g:
+            return res
+    res = to_sharded_push_resolution(g, k, strategy=strategy,
+                                     block_v=block_v, block_e=block_e)
+    _SHARDED_RES_CACHE[key] = (weakref.ref(g), res)
+    weakref.finalize(g, _SHARDED_RES_CACHE.pop, key, None)
+    return res
+
+
 def clear_graph_caches(g: Graph) -> int:
     """Drop every cached derived structure of ONE graph — the selective
     counterpart of ``engine.clear_program_caches`` used by the serving
@@ -657,8 +788,9 @@ def clear_graph_caches(g: Graph) -> int:
     executors, which carry no per-graph data).  Returns the number of
     entries dropped."""
     dropped = 0
-    for cache in (_ELL_CACHE, _SHARDED_ELL_CACHE, _RES_CACHE, _WDEG_CACHE,
-                  _VALID_CACHE, _STATS_CACHE):
+    for cache in (_ELL_CACHE, _SHARDED_ELL_CACHE, _RES_CACHE,
+                  _SHARDED_RES_CACHE, _WDEG_CACHE, _VALID_CACHE,
+                  _STATS_CACHE):
         stale = [k for k, (ref, _) in list(cache.items()) if ref() is g]
         for k in stale:
             if cache.pop(k, None) is not None:

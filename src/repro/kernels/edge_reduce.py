@@ -84,10 +84,17 @@ _INT_OP = {"or": "max", "and": "min"}
 # they record which direction each executed iteration actually took;
 # "resolve_work" likewise accumulates the runtime resolution edge work
 # (Σ tile_nnz of the resolution tiles actually processed — the quantity
-# fusion_bench gates as frontier-proportional).
+# fusion_bench gates as frontier-proportional).  "gather_work" counts the
+# candidate slots actually read through the in2out permutation by the
+# in-kernel gather (Σ tile_nnz of the ACTIVE resolution tiles per push
+# iteration): skipped tiles gather zero bytes, so the counter is strictly
+# below the full out-rectangle n_pad·width the pre-kernel XLA gather used
+# to touch every iteration — the frontier-proportional data-movement
+# quantity fusion_bench gates.
 SWEEP_STATS = {"launches": 0, "pull_launches": 0, "push_launches": 0,
                "resolve_launches": 0,
-               "pull_iters": 0, "push_iters": 0, "resolve_work": 0.0}
+               "pull_iters": 0, "push_iters": 0, "resolve_work": 0.0,
+               "gather_work": 0.0}
 
 
 def reset_sweep_stats():
@@ -329,22 +336,25 @@ def tile_activity_push(tile_nnz, active_i32, block_v: int):
     return ((tile_nnz > 0) & row_act[:, None]).astype(jnp.int32)
 
 
-def resolution_tile_activity(res_valid, res_src_tile, push_tile_act,
-                             res_tile_nnz, block_v: int, block_e: int):
+def resolution_tile_activity(res_contrib, push_tile_act, res_tile_nnz):
     """Per-tile activity bitmap of the dst-sorted resolution pass.
 
     A resolution tile holds candidates gathered from out-layout slots; a
     candidate is non-identity only if its OUT tile ran (``push_tile_act``
     from ``tile_activity_push``), so a resolution tile whose real slots all
     map into skipped out-tiles contains only identities and can skip too.
-    ``res_src_tile`` is the precomputed slot → flat-out-tile map
-    (structure.PushResolution); the test is one int gather + block-any in
-    XLA, the push-side mirror of ``tile_activity``.  Σ res_tile_nnz over
-    the tiles this bitmap keeps IS the resolution edge work fusion_bench
-    gates as frontier-proportional."""
+    ``res_contrib`` is the precomputed per-resolution-tile contributing
+    out-tile list (structure.PushResolution.contrib, −1 padded): the test
+    is a tile-granular gather + OR over those lists — O(tiles·c_max), not
+    the O(n_pad·width) dense gather over the slot→tile map the first
+    version paid every iteration.  Σ res_tile_nnz over the tiles this
+    bitmap keeps IS the resolution edge work fusion_bench gates as
+    frontier-proportional."""
     n_i, n_j = res_tile_nnz.shape
-    act = res_valid & (push_tile_act.reshape(-1)[res_src_tile] != 0)
-    any_act = act.reshape(n_i, block_v, n_j, block_e).any(axis=(1, 3))
+    flat_act = push_tile_act.reshape(-1)
+    hit = (res_contrib >= 0) & \
+        (flat_act[jnp.clip(res_contrib, 0, flat_act.shape[0] - 1)] != 0)
+    any_act = hit.any(axis=1).reshape(n_i, n_j)
     return ((res_tile_nnz > 0) & any_act).astype(jnp.int32)
 
 
@@ -422,12 +432,13 @@ def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
 
     ``"sorted"`` — the dst-sorted segment-reduction path.  ``res`` must be
     ``(in2out, valid, res_tile_act)`` from ``structure.PushResolution`` +
-    ``resolution_tile_activity``: candidates gather through the dst-major
-    permutation into the in-rectangle (row v = the contiguous candidate
-    segment of dst v) and a second Pallas tile pass lex-reduces only the
-    resolution tiles whose candidates came from frontier-active out-tiles,
-    finishing with the SAME cross-tile fold as the pull sweep — resolution
-    work is Σ tile_nnz of processed resolution tiles, and the reduction is
+    ``resolution_tile_activity``: a second Pallas tile pass lex-reduces
+    only the resolution tiles whose candidates came from frontier-active
+    out-tiles, gathering each kept tile's candidates through the dst-major
+    permutation INSIDE the kernel (row v = the contiguous candidate
+    segment of dst v; skipped tiles move zero candidate bytes), finishing
+    with the SAME cross-tile fold as the pull sweep — resolution work is
+    Σ tile_nnz of processed resolution tiles, and the reduction is
     bit-identical to the pull sweep's tree (even for float sums).
 
     ``"scatter"`` — the reference full-rectangle scatter pass in plain jnp
@@ -539,22 +550,25 @@ def fused_ell_push_sweep(dsts, weight, capacity, mask, tile_act, states,
     return red, hp
 
 
-def _resolve_kernel(tile_act_ref, valid_ref, *rest, n_comps, plan_specs,
-                    idents):
+def _resolve_kernel(tile_act_ref, valid_ref, in2out_ref, *rest, n_comps,
+                    plan_specs, idents):
     """One (BLOCK_V dst rows × BLOCK_E candidate slots) tile of the
     dst-sorted push resolution.
 
-    ``rest`` = the dst-major candidate rectangles (``n_comps`` tiles — the
-    push sweep's per-edge candidates gathered through the PushResolution
-    permutation, identity-filled on invalid slots) followed by one
-    [block_v, 1] output per plan per lex level.  The body is exactly the
-    reduction half of ``_fused_kernel`` — same lex chain, same tie masking,
-    same per-tile candidate outputs — minus the gather/propagate (the
-    values were already propagated by the push kernel), so the fold that
-    finishes the job is the pull sweep's ``_fold_tile_candidates`` and the
-    overall reduction tree is bit-identical to pull's.  Tiles whose
+    ``rest`` = the push sweep's FULL out-rectangle candidate arrays
+    (``n_comps`` whole-array refs — every grid step maps the same (0, 0)
+    block) followed by one [block_v, 1] output per plan per lex level.
+    The permutation gather lives HERE, under ``pl.when``: each active tile
+    reads its own ``in2out`` block and gathers its candidates out of the
+    out rectangle, identity-filling invalid slots — so a tile whose
     ``tile_act`` bit is 0 (all candidates born in skipped out-tiles, or all
-    padding) short-circuit via ``pl.when`` and emit identities (C6)."""
+    padding) short-circuits and performs ZERO gather work, where the old
+    pre-kernel XLA gather touched the full rectangle every iteration.  The
+    reduction body is exactly the reduction half of ``_fused_kernel`` —
+    same lex chain, same tie masking, same per-tile candidate outputs — so
+    the fold that finishes the job is the pull sweep's
+    ``_fold_tile_candidates`` and the overall reduction tree is
+    bit-identical to pull's."""
     cand_refs = rest[:n_comps]
     out_refs = rest[n_comps:]
 
@@ -568,7 +582,12 @@ def _resolve_kernel(tile_act_ref, valid_ref, *rest, n_comps, plan_specs,
     @pl.when(tile_act_ref[0, 0] != 0)
     def _tile_body():
         mask = valid_ref[...]
-        cands = [cand_refs[k][...] for k in range(n_comps)]
+        idx = in2out_ref[...]
+        cands = []
+        for k in range(n_comps):
+            ident = jnp.asarray(idents[k], cand_refs[k].dtype)
+            got = cand_refs[k][...].reshape(-1)[idx]
+            cands.append(jnp.where(mask, got, ident))
         oi = 0
         for spec in plan_specs:
             tie = mask
@@ -587,11 +606,13 @@ def _resolve_push_sorted(cand_outs, in2out, valid, res_tile_act, *, plans,
                          interpret):
     """Dst-sorted segment-reduction resolution (DESIGN.md §10).
 
-    Gathers the push sweep's out-rectangle candidates through the
-    precomputed dst-major permutation (one XLA gather per component — the
-    permutation replaces the full-rectangle scatter), then runs the
-    ``_resolve_kernel`` tile pass over the resolution tiles ``res_tile_act``
-    keeps, and finishes with the pull sweep's cross-tile fold."""
+    Runs the ``_resolve_kernel`` tile pass over the resolution tiles
+    ``res_tile_act`` keeps, with the permutation gather INSIDE the kernel:
+    the raw out-rectangle candidates go in whole (a (0, 0)-mapped
+    whole-array BlockSpec per component, the pull sweep's ``full`` idiom)
+    and each active tile gathers only its own slots through its ``in2out``
+    block — skipped tiles move zero candidate bytes.  Finishes with the
+    pull sweep's cross-tile fold."""
     pos_of = {c: k for k, c in enumerate(comps_order)}
     plan_specs = tuple(tuple((pos_of[c], _INT_OP.get(op, op)) for c, op in s)
                        for s in plans)
@@ -599,18 +620,13 @@ def _resolve_push_sorted(cand_outs, in2out, valid, res_tile_act, *, plans,
     n_i, n_j = n_pad // block_v, w_in // block_e
     grid = (n_i, n_j)
 
-    cand_in = []
-    for k, _c in enumerate(comps_order):
-        ident = jnp.asarray(ident_scalars[k], dtypes[k])
-        cand_in.append(jnp.where(valid, cand_outs[k].reshape(-1)[in2out],
-                                 ident))
-
     tile = pl.BlockSpec((block_v, block_e), lambda i, j: (i, j))
     one = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
     cand = pl.BlockSpec((block_v, 1), lambda i, j: (i, j))
 
-    args = [res_tile_act, valid] + cand_in
-    specs = [one, tile] + [tile] * len(cand_in)
+    args = [res_tile_act, valid, in2out] + list(cand_outs)
+    specs = [one, tile, tile] + [full(c) for c in cand_outs]
     out_shapes, out_specs = [], []
     for spec in plans:
         for c, _op in spec:

@@ -32,10 +32,12 @@ convergence via the existing active mask (DESIGN.md §9).
 ``iterate_pallas_sharded`` composes this engine with the distributed
 vertex-cut model (DESIGN.md §11): every shard holds its own blocked-ELL
 pair (``structure.sharded_ell_cached``), runs the SAME fused sweeps
-shard-locally inside ``shard_map``, and merges per-vertex partials with
-monoid/lex collectives; the direction switch stays global via a psum'd
-frontier edge mass, so the sharded fixpoint walks the exact iteration
-sequence of the single-device one.
+shard-locally inside ``shard_map`` — including the dst-sorted push
+resolution over each shard's own ``PushResolution`` stack
+(``structure.sharded_push_resolution_cached``) — and merges per-vertex
+partials with monoid/lex collectives; the direction switch stays global
+via a psum'd frontier edge mass, so the sharded fixpoint walks the exact
+iteration sequence of the single-device one.
 
 The other wrappers expose the embedding-bag and ELL-softmax kernels behind
 plain jit'd functions that the models call.
@@ -54,7 +56,8 @@ from repro.core.fusion import Lex
 from repro.graph import segment
 from repro.graph.structure import (Graph, blocked_ell_cached,
                                    push_resolution_cached,
-                                   sharded_ell_cached, w_out_deg)
+                                   sharded_ell_cached,
+                                   sharded_push_resolution_cached, w_out_deg)
 from repro.kernels import edge_reduce as _er
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import segment_softmax as _ss
@@ -190,7 +193,8 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     with ``srcs`` an [n_comps] int32 vector, so one compiled executor serves
     every graph with the same padded shapes and EVERY query source without
     retracing.  It returns the full exit diagnostics
-    ``(state, k, work, pushes, res_work, div, resid, active_n)``.
+    ``(state, k, work, pushes, res_work, gather_work, div, resid,
+    active_n)``.
 
     ``use`` = ("pull",) | ("push",) | ("pull", "push"); with both, each
     iteration picks its sweep via ``lax.cond`` — both branches trace (two
@@ -257,7 +261,7 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
         share."""
         ell, out_deg, wdeg, res_arrays, _ = _split(arrays)
         if sorted_res:
-            res_in2out, res_valid, res_src_tile, res_nnz = res_arrays
+            res_in2out, res_valid, res_contrib, res_nnz = res_arrays
         n_pad = ell[use[0]][0].shape[0]
         out_deg_pad = jnp.zeros(n_pad, jnp.float32).at[:n].set(
             jnp.maximum(out_deg, 1).astype(jnp.float32))
@@ -273,10 +277,12 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
 
         def sweep(d, state_d, active_i32, tile_act, need_hp):
             """One fused sweep + its dst-keyed resolution.  Returns
-            (red, hp, resolution edge work): 0 for pull (the cross-tile
-            fold is O(n_pad·n_tiles) elementwise — not edge work), the
-            kept resolution tiles' Σ nnz for sorted push, and the full
-            rectangle for the reference scatter."""
+            (red, hp, resolution edge work, gather work): 0/0 for pull (the
+            cross-tile fold is O(n_pad·n_tiles) elementwise — not edge
+            work), the kept resolution tiles' Σ nnz for sorted push (the
+            in-kernel gather reads exactly those slots — skipped tiles move
+            zero candidate bytes), and rectangle/0 for the reference
+            scatter (full-rectangle work, no permutation gather)."""
             nbrs, weight, capacity, mask, _nnz = ell[d]
             states = {c: state_d[c] for c in comps_order}
             common = dict(plans=plan_levels, idents=idents, p_fns=p_fns,
@@ -287,21 +293,21 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 red, hp = _er.fused_ell_sweep(
                     nbrs, weight, capacity, mask, tile_act, states,
                     active_i32, out_deg_pad, **common)
-                return red, hp, jnp.float32(0)
+                return red, hp, jnp.float32(0), jnp.float32(0)
             if sorted_res:
                 res_tile_act = _er.resolution_tile_activity(
-                    res_valid, res_src_tile, tile_act, res_nnz,
-                    block_v, block_e)
+                    res_contrib, tile_act, res_nnz)
                 red, hp = _er.fused_ell_push_sweep(
                     nbrs, weight, capacity, mask, tile_act, states,
                     active_i32, out_deg_pad, resolution="sorted",
                     res=(res_in2out, res_valid, res_tile_act), **common)
                 res_w = jnp.sum(res_nnz * res_tile_act).astype(jnp.float32)
-                return red, hp, res_w
+                return red, hp, res_w, res_w
             red, hp = _er.fused_ell_push_sweep(
                 nbrs, weight, capacity, mask, tile_act, states,
                 active_i32, out_deg_pad, resolution="scatter", **common)
-            return red, hp, jnp.float32(nbrs.shape[0] * nbrs.shape[1])
+            return (red, hp, jnp.float32(nbrs.shape[0] * nbrs.shape[1]),
+                    jnp.float32(0))
 
         def masked_branch(d):
             """One frontier-masked (+model) sweep in direction ``d``; edge
@@ -315,13 +321,15 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 else:
                     tile_act = _er.tile_activity_push(tile_nnz, active_i32,
                                                       block_v)
-                red, _, res_w = sweep(d, state_d, active_i32, tile_act, False)
+                red, _, res_w, gat_w = sweep(d, state_d, active_i32, tile_act,
+                                             False)
                 w_inc = jnp.sum((tile_nnz * tile_act)).astype(jnp.float32)
-                return tuple(red[c] for c in comps_order), w_inc, res_w
+                return tuple(red[c] for c in comps_order), w_inc, res_w, gat_w
             return branch
 
         def body(carry):
-            state, active, k, work, pushes, res_work, div, resid = carry
+            (state, active, k, work, pushes, res_work, gather_work, div,
+             resid) = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             if idempotent:
                 active_i32 = active.astype(jnp.int32)
@@ -341,17 +349,18 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                         # never active after iteration 1, must not dilute).
                         frac = jnp.sum(active.astype(jnp.float32)) / n
                         use_push = frac <= dense_threshold
-                    red_t, w_inc, res_w = jax.lax.cond(
+                    red_t, w_inc, res_w, gat_w = jax.lax.cond(
                         use_push, masked_branch("push"), masked_branch("pull"),
                         (state_d, active_i32))
                     pushes = pushes + use_push.astype(jnp.int32)
                 else:
-                    red_t, w_inc, res_w = masked_branch(use[0])(
+                    red_t, w_inc, res_w, gat_w = masked_branch(use[0])(
                         (state_d, active_i32))
                     pushes = pushes + (1 if use[0] == "push" else 0)
                 red = {c: red_t[i] for i, c in enumerate(comps_order)}
                 work = work + w_inc
                 res_work = res_work + res_w
+                gather_work = gather_work + gat_w
                 new_d = {}
                 for p in plans:
                     new_d.update(iterate.plan_merge(p, state_d, red,
@@ -362,9 +371,10 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 d = use[0]
                 work = work + num_edges
                 tiles_static = (ell[d][4] > 0).astype(jnp.int32)
-                red, hp, res_w = sweep(d, state_d, ones_act, tiles_static,
-                                       True)
+                red, hp, res_w, gat_w = sweep(d, state_d, ones_act,
+                                              tiles_static, True)
                 res_work = res_work + res_w
+                gather_work = gather_work + gat_w
                 red = iterate._apply_epilogue(comps, red)
                 new_d = iterate._recompute_merge(plans, comps_by_idx,
                                                  state_d, red, hp)
@@ -379,10 +389,11 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 div = div | iterate._divergence(comps, new)
                 resid = iterate._residual(comps, new, state)
                 ch = ch & ~div
-            return new, ch, k + 1, work, pushes, res_work, div, resid
+            return (new, ch, k + 1, work, pushes, res_work, gather_work,
+                    div, resid)
 
         def cond(carry):
-            _, active, k, _, _, _, _, _ = carry
+            _, active, k, _, _, _, _, _, _ = carry
             return jnp.any(active) & (k < k_stop)
 
         return jax.lax.while_loop(cond, body, carry0)
@@ -395,13 +406,15 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
         state0 = _padded_init_state(comps, n, n_pad, srcs)
         return (state0, jnp.ones(n_pad, bool), jnp.int32(0),
                 jnp.float32(0), jnp.int32(0), jnp.float32(0),
-                jnp.asarray(False), jnp.float32(0))
+                jnp.float32(0), jnp.asarray(False), jnp.float32(0))
 
     def run(*arrays):
         carry = _fixpoint(arrays, _init(arrays), max_iter)
-        state, active, k, work, pushes, res_work, div, resid = carry
+        (state, active, k, work, pushes, res_work, gather_work, div,
+         resid) = carry
         active_n = jnp.sum(active[:n].astype(jnp.int32))
-        return state, k, work, pushes, res_work, div, resid, active_n
+        return (state, k, work, pushes, res_work, gather_work, div, resid,
+                active_n)
 
     if warm and not batch:
         raise ValueError("warm start rows are a batched-executor feature; "
@@ -427,16 +440,18 @@ def _build_pallas_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             def run_warm(*all_args):
                 arrays = all_args[:n_shared + 1]      # shared + this row's srcs
                 state0 = all_args[n_shared + 1:]      # per-component [n] rows
-                st, active, k, work, pushes, res_work, div, resid = \
-                    _init(arrays)
+                (st, active, k, work, pushes, res_work, gather_work, div,
+                 resid) = _init(arrays)
                 st = tuple(ref.at[:n].set(s.astype(ref.dtype))
                            for ref, s in zip(st, state0))
                 carry = _fixpoint(
-                    arrays, (st, active, k, work, pushes, res_work, div,
-                             resid), max_iter)
-                state, active, k, work, pushes, res_work, div, resid = carry
+                    arrays, (st, active, k, work, pushes, res_work,
+                             gather_work, div, resid), max_iter)
+                (state, active, k, work, pushes, res_work, gather_work, div,
+                 resid) = carry
                 active_n = jnp.sum(active[:n].astype(jnp.int32))
-                return state, k, work, pushes, res_work, div, resid, active_n
+                return (state, k, work, pushes, res_work, gather_work, div,
+                        resid, active_n)
 
             return jax.jit(jax.vmap(
                 run_warm,
@@ -502,7 +517,7 @@ def _pallas_executor(g, comps, plans, max_iter, tol, block_v, block_e,
     args.append(g.out_deg)
     args.append(w_out_deg(g))
     if res is not None:
-        args += [res.in2out, res.valid, res.src_tile, res.tile_nnz]
+        args += [res.in2out, res.valid, res.contrib, res.tile_nnz]
     return run, args
 
 
@@ -530,7 +545,8 @@ def _warm_start_carry(carry, comps, init_state, n):
     [n] arrays (the warm-start primitive): padding rows keep the reduction
     identity, the frontier resets to all-ones so the first sweep re-derives
     the true active set from the supplied state."""
-    state0, active, k, work, pushes, res_work, div, resid = carry
+    (state0, active, k, work, pushes, res_work, gather_work, div,
+     resid) = carry
     init_state = tuple(init_state)
     if len(init_state) != len(comps):
         raise ValueError(
@@ -544,7 +560,8 @@ def _warm_start_carry(carry, comps, init_state, n):
                 f"init_state for component {cr.idx} has shape {a.shape}, "
                 f"expected ({n},)")
         new_state.append(ref.at[:n].set(a))
-    return (tuple(new_state), active, k, work, pushes, res_work, div, resid)
+    return (tuple(new_state), active, k, work, pushes, res_work, gather_work,
+            div, resid)
 
 
 def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
@@ -641,7 +658,8 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                                      block_e, interpret, use, dense_threshold,
                                      switch_k, push_resolution,
                                      sentinel=divergence_sentinel)
-        state, k, work, pushes, res_work, div, resid, act_n = run(*args, srcs)
+        (state, k, work, pushes, res_work, gather_work, div, resid,
+         act_n) = run(*args, srcs)
     else:
         pair, args = _pallas_executor(g, comps, plans, max_iter, tol, block_v,
                                       block_e, interpret, use,
@@ -679,16 +697,20 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                 ckpt.save(carry, k_done)
             if fault_hook is not None:
                 fault_hook(k_done)
-        state, active, k, work, pushes, res_work, div, resid = carry
+        (state, active, k, work, pushes, res_work, gather_work, div,
+         resid) = carry
         act_n = jnp.sum(active[:n].astype(jnp.int32))
     k_i = iterate._host(k, int)
     p_i = iterate._host(pushes, int)
     rw = iterate._host(res_work, float)
+    gw = iterate._host(gather_work, float)
     if isinstance(k_i, int) and isinstance(p_i, int):
         _er.SWEEP_STATS["push_iters"] += p_i
         _er.SWEEP_STATS["pull_iters"] += k_i - p_i
     if isinstance(rw, float):
         _er.SWEEP_STATS["resolve_work"] += rw
+    if isinstance(gw, float):
+        _er.SWEEP_STATS["gather_work"] += gw
     res = iterate.IterationResult(
         state=tuple(s[:n] for s in state),
         iterations=k_i,
@@ -700,6 +722,7 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     res.push_iters = p_i
     res.pull_iters = k_i - p_i        # valid for ints and tracers alike
     res.resolve_work = rw
+    res.gather_work = gw
     return res
 
 
@@ -769,10 +792,11 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
                                  switch_k, push_resolution, batch=True,
                                  warm=init_state is not None)
     if init_state is not None:
-        state, k, work, pushes, res_work, div, resid, act_n = \
-            run(*args, srcs, *init_state)
+        (state, k, work, pushes, res_work, gather_work, div, resid,
+         act_n) = run(*args, srcs, *init_state)
     else:
-        state, k, work, pushes, res_work, div, resid, act_n = run(*args, srcs)
+        (state, k, work, pushes, res_work, gather_work, div, resid,
+         act_n) = run(*args, srcs)
     res = iterate.IterationResult(
         state=tuple(s[:, :n] for s in state),
         iterations=k,                     # [B] per-query iteration counts
@@ -784,10 +808,12 @@ def iterate_pallas_batch(g: Graph, comps, plans, sources: Sequence,
     res.push_iters = pushes
     res.pull_iters = k - pushes
     res.resolve_work = res_work           # [B] per-query resolution work
+    res.gather_work = gather_work         # [B] per-query gather work
     try:
         _er.SWEEP_STATS["push_iters"] += int(jnp.sum(pushes))
         _er.SWEEP_STATS["pull_iters"] += int(jnp.sum(k - pushes))
         _er.SWEEP_STATS["resolve_work"] += float(jnp.sum(res_work))
+        _er.SWEEP_STATS["gather_work"] += float(jnp.sum(gather_work))
     except (jax.errors.ConcretizationTypeError,
             jax.errors.TracerArrayConversionError):
         pass
@@ -831,12 +857,15 @@ def cross_combines_per_iter(plans, comps, idempotent: bool) -> int:
 
 def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                             interpret, use, dense_threshold, switch_k,
-                            mesh, axes):
+                            push_resolution, mesh, axes):
     """Trace + jit the sharded fixpoint once per (plan structure, kernel set,
-    graph shape, direction set, mesh).  The returned function takes one
-    6-tuple of STACKED ``[k, ...]`` sharded-ELL arrays per direction in
-    ``use`` (nbrs, weight, capacity, mask, tile_nnz, row_deg — split on the
-    shard axis by ``shard_map``), the replicated degree vectors, and the
+    graph shape, direction set, resolution, mesh).  The returned function
+    takes one 6-tuple of STACKED ``[k, ...]`` sharded-ELL arrays per
+    direction in ``use`` (nbrs, weight, capacity, mask, tile_nnz, row_deg —
+    split on the shard axis by ``shard_map``), then (when the push
+    direction resolves ``"sorted"``) the 4 stacked per-shard resolution
+    arrays of ``structure.ShardedPushResolution`` (in2out, valid, contrib,
+    tile_nnz — also shard-split), the replicated degree vectors, and the
     traced per-component query sources: ``run(*arrays, srcs)``.
 
     Inside ``shard_map`` every shard runs the SAME fused Pallas sweeps as
@@ -851,9 +880,13 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     out-layout row degrees, so every shard compares the same (integer-exact)
     mass against |E|/k and picks the same sweep.  State is replicated, so
     the convergence flag is identical on every shard and the while_loop is
-    collective-safe.  The push sweep resolves its dst-keyed reduction with
-    the per-shard reference scatter (the dst-sorted resolution layout is
-    single-device-only; DESIGN.md §11)."""
+    collective-safe.  The push sweep resolves its dst-keyed reduction
+    shard-locally with the dst-sorted segment pass by default (each shard's
+    own ``PushResolution`` stack over its widened out-layout — the
+    in-kernel gather and the frontier-proportional tile skipping work
+    per shard exactly as on one device, and the cross-shard monoid/lex
+    combine contract is unchanged); ``"scatter"`` keeps the per-shard
+    reference scatter as the oracle (DESIGN.md §11)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
@@ -865,6 +898,7 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
     comps_order = _er.comps_in_plan_order(plan_levels)
     idents = {c: comps_by_idx[c].ident for c in comps_order}
     p_fns = {c: comps_by_idx[c].p_fn for c in comps_order}
+    sorted_res = push_resolution == "sorted" and "push" in use
 
     def shard_fn(*arrays):
         ell = {}
@@ -872,6 +906,10 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
         for d in use:
             ell[d] = tuple(a[0] for a in arrays[idx:idx + 6])  # [1,...] → [...]
             idx += 6
+        if sorted_res:
+            res_in2out, res_valid, res_contrib, res_nnz = \
+                tuple(a[0] for a in arrays[idx:idx + 4])
+            idx += 4
         out_deg = arrays[idx]
         wdeg = arrays[idx + 1]
         srcs = arrays[idx + 2]
@@ -908,7 +946,10 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
 
         def sweep(d, state_d, active_i32, tile_act, need_hp):
             """One shard-local fused sweep: the SAME pallas kernels as the
-            single-device engine, over this shard's blocked-ELL slice."""
+            single-device engine, over this shard's blocked-ELL slice.
+            Returns (red, hp, resolution edge work, gather work) exactly
+            like the single-device ``sweep`` — the sorted push resolve runs
+            shard-locally over this shard's own ``PushResolution`` slice."""
             nbrs, weight, capacity, mask, _nnz, _rdeg = ell[d]
             states = {c: state_d[c] for c in comps_order}
             common = dict(plans=plan_levels, idents=idents, p_fns=p_fns,
@@ -916,12 +957,24 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                           block_v=block_v, block_e=block_e,
                           interpret=interpret)
             if d == "pull":
-                return _er.fused_ell_sweep(
+                red, hp = _er.fused_ell_sweep(
                     nbrs, weight, capacity, mask, tile_act, states,
                     active_i32, out_deg_pad, **common)
-            return _er.fused_ell_push_sweep(
+                return red, hp, jnp.float32(0), jnp.float32(0)
+            if sorted_res:
+                res_tile_act = _er.resolution_tile_activity(
+                    res_contrib, tile_act, res_nnz)
+                red, hp = _er.fused_ell_push_sweep(
+                    nbrs, weight, capacity, mask, tile_act, states,
+                    active_i32, out_deg_pad, resolution="sorted",
+                    res=(res_in2out, res_valid, res_tile_act), **common)
+                res_w = jnp.sum(res_nnz * res_tile_act).astype(jnp.float32)
+                return red, hp, res_w, res_w
+            red, hp = _er.fused_ell_push_sweep(
                 nbrs, weight, capacity, mask, tile_act, states,
                 active_i32, out_deg_pad, resolution="scatter", **common)
+            return (red, hp, jnp.float32(nbrs.shape[0] * nbrs.shape[1]),
+                    jnp.float32(0))
 
         def masked_branch(d):
             """One frontier-masked (+model) shard-local sweep; edge work is
@@ -935,13 +988,15 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 else:
                     tile_act = _er.tile_activity_push(tile_nnz, active_i32,
                                                       block_v)
-                red, _ = sweep(d, state_d, active_i32, tile_act, False)
+                red, _, res_w, gat_w = sweep(d, state_d, active_i32, tile_act,
+                                             False)
                 w_inc = jnp.sum((tile_nnz * tile_act)).astype(jnp.float32)
-                return tuple(red[c] for c in comps_order), w_inc
+                return tuple(red[c] for c in comps_order), w_inc, res_w, gat_w
             return branch
 
         def body(carry):
-            state, active, k, work, pushes, div, resid = carry
+            (state, active, k, work, pushes, res_work, gather_work, div,
+             resid) = carry
             state_d = {cr.idx: state[i] for i, cr in enumerate(comps)}
             if idempotent:
                 active_i32 = active.astype(jnp.int32)
@@ -961,16 +1016,19 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                         # replicated, so this is shard-invariant by itself.
                         frac = jnp.sum(active.astype(jnp.float32)) / n
                         use_push = frac <= dense_threshold
-                    red_t, w_inc = jax.lax.cond(
+                    red_t, w_inc, res_w, gat_w = jax.lax.cond(
                         use_push, masked_branch("push"), masked_branch("pull"),
                         (state_d, active_i32))
                     pushes = pushes + use_push.astype(jnp.int32)
                 else:
-                    red_t, w_inc = masked_branch(use[0])((state_d, active_i32))
+                    red_t, w_inc, res_w, gat_w = masked_branch(use[0])(
+                        (state_d, active_i32))
                     pushes = pushes + (1 if use[0] == "push" else 0)
                 red = cross_shard({c: red_t[i]
                                    for i, c in enumerate(comps_order)})
                 work = work + w_inc
+                res_work = res_work + res_w
+                gather_work = gather_work + gat_w
                 new_d = {}
                 for p in plans:
                     new_d.update(iterate.plan_merge(p, state_d, red,
@@ -982,7 +1040,10 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
                 d = use[0]
                 work = work + local_edges
                 tiles_static = (ell[d][4] > 0).astype(jnp.int32)
-                red, hp = sweep(d, state_d, ones_act, tiles_static, True)
+                red, hp, res_w, gat_w = sweep(d, state_d, ones_act,
+                                              tiles_static, True)
+                res_work = res_work + res_w
+                gather_work = gather_work + gat_w
                 red = cross_shard(red)
                 hp = {c: segment.psum_like(
                     "or", hp[c].astype(jnp.int32), ax).astype(bool)
@@ -999,27 +1060,32 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
             div = div | iterate._divergence(comps, new)
             resid = iterate._residual(comps, new, state)
             ch = ch & ~div
-            return new, ch, k + 1, work, pushes, div, resid
+            return (new, ch, k + 1, work, pushes, res_work, gather_work,
+                    div, resid)
 
         def cond(carry):
-            _, active, k, _, _, _, _ = carry
+            _, active, k, _, _, _, _, _, _ = carry
             return jnp.any(active) & (k < max_iter)
 
         state0 = _padded_init_state(comps, n, n_pad, srcs)
-        state, active, k, work, pushes, div, resid = jax.lax.while_loop(
+        (state, active, k, work, pushes, res_work, gather_work, div,
+         resid) = jax.lax.while_loop(
             cond, body, (state0, jnp.ones(n_pad, bool), jnp.int32(0),
-                         jnp.float32(0), jnp.int32(0), jnp.asarray(False),
+                         jnp.float32(0), jnp.int32(0), jnp.float32(0),
+                         jnp.float32(0), jnp.asarray(False),
                          jnp.float32(0)))
         # k/pushes/div/resid/active_n are replicated (k and pushes asserted
-        # host-side); work is per-shard.
+        # host-side); work/res_work/gather_work are per-shard.
         active_n = jnp.sum(active[:n].astype(jnp.int32))
-        return (state, k[None], work[None], pushes[None], div[None],
-                resid[None], active_n[None])
+        return (state, k[None], work[None], pushes[None], res_work[None],
+                gather_work[None], div[None], resid[None], active_n[None])
 
     pspec = P(ax)
-    in_specs = tuple([pspec] * (6 * len(use)) + [P(), P(), P()])
+    in_specs = tuple([pspec] * (6 * len(use))
+                     + ([pspec] * 4 if sorted_res else [])
+                     + [P(), P(), P()])
     out_specs = (tuple(P() for _ in comps), P(ax), P(ax), P(ax), P(ax),
-                 P(ax), P(ax))
+                 P(ax), P(ax), P(ax), P(ax))
     # check_vma off: the pre-graduation checker rejects collectives inside
     # while_loop bodies, and the graduated checker cannot see through
     # interpret-mode pallas_call — replication of state/k/pushes is a
@@ -1031,7 +1097,7 @@ def _build_sharded_executor(comps, plans, n, max_iter, tol, block_v, block_e,
 
 def _sharded_executor(g, comps, plans, mesh, axes, strategy, max_iter, tol,
                       block_v, block_e, interpret, use, dense_threshold,
-                      switch_k):
+                      switch_k, push_resolution):
     """Cache lookup / build of the compiled sharded fixpoint, plus the
     stacked argument prefix it runs on."""
     ax = _axes_tuple(axes)
@@ -1042,20 +1108,27 @@ def _sharded_executor(g, comps, plans, mesh, axes, strategy, max_iter, tol,
     if len(use) != 2:                # pinned direction: no switch traced
         dense_threshold = None
         switch_k = None
+    if "push" not in use:            # no push sweep: resolution never traced
+        push_resolution = "unused"
     key = ("sharded", g.n, tuple(tuple(_plan_levels(p)) for p in plans),
            _comps_key(comps), max_iter, tol, block_v, block_e, interpret,
-           use, dense_threshold, switch_k, strategy,
+           use, dense_threshold, switch_k, push_resolution, strategy,
            _mesh_cache_key(mesh, ax))
     run = _exec_cache_get(key)
     if run is None:
         run = _build_sharded_executor(comps, plans, g.n, max_iter, tol,
                                       block_v, block_e, interpret, use,
-                                      dense_threshold, switch_k, mesh, ax)
+                                      dense_threshold, switch_k,
+                                      push_resolution, mesh, ax)
         _exec_cache_put(key, run, comps)
     args = []
     for d in use:
         e = ells[d]
         args += [e.nbrs, e.weight, e.capacity, e.mask, e.tile_nnz, e.row_deg]
+    if push_resolution == "sorted":
+        sres = sharded_push_resolution_cached(
+            g, k_shards, strategy=strategy, block_v=block_v, block_e=block_e)
+        args += [sres.in2out, sres.valid, sres.contrib, sres.tile_nnz]
     args.append(g.out_deg)
     args.append(w_out_deg(g))
     return run, args, k_shards
@@ -1083,15 +1156,21 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
     idempotent rounds — as the single-device ``iterate_pallas``.
 
     ``strategy`` picks the edge partitioning (``partition.partition_edges``:
-    "contiguous" | "dst_hash").  ``push_resolution`` accepts only None /
-    "scatter": shard-local push sweeps resolve their dst-keyed reduction
-    with the per-shard reference scatter (exact for the idempotent min/max
-    plans; the dst-sorted resolution layout is single-device-only for now).
+    "contiguous" | "dst_hash").  ``push_resolution`` selects the shard-local
+    dst-keyed resolution exactly like the single-device engine: "sorted"
+    (default) resolves through each shard's own precomputed dst-major
+    segment layout (``structure.to_sharded_push_resolution`` — per-shard
+    ``PushResolution`` stacks over the widened out-layout, in-kernel gather
+    and frontier-proportional tile skipping included), "scatter" keeps the
+    per-shard reference full-rectangle XLA scatter as the oracle.  Both are
+    exact for the idempotent min/max plans and feed the same cross-shard
+    monoid/lex combine, so the choice never changes results.
 
     The result carries ``shards`` / ``shard_work`` (per-shard processed-tile
     edge work) / ``shard_launches`` (traced pallas launches per shard per
     round) / ``cross_combines`` (cross-shard state-combine collectives
-    executed) on top of the usual pallas stats."""
+    executed) on top of the usual pallas stats (including ``resolve_work``
+    and ``gather_work``, summed over shards)."""
     n = g.n
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -1099,9 +1178,7 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
     idempotent = all(iterate.plan_idempotent(p) for p in plans)
     if plan is not None:
         assert_normalized(plan)
-        # the planner resolves sharded push resolution to the per-shard
-        # reference scatter (an explicit "sorted" hint raised there)
-        assert plan.push_resolution == "scatter", plan.push_resolution
+        push_resolution = plan.push_resolution
         use = _directions_used(plan.direction, idempotent)
         dense_threshold, switch_k = plan.dense_threshold, plan.switch_k
         strategy = plan.shard_strategy
@@ -1109,17 +1186,14 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
         use = _directions_used(direction, idempotent)
         switch_k = _normalize_switch_k(
             switch_k, dense_threshold if len(use) == 2 else DENSE_FRONTIER)
-        if push_resolution not in (None, "scatter"):
-            raise ValueError(
-                "pallas_sharded resolves push sweeps with the per-shard "
-                "reference scatter; the dst-sorted resolution layout is "
-                f"single-device-only (DESIGN.md §11) — got {push_resolution!r}")
+        push_resolution = _check_resolution(
+            PUSH_RESOLUTION if push_resolution is None else push_resolution)
         if strategy not in ("contiguous", "dst_hash"):
             raise ValueError(f"unknown shard strategy {strategy!r}")
     run, args, k_shards = _sharded_executor(
         g, comps, plans, mesh, axes, strategy, max_iter, tol, block_v,
-        block_e, interpret, use, dense_threshold, switch_k)
-    state, k, work, pushes, div, resid, act_n = run(
+        block_e, interpret, use, dense_threshold, switch_k, push_resolution)
+    state, k, work, pushes, res_work, gather_work, div, resid, act_n = run(
         *args, _srcs_vector(comps, sources))
     k_host = np.asarray(k)
     work_host = np.asarray(work)
@@ -1148,7 +1222,10 @@ def iterate_pallas_sharded(g: Graph, comps, plans, mesh, axes=("data",),
         residual=float(np.asarray(resid)[0]))
     res.push_iters = p_i
     res.pull_iters = k_i - p_i
-    res.resolve_work = 0.0
+    res.resolve_work = float(np.asarray(res_work).sum())
+    res.gather_work = float(np.asarray(gather_work).sum())
+    _er.SWEEP_STATS["resolve_work"] += res.resolve_work
+    _er.SWEEP_STATS["gather_work"] += res.gather_work
     res.shards = k_shards
     res.shard_work = tuple(float(w) for w in work_host)
     res.shard_launches = len(use)        # traced sweeps per shard per round

@@ -66,6 +66,42 @@ def test_sharded_ell_cache_and_clear():
     assert program_cache_stats()["sharded_layouts"] == 0
 
 
+@pytest.mark.parametrize("strategy", ["contiguous", "dst_hash"])
+def test_sharded_push_resolution_roundtrips_per_shard(strategy):
+    """Each shard's in2out permutation must address its own WIDENED out
+    rectangle (all shards share the max width so shard_map can stack them)
+    and round-trip exactly the shard's edges — the same contract
+    test_push_resolution checks on one device, per shard."""
+    from repro.graph.structure import (rmat_graph, to_sharded_ell,
+                                       to_sharded_push_resolution)
+    g = rmat_graph(50, 300, seed=2)
+    k = 3
+    sres = to_sharded_push_resolution(g, k, strategy=strategy)
+    ell_out = to_sharded_ell(g, k, strategy=strategy, direction="out")
+    assert sres.out_width == ell_out.width
+    got = []
+    for s in range(k):
+        valid = np.asarray(sres.valid[s])
+        in2out = np.asarray(sres.in2out[s])
+        # every real out-slot of THIS shard is hit exactly once
+        out_mask = np.asarray(ell_out.mask[s]).reshape(-1)
+        assert sorted(in2out[valid].tolist()) == \
+            np.flatnonzero(out_mask).tolist()
+        # the out-slot's stored destination is the dst-major slot's own row
+        dst_via = np.asarray(ell_out.nbrs[s]).reshape(-1)[in2out]
+        rows = np.broadcast_to(np.arange(sres.n_pad)[:, None], valid.shape)
+        np.testing.assert_array_equal(dst_via[valid], rows[valid])
+        src_rows = np.asarray(in2out // sres.out_width)
+        got += list(zip(src_rows[valid].tolist(), dst_via[valid].tolist()))
+    # the union over shards is the graph
+    src_g, dst_g, _, _ = g.host_edges()
+    assert sorted(got) == sorted(zip(src_g.tolist(), dst_g.tolist()))
+    # contrib lists cover every resolution tile that holds real slots
+    contrib = np.asarray(sres.contrib)
+    nnz = np.asarray(sres.tile_nnz).reshape(k, -1)
+    assert ((contrib >= 0).any(axis=2).reshape(k, -1) == (nnz > 0)).all()
+
+
 def test_sharded_empty_shards_are_all_padding():
     """k > |E| leaves empty shards whose tiles all skip (mask/tile_nnz 0)."""
     from repro.graph.structure import line_graph, to_sharded_ell
@@ -106,25 +142,55 @@ def test_sharded_k1_matches_single_device_bitwise():
         assert len(rs.stats.shard_work) == 1
 
 
-def test_sharded_rejects_sorted_resolution_and_bad_strategy():
+def test_sharded_resolution_knob_validation():
+    """The sharded engine takes the same push_resolution surface as the
+    single-device one: "sorted" (default) runs the per-shard resolution
+    stack, "scatter" stays the reference oracle, junk is rejected with the
+    shared normalizer text — the old "single-device-only" rejection of
+    "sorted" is gone."""
     from repro.core import engine, fusion
     from repro.core import usecases as U
     from repro.graph.structure import uniform_graph
     g = uniform_graph(9, 18, seed=3)
     prog = fusion.fuse(U.bfs(0))
     mesh = _mesh1()
-    with pytest.raises(ValueError, match="single-device-only"):
+    with pytest.raises(ValueError, match="push_resolution"):
         engine.run_program(g, prog, engine="pallas_sharded", mesh=mesh,
-                           push_resolution="sorted")
+                           push_resolution="radix")
     with pytest.raises(ValueError, match="strategy"):
         engine.run_program(g, prog, engine="pallas_sharded", mesh=mesh,
                            shard_strategy="nope")
     with pytest.raises(AssertionError, match="mesh"):
         engine.run_program(g, prog, engine="pallas_sharded")
-    # explicit "scatter" is the engine's own resolution and must pass
-    r = engine.run_program(g, prog, engine="pallas_sharded", mesh=mesh,
-                           push_resolution="scatter")
-    assert r.stats.iterations > 0
+    # both resolutions are first-class on the sharded engine and agree
+    rs = engine.run_program(g, prog, engine="pallas_sharded", mesh=mesh,
+                            push_resolution="sorted")
+    rc = engine.run_program(g, prog, engine="pallas_sharded", mesh=mesh,
+                            push_resolution="scatter")
+    assert rs.stats.iterations > 0
+    np.testing.assert_array_equal(np.asarray(rs.value), np.asarray(rc.value))
+
+
+def test_sharded_resolution_cache_and_clear():
+    """Per-shard resolution stacks are identity-cached, reported by
+    program_cache_stats, and dropped per graph by clear_graph_caches."""
+    from repro.core.engine import (clear_graph_caches, clear_program_caches,
+                                   program_cache_stats)
+    from repro.graph.structure import (sharded_push_resolution_cached,
+                                       uniform_graph)
+    g1 = uniform_graph(12, 30, seed=7)
+    g2 = uniform_graph(12, 30, seed=8)
+    a = sharded_push_resolution_cached(g1, 2)
+    assert sharded_push_resolution_cached(g1, 2) is a
+    assert sharded_push_resolution_cached(g1, 3) is not a
+    sharded_push_resolution_cached(g2, 2)
+    assert program_cache_stats()["sharded_resolutions"] == 3
+    dropped = clear_graph_caches(g1)
+    assert dropped >= 2
+    assert program_cache_stats()["sharded_resolutions"] == 1   # g2 survives
+    assert sharded_push_resolution_cached(g2, 2) is not None
+    clear_program_caches()
+    assert program_cache_stats()["sharded_resolutions"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +312,51 @@ def test_sharded_reshaped_mesh_does_not_collide():
                                                np.asarray(rb.value)))}
         print(json.dumps(ok))
     """)
+    _check(out)
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("resolution", ["sorted", "scatter"])
+def test_sharded_resolution_matches_single_device(resolution):
+    """Satellite (c): sharded resolution ≡ single-device resolution BITWISE
+    for pull/push/auto × k∈{2,4} on idempotent rounds — under the default
+    per-shard sorted stack AND the scatter oracle — and the sorted stack's
+    resolve_work stays strictly under the per-shard scatter rectangle."""
+    out = _run("""
+        import numpy as np, jax, json
+        from jax.sharding import Mesh
+        from repro.core import usecases as U, fusion, engine
+        from repro.graph.structure import rmat_graph
+        resolution = {resolution!r}
+        g = rmat_graph(16, 48, seed=5)
+        prog = fusion.fuse(U.ALL_SPECS['BFS']())
+        ok = {{}}
+        for model in (None, 'pull', 'push'):
+            r1 = engine.run_program(g, prog, engine='pallas', model=model,
+                                    push_resolution=resolution)
+            for k in (2, 4):
+                mesh = Mesh(np.asarray(jax.devices()[:k]), ('data',))
+                rs = engine.run_program(
+                    g, prog, engine='pallas_sharded', mesh=mesh, model=model,
+                    push_resolution=resolution)
+                rec = (np.array_equal(np.asarray(r1.value),
+                                      np.asarray(rs.value))
+                       and rs.stats.iterations == r1.stats.iterations
+                       and rs.stats.push_iters == r1.stats.push_iters)
+                if resolution == 'sorted' and rs.stats.push_iters:
+                    # the sharded sorted resolve is frontier-proportional:
+                    # strictly under the per-shard scatter rectangle, and
+                    # gather bytes == kept resolution slots
+                    sc = engine.run_program(
+                        g, prog, engine='pallas_sharded', mesh=mesh,
+                        model=model, push_resolution='scatter')
+                    rec = (rec and
+                           0 < rs.stats.resolve_work < sc.stats.resolve_work
+                           and rs.stats.gather_work == rs.stats.resolve_work
+                           and sc.stats.gather_work == 0)
+                ok[f'{{model}}/k{{k}}'] = bool(rec)
+        print(json.dumps(ok))
+    """.format(resolution=resolution))
     _check(out)
 
 

@@ -92,17 +92,27 @@ def test_auto_engine_follows_device_topology(g):
     assert engine.plan_execution(g, prog, engine="auto").engine == "pallas"
     plan = engine.plan_execution(g, prog, engine="auto", mesh=_FakeMesh(4))
     assert plan.engine == "pallas_sharded"
-    assert plan.push_resolution == "scatter"     # sharded forces the
-    assert plan.resolution_hint is None          # per-shard reference path
+    assert plan.push_resolution == "sorted"      # per-shard sorted stack:
+    assert plan.resolution_hint is None          # same default everywhere
     assert engine.plan_execution(g, prog, engine="auto",
                                  mesh=_FakeMesh(1)).engine == "pallas"
 
 
-def test_sharded_rejects_sorted_resolution(g):
+def test_sharded_resolution_hints_first_class(g):
+    """Resolution is engine-independent now that the sharded engine runs its
+    own per-shard sorted stack: "sorted" is accepted (and the default),
+    "scatter" pins the reference oracle, junk still raises the shared
+    normalizer error."""
     prog = fusion.fuse(U.bfs(0))
-    with pytest.raises(ValueError, match="single-device-only"):
+    srt = engine.plan_execution(g, prog, engine="pallas_sharded",
+                                push_resolution="sorted")
+    assert srt.push_resolution == "sorted" and srt.resolution_hint == "sorted"
+    sct = engine.plan_execution(g, prog, engine="pallas_sharded",
+                                push_resolution="scatter")
+    assert sct.push_resolution == "scatter"
+    with pytest.raises(ValueError, match="push_resolution must be"):
         engine.plan_execution(g, prog, engine="pallas_sharded",
-                              push_resolution="sorted")
+                              push_resolution="radix")
 
 
 def test_knob_normalization_single_copy(g):
@@ -184,16 +194,19 @@ def test_identical_decisions_share_executor_cache_entries(g):
 def test_degrade_plan_reresolves_engine_dependent_fields(g):
     prog = fusion.fuse(U.bfs(0))
     sharded = engine.plan_execution(g, prog, engine="pallas_sharded")
-    assert sharded.push_resolution == "scatter"
+    assert sharded.push_resolution == "sorted"   # per-shard sorted default
     down = P.degrade_plan(sharded, "pallas")
     assert down.engine == "pallas"
-    assert down.push_resolution == "sorted"   # forced scatter must not leak
+    assert down.push_resolution == "sorted"   # hintless → sorted default
     assert down.switch_k == sharded.switch_k
-    # an explicit caller hint survives the walk down the chain
+    # an explicit caller hint survives the walk down the chain — both ways
     pinned = engine.plan_execution(g, prog, engine="pallas",
                                    push_resolution="scatter")
     assert P.degrade_plan(pinned, "adaptive").push_resolution == "scatter"
     assert P.degrade_plan(pinned, "pallas") is pinned
+    pinned_sh = engine.plan_execution(g, prog, engine="pallas_sharded",
+                                      push_resolution="scatter")
+    assert P.degrade_plan(pinned_sh, "pallas").push_resolution == "scatter"
 
 
 # ---------------------------------------------------------------------------

@@ -102,8 +102,7 @@ def _push_sweep(g, frontier_frac, seed, resolution):
               p_fns={0: lambda env: env["n"] + env["w"]}, nv=g.n)
     if resolution == "sorted":
         res_tile_act = er.resolution_tile_activity(
-            res.valid, res.src_tile, tile_act, res.tile_nnz,
-            res.block_v, res.block_e)
+            res.contrib, tile_act, res.tile_nnz)
         red, _ = er.fused_ell_push_sweep(
             ell.nbrs, ell.weight, ell.capacity, ell.mask, tile_act,
             {0: state}, active, jnp.ones(ell.n_pad, jnp.float32),
@@ -143,8 +142,7 @@ def test_sorted_resolution_work_frontier_proportional():
     active = jnp.zeros(ell.n_pad, jnp.int32).at[125].set(1)
     tile_act = er.tile_activity_push(ell.tile_nnz, active, ell.block_v)
     res_tile_act = er.resolution_tile_activity(
-        res.valid, res.src_tile, tile_act, res.tile_nnz,
-        res.block_v, res.block_e)
+        res.contrib, tile_act, res.tile_nnz)
     kept = float(jnp.sum(res.tile_nnz * res_tile_act))
     full = float(jnp.sum(res.tile_nnz))
     # the frontier-active out tiles hold ≤ block_v rows of successors; their
@@ -154,8 +152,7 @@ def test_sorted_resolution_work_frontier_proportional():
     assert kept < full, "sparse frontier must not light every resolution tile"
     # and an empty frontier keeps nothing
     none_act = er.resolution_tile_activity(
-        res.valid, res.src_tile, jnp.zeros_like(tile_act), res.tile_nnz,
-        res.block_v, res.block_e)
+        res.contrib, jnp.zeros_like(tile_act), res.tile_nnz)
     assert float(jnp.sum(none_act)) == 0.0
 
 
@@ -364,6 +361,58 @@ def test_pinned_direction_ignores_unused_knobs_in_cache_key(small_graphs):
 
 
 # ---------------------------------------------------------------------------
+# gather_work: the in-kernel permutation gather is frontier-proportional
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("frontier", [0.0, 0.05, 0.3, 1.0])
+def test_gather_work_bounded_by_active_resolution_nnz(frontier):
+    """Satellite (b): the candidate slots the in-kernel gather reads are
+    exactly the ACTIVE resolution tiles' real slots — ≤ Σ nnz over active
+    tiles with skipped tiles contributing zero, and 0 on an empty
+    frontier."""
+    g = rmat_graph(128, 1024, seed=11)
+    res = to_push_resolution(g)
+    ell = to_blocked_ell(g, direction="out")
+    rng = np.random.default_rng(21)
+    active = jnp.asarray((rng.random(ell.n_pad) < frontier).astype(np.int32))
+    tile_act = er.tile_activity_push(ell.tile_nnz, active, ell.block_v)
+    res_tile_act = er.resolution_tile_activity(
+        res.contrib, tile_act, res.tile_nnz)
+    gather = float(jnp.sum(res.tile_nnz * res_tile_act))
+    active_nnz = float(jnp.sum(jnp.where(res_tile_act > 0, res.tile_nnz, 0)))
+    assert gather <= active_nnz
+    skipped_nnz = float(jnp.sum(jnp.where(res_tile_act == 0, res.tile_nnz, 0)))
+    assert gather + skipped_nnz == float(jnp.sum(res.tile_nnz))
+    if frontier == 0.0:
+        assert gather == 0.0
+
+
+def test_gather_work_reported_and_under_rectangle():
+    """Engine level: gather_work rides the fixpoint into ExecStats and
+    SWEEP_STATS, equals resolve_work under "sorted" (the gather reads
+    exactly the kept resolution slots), stays strictly under the
+    full-rectangle n_pad·width per push iteration, and is 0 under
+    "scatter" (no permutation gather at all)."""
+    g = rmat_graph(256, 2048, seed=17)
+    res = to_push_resolution(g)
+    prog = fusion.fuse(U.ALL_SPECS["BFS"]())
+    _cold()
+    srt = engine.run_program(g, prog, engine="pallas",
+                             push_resolution="sorted")
+    assert srt.stats.push_iters >= 1
+    gw = srt.stats.gather_work
+    assert er.SWEEP_STATS["gather_work"] == gw
+    assert gw == srt.stats.resolve_work
+    rectangle = float(res.n_pad * res.width)
+    assert 0 < gw < srt.stats.push_iters * rectangle
+    _cold()
+    sct = engine.run_program(g, prog, engine="pallas",
+                             push_resolution="scatter")
+    assert sct.stats.gather_work == 0.0
+    assert er.SWEEP_STATS["gather_work"] == 0.0
+
+
+# ---------------------------------------------------------------------------
 # stat bumps only after successful launch construction
 # ---------------------------------------------------------------------------
 
@@ -396,6 +445,47 @@ def test_launch_stats_not_bumped_on_failed_trace(monkeypatch):
             jnp.ones_like(ell_in.tile_nnz), {0: state}, active,
             jnp.ones(ell_in.n_pad, jnp.float32), **kw)
     assert all(v == 0 for v in er.SWEEP_STATS.values())
+
+
+def test_resolve_launch_not_bumped_on_failed_resolve_trace(monkeypatch):
+    """Satellite fix: a sorted push sweep whose RESOLUTION pallas_call fails
+    to construct must leave resolve_launches untouched — the edge sweep's
+    own launch (the first pallas_call, which succeeded) still counts, but
+    the interrupted resolution pass must not (the same skew PR 4 fixed for
+    edge sweeps)."""
+    g = uniform_graph(12, 30, seed=5)
+    ell = to_blocked_ell(g, direction="out")
+    res = to_push_resolution(g)
+    state = jnp.ones(ell.n_pad, jnp.float32)
+    ident = float(segment.identity("min", jnp.float32))
+    active = jnp.ones(ell.n_pad, jnp.int32)
+    er.reset_sweep_stats()
+    real = er.pl.pallas_call
+    calls = {"n": 0}
+
+    def second_call_boom(*a, **k):
+        calls["n"] += 1
+        if calls["n"] >= 2:                 # 1st: push sweep, 2nd: resolve
+            raise RuntimeError("resolve trace interrupted")
+        return real(*a, **k)
+
+    monkeypatch.setattr(er.pl, "pallas_call", second_call_boom)
+    tile_act = er.tile_activity_push(ell.tile_nnz, active, ell.block_v)
+    res_tile_act = er.resolution_tile_activity(
+        res.contrib, tile_act, res.tile_nnz)
+    kw = dict(plans=(((0, "min"),),), idents={0: ident},
+              p_fns={0: lambda env: env["n"] + env["w"]}, nv=g.n)
+    with pytest.raises(RuntimeError, match="resolve trace interrupted"):
+        er.fused_ell_push_sweep(
+            ell.nbrs, ell.weight, ell.capacity, ell.mask, tile_act,
+            {0: state}, active, jnp.ones(ell.n_pad, jnp.float32),
+            resolution="sorted",
+            res=(res.in2out, res.valid, res_tile_act), **kw)
+    assert calls["n"] == 2
+    assert er.SWEEP_STATS["resolve_launches"] == 0
+    # the successfully constructed edge-sweep launch still counts
+    assert er.SWEEP_STATS["launches"] == 1
+    assert er.SWEEP_STATS["push_launches"] == 1
 
 
 # ---------------------------------------------------------------------------
