@@ -78,15 +78,28 @@ must add ZERO traced launches and zero executor-cache entries (planning is
 a host-side cache lookup, invisible to the compiled program), and the
 recorded-stats feedback cache must hold an entry per benched query shape.
 
+``--engines pallas`` also runs the incremental section (DESIGN.md §15):
+a small seeded insert-only perturbation (~0.5% of |E|) of the R-MAT graph,
+then the delta-seeded warm-started fixpoint vs a cold full recompute on
+the mutated graph, on the idempotent workloads (BFS/SSSP/CC).  Everything
+gated is deterministic on the seeded trace: the answers must be
+bitwise-equal (asserted in-bench — GraFS Def. 2 makes warm+delta exact for
+idempotent insert-only batches), delta edge work must stay strictly under
+the full recompute's, the planner must resolve ``incremental="delta"`` for
+the small batch, and the patch-vs-rebuild layout counts are recorded so
+the baseline gates the in-place ELL patch staying engaged.  Wall time is
+reported, never gated.
+
 ``--baseline PATH`` reads a committed ``BENCH_pallas.json`` (before the
 fresh run, which is never written over it) and fails (exit 1) if the fresh
 run regresses on traced launches, the fused/unfused edge-work ratio, the
 push-vs-pull work advantage, the resolution section's gather/resolve-work
 bounds, the batched executor/retrace counts, the sharded engine's
 iteration parity / launch / combine / resolution-work counts, the guard
-section's launch parity, or the serving section's queries-per-launch /
-launch / fused-round / cache-entry counts — the one comparison path shared
-by the CI bench-smoke gate and local runs.
+section's launch parity, the serving section's queries-per-launch /
+launch / fused-round / cache-entry counts, or the incremental section's
+delta-vs-full edge-work ratio and patch-vs-rebuild layout counts — the one
+comparison path shared by the CI bench-smoke gate and local runs.
 """
 from __future__ import annotations
 
@@ -124,6 +137,9 @@ SERVING = ["MIX"]                       # open-loop serving traces (the MIX
 PLANNER = ["BFS", "SSSP", "PR"]         # planned vs pinned-knob execution
                                         # (the ExecutionPlan default-parity
                                         # and zero-overhead contract)
+INCREMENTAL = ["BFS", "SSSP", "CC"]     # delta-vs-full over a mutating
+                                        # graph (idempotent rounds only:
+                                        # bitwise parity is the contract)
 _BATCHED_SPECS = {"BFS": U.bfs, "SSSP": U.sssp}
 _BATCH_B = 8                            # sources per batched sweep
 _SERVE_B = 6                            # continuous-batch slots per lane
@@ -131,6 +147,11 @@ _SERVE_CHUNK = 4                        # fixpoint iterations per launch
 _SERVE_REQUESTS = 16                    # open-loop trace length
 _SERVE_SEED = 0
 _SHARD_K = 2                            # shards of the sharded section's mesh
+_INCR_SEED = 7                          # perturbation RNG seed of the
+                                        # incremental section (deterministic)
+_INCR_FRAC = 0.005                      # inserted edges as a fraction of |E|
+                                        # — well under the planner's
+                                        # INCREMENTAL_DELTA threshold
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_pallas.json")
@@ -544,11 +565,69 @@ def bench_planner(g, gname: str, weighted: bool, name: str) -> dict:
     }
 
 
+def bench_incremental(g, gname: str, weighted: bool, name: str) -> dict:
+    """Incremental section (DESIGN.md §15): converge once cold on ``g``
+    with ``return_state=True``, apply a small seeded insert-only
+    perturbation (~0.5% of |E|) through ``mutate_edges``, then run the
+    delta-seeded warm-started fixpoint vs a cold full recompute on the
+    mutated graph.  The acceptance quantities are deterministic on the
+    seeded trace: BITWISE value parity (asserted here, in-bench — the
+    workloads are idempotent rounds, so warm+delta is exact for insert-only
+    batches), delta edge work strictly under the full recompute's, the
+    planner resolving ``incremental="delta"`` for the small batch, and the
+    patch-vs-rebuild layout counts (the in-place ELL patch must keep
+    absorbing the batch).  Wall time is reported, never gated."""
+    import numpy as np
+
+    from repro.graph import mutate as M
+
+    prog = fusion.fuse(U.ALL_SPECS[name]())
+    engine.clear_program_caches()
+    _res_prev, state = engine.run_program(g, prog, engine="pallas",
+                                          return_state=True)
+    rng = np.random.default_rng(_INCR_SEED)
+    k = max(2, int(g.num_edges * _INCR_FRAC))
+    src = rng.integers(0, g.n, size=k)
+    dst = rng.integers(0, g.n, size=k)
+    ins = (src, dst, (0.1 + rng.random(k)).astype(np.float32)) if weighted \
+        else (src, dst)
+    g2, md = M.mutate_edges(g, insert=ins)
+    t_delta, res_delta = timed(lambda: engine.run_program(
+        g2, prog, engine="pallas", init_state=state, delta=md), repeats=1)
+    t_full, res_full = timed(lambda: engine.run_program(
+        g2, prog, engine="pallas"), repeats=1)
+    assert np.array_equal(np.asarray(res_delta.value),
+                          np.asarray(res_full.value)), \
+        f"{name}: delta-mode answer diverged from the cold recompute"
+    assert res_delta.stats.plan is not None and \
+        res_delta.stats.plan.incremental == "delta", \
+        f"{name}: planner did not choose delta propagation for a " \
+        f"{k}-edge insert batch"
+    assert float(res_delta.stats.edge_work) < \
+        float(res_full.stats.edge_work), \
+        f"{name}: delta edge work {float(res_delta.stats.edge_work):.0f} " \
+        f"not under the full recompute's " \
+        f"{float(res_full.stats.edge_work):.0f}"
+    return {
+        "graph": gname, "weighted": weighted, "usecase": name,
+        "num_edges": g.num_edges, "inserted": int(md.inserted),
+        "touched": int(md.touched.size),
+        "plan_incremental": res_delta.stats.plan.incremental,
+        "iterations_delta": res_delta.stats.iterations,
+        "iterations_full": res_full.stats.iterations,
+        "edge_work_delta": float(res_delta.stats.edge_work),
+        "edge_work_full": float(res_full.stats.edge_work),
+        "patched_layouts": int(md.patched_layouts),
+        "rebuilt_layouts": int(md.rebuilt_layouts),
+        "t_delta_ms": t_delta * 1e3, "t_full_ms": t_full * 1e3,
+    }
+
+
 def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         engines=("pull", "push"), json_out=None, direction_usecases=None,
         batched_usecases=None, resolution_usecases=None,
         sharded_usecases=None, guard_usecases=None, serving_usecases=None,
-        planner_usecases=None):
+        planner_usecases=None, incremental_usecases=None):
     rows = []
     json_rows = []
     direction_rows = []
@@ -558,6 +637,7 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     guard_rows = []
     serving_rows = []
     planner_rows = []
+    incremental_rows = []
     if direction_usecases and "pallas" not in engines:
         raise ValueError("direction_usecases bench the pallas engine's "
                          "push/pull switch; add 'pallas' to engines")
@@ -580,6 +660,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
     if planner_usecases and "pallas" not in engines:
         raise ValueError("planner_usecases bench the query planner on the "
                          "pallas engine; add 'pallas' to engines")
+    if incremental_usecases and "pallas" not in engines:
+        raise ValueError("incremental_usecases bench the pallas engine's "
+                         "delta-seeded warm starts; add 'pallas' to engines")
     if direction_usecases is None:
         direction_usecases = DIRECTION if "pallas" in engines else []
     if batched_usecases is None:
@@ -594,6 +677,8 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
         serving_usecases = SERVING if "pallas" in engines else []
     if planner_usecases is None:
         planner_usecases = PLANNER if "pallas" in engines else []
+    if incremental_usecases is None:
+        incremental_usecases = INCREMENTAL if "pallas" in engines else []
     for gname in graph_names:
         for weighted in (False, True):
             g = BENCH_GRAPHS[gname](weighted)
@@ -661,6 +746,9 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
                 for name in planner_usecases:
                     planner_rows.append(
                         bench_planner(g, gname, weighted, name))
+                for name in incremental_usecases:
+                    incremental_rows.append(
+                        bench_incremental(g, gname, weighted, name))
     header = ["graph", "weights", "engine", "usecase", "edge_work_ratio",
               "speedup", "rounds_fused", "rounds_unfused", "t_fused_ms",
               "t_unfused_ms", "launches", "seed_sweeps"]
@@ -749,6 +837,20 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
               "traced_planned", "traced_pinned", "exec_planned",
               "exec_pinned", "plan_entries", "feedback", "t_planned_ms",
               "t_pinned_ms"])
+    if incremental_rows:
+        emit([[r["graph"], "w" if r["weighted"] else "unw", r["usecase"],
+               r["inserted"], r["touched"],
+               r["iterations_delta"], r["iterations_full"],
+               round(r["edge_work_delta"], 1), round(r["edge_work_full"], 1),
+               round(r["edge_work_delta"]
+                     / max(r["edge_work_full"], 1.0), 4),
+               r["patched_layouts"], r["rebuilt_layouts"],
+               round(r["t_delta_ms"], 1), round(r["t_full_ms"], 1)]
+              for r in incremental_rows],
+             ["graph", "weights", "usecase", "inserted", "touched",
+              "iters_delta", "iters_full", "work_delta", "work_full",
+              "work_ratio", "patched", "rebuilt", "t_delta_ms",
+              "t_full_ms"])
     doc = {"bench": "fusion_bench", "engine": "pallas",
            "rows": json_rows, "direction_rows": direction_rows,
            "resolution_rows": resolution_rows,
@@ -757,9 +859,11 @@ def run(graph_names=("RM-S",), usecases=SIMPLE + MULTI,
            "guard_rows": guard_rows,
            "serving_rows": serving_rows,
            "planner_rows": planner_rows,
+           "incremental_rows": incremental_rows,
            "table": out}
     if json_rows or direction_rows or batched_rows or resolution_rows \
-            or sharded_rows or guard_rows or serving_rows or planner_rows:
+            or sharded_rows or guard_rows or serving_rows or planner_rows \
+            or incremental_rows:
         path = json_out or _JSON_PATH
         with open(path, "w") as f:
             json.dump({k: v for k, v in doc.items() if k != "table"},
@@ -1051,6 +1155,44 @@ def compare_baseline(current: dict, baseline: dict,
                 f"{key}: planned executor entries "
                 f"{r['exec_entries_planned']} > baseline "
                 f"{b['exec_entries_planned']}")
+    base_incr = {_row_key(r): r for r in baseline.get("incremental_rows", [])}
+    for r in current.get("incremental_rows", []):
+        key = _row_key(r)
+        # Standing properties (DESIGN.md §15), not just diffs: delta
+        # propagation must do strictly less edge work than the cold full
+        # recompute it replaces (bench_incremental additionally asserts the
+        # answers bitwise-equal in-bench), and the planner must actually
+        # resolve delta propagation for the small seeded insert batch — a
+        # "full" here means the mutation-size heuristic disengaged and the
+        # whole section gates nothing.
+        if not (r["edge_work_delta"] < r["edge_work_full"]):
+            errors.append(
+                f"{key}: delta edge work {r['edge_work_delta']:.0f} not "
+                f"under the full recompute's {r['edge_work_full']:.0f} — "
+                "delta propagation disengaged")
+        if r.get("plan_incremental") != "delta":
+            errors.append(
+                f"{key}: planner resolved incremental="
+                f"{r.get('plan_incremental')!r} for the small seeded "
+                "insert batch (want 'delta')")
+        b = base_incr.get(key)
+        if b is None:
+            continue
+        if b["edge_work_full"] and r["edge_work_full"]:
+            ratio_now = r["edge_work_delta"] / r["edge_work_full"]
+            ratio_base = b["edge_work_delta"] / b["edge_work_full"]
+            if ratio_now > ratio_base * (1 + rtol):
+                errors.append(
+                    f"{key}: delta/full work ratio regressed "
+                    f"{ratio_now:.4f} > baseline {ratio_base:.4f} "
+                    f"(+{rtol:.0%})")
+        # strict, like launches_traced: a rebuild where the baseline
+        # patched means the in-place ELL patch stopped absorbing the batch
+        if r["rebuilt_layouts"] > b["rebuilt_layouts"]:
+            errors.append(
+                f"{key}: rebuilt layouts {r['rebuilt_layouts']} > baseline "
+                f"{b['rebuilt_layouts']} — the in-place layout patch "
+                "stopped absorbing the insert batch")
     return errors
 
 
@@ -1088,6 +1230,10 @@ if __name__ == "__main__":
                     help="comma list of planner-parity workloads "
                          f"(default {','.join(PLANNER)} when pallas is "
                          "benchmarked; pass '' to skip)")
+    ap.add_argument("--incremental", default=None, metavar="NAMES",
+                    help="comma list of delta-vs-full mutation workloads "
+                         f"(default {','.join(INCREMENTAL)} when pallas is "
+                         "benchmarked; pass '' to skip)")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="where to write the machine-readable results "
                          f"(default {_JSON_PATH})")
@@ -1122,17 +1268,21 @@ if __name__ == "__main__":
         tuple(u for u in args.serving.split(",") if u)
     planner = None if args.planner is None else \
         tuple(u for u in args.planner.split(",") if u)
+    incremental = None if args.incremental is None else \
+        tuple(u for u in args.incremental.split(",") if u)
     result = run(graph_names=tuple(graphs.split(",")),
                  usecases=tuple(u for u in args.usecases.split(",") if u),
                  engines=engines, json_out=json_out,
                  batched_usecases=batched, resolution_usecases=resolution,
                  sharded_usecases=sharded, guard_usecases=guard,
-                 serving_usecases=serving, planner_usecases=planner)
+                 serving_usecases=serving, planner_usecases=planner,
+                 incremental_usecases=incremental)
     if baseline is not None:
         if not (result["rows"] or result["direction_rows"]
                 or result["batched_rows"] or result["resolution_rows"]
                 or result["sharded_rows"] or result["guard_rows"]
-                or result["serving_rows"] or result["planner_rows"]):
+                or result["serving_rows"] or result["planner_rows"]
+                or result["incremental_rows"]):
             print("--baseline requires the pallas engine in --engines "
                   "(no gated rows were produced)")
             sys.exit(2)
@@ -1150,4 +1300,6 @@ if __name__ == "__main__":
               f"{len(baseline.get('sharded_rows', []))} sharded rows, "
               f"{len(baseline.get('guard_rows', []))} guard rows, "
               f"{len(baseline.get('serving_rows', []))} serving rows, "
-              f"{len(baseline.get('planner_rows', []))} planner rows)")
+              f"{len(baseline.get('planner_rows', []))} planner rows, "
+              f"{len(baseline.get('incremental_rows', []))} incremental "
+              "rows)")

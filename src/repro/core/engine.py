@@ -66,7 +66,10 @@ def clear_program_caches():
     structure._SHARDED_RES_CACHE.clear()
     structure._VALID_CACHE.clear()
     structure._STATS_CACHE.clear()
+    structure._SLOT_CACHE.clear()
     _plan.clear_plan_caches()
+    from repro.graph import mutate as _mutate
+    _mutate.reset_mutation_stats()
     try:
         from repro.kernels import ops as kops
         kops.clear_executor_cache()
@@ -96,6 +99,7 @@ def program_cache_stats() -> dict:
            "push_resolutions": len(structure._RES_CACHE),
            "sharded_resolutions": len(structure._SHARDED_RES_CACHE),
            "graph_stats": len(structure._STATS_CACHE),
+           "slot_maps": len(structure._SLOT_CACHE),
            "plans": _plan.plan_cache_size(),
            "feedback": _plan.feedback_cache_size()}
     try:
@@ -333,10 +337,38 @@ def _dispatch_guarded(call, engine, fallback, ft_config):
             eng = nxt
 
 
+def _rescale_warm_state(init_state, comps, n):
+    """Guarded warm start of a NON-idempotent round from a previous solution
+    (DESIGN.md §15): a (−) recompute round re-derives every vertex from its
+    neighborhood each sweep and contracts to its unique attractive fixpoint
+    from ANY finite state, so the warm state needs sanitizing, not
+    re-deriving.  For mass-conserving "sum" components (PR-style) non-finite
+    entries (values a structural edit invalidated) are replaced by the
+    finite mean and the result rescaled to keep the retired answer's total
+    mass — the fixpoint mass is graph-dependent (dangling-vertex leakage),
+    so the previous converged mass, not an a-priori invariant, is the best
+    unbiased seed after a small edit.  All-finite states pass bitwise
+    untouched."""
+    out = []
+    for a, cr in zip(init_state, comps):
+        arr = np.array(a)
+        if cr.op == "sum":
+            finite = np.isfinite(arr)
+            if not finite.all():
+                mass = float(arr[finite].sum()) if finite.any() else 0.0
+                fill = mass / max(1, int(finite.sum()))
+                arr = np.where(finite, arr, fill).astype(arr.dtype)
+                tot = float(arr.sum())
+                if np.isfinite(tot) and tot != 0.0 and mass != 0.0:
+                    arr = (arr * (mass / tot)).astype(arr.dtype)
+        out.append(jnp.asarray(arr))
+    return tuple(out)
+
+
 def _run_iteration(g, round_: FusedRound, engine: str, plan: ExecutionPlan,
                    mesh, axes, max_iter, tol, synth_override=None,
                    source=None, graph_check=None, checkpoint_every=None,
-                   ckpt_dir=None, resume=False, init_state=None):
+                   ckpt_dir=None, resume=False, init_state=None, delta=None):
     """One iteration round under ``plan`` on ``engine`` — which differs from
     ``plan.engine`` only while walking the guard fallback chain, in which
     case the engine-dependent plan fields re-resolve (``degrade_plan``)."""
@@ -365,11 +397,15 @@ def _run_iteration(g, round_: FusedRound, engine: str, plan: ExecutionPlan,
                                           sources=sources)
     elif engine == "pallas":
         from repro.kernels import ops as kops
+        ist = init_state
+        if (delta is not None and ist is not None
+                and not all(iterate.plan_idempotent(p) for p in plans)):
+            ist = _rescale_warm_state(ist, comps, g.n)
         res = kops.iterate_pallas(g, comps, plans, max_iter=max_iter, tol=tol,
                                   sources=sources, plan=eff,
                                   checkpoint_every=checkpoint_every,
                                   ckpt_dir=ckpt_dir, resume=resume,
-                                  init_state=init_state)
+                                  init_state=ist, delta=delta)
     elif engine == "pallas_sharded":
         assert mesh is not None, "pallas_sharded engine needs a mesh"
         from repro.kernels import ops as kops
@@ -449,9 +485,10 @@ def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
                 divergence_sentinel: bool = True,
                 checkpoint_every: Optional[int] = None,
                 ckpt_dir=None, resume: bool = False,
+                init_state=None, delta=None, return_state: bool = False,
                 adaptive: bool = False,
                 plan: Optional[ExecutionPlan] = None,
-                explain: bool = False) -> ExecResult:
+                explain: bool = False):
     """Execute a fused program.  ``source`` optionally re-sources every
     sourced component to one query source — the program (and with it every
     compiled-executor cache entry) is source-generic, so querying another
@@ -481,7 +518,28 @@ def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
     (pallas_sharded → pallas → adaptive) with bounded retry (``ft_config``
     tunes the budget), recording every event in the stats.
     ``checkpoint_every``/``ckpt_dir``/``resume`` thread the chunked
-    checkpointed fixpoint (pallas engine only)."""
+    checkpointed fixpoint (pallas engine only).
+
+    Incremental execution (DESIGN.md §15; pallas engine, single-round
+    programs): ``init_state=prev`` warm-starts the fixpoint from a previous
+    solution and ``delta=`` seeds the frontier with only the vertices whose
+    values may have changed — pass a ``graph.mutate.MutationDelta`` (its
+    ``touched`` set becomes the frontier seed AND its mutation-size
+    statistics feed the planner's ``incremental`` knob: small touched sets
+    resolve to ``"delta"``, large ones — or idempotent rounds after
+    deletions, whose stale values cannot retract — to ``"full"``, which
+    runs the planned cold recompute ignoring the warm hints) or a raw
+    vertex-id array (always honored verbatim).  Idempotent rounds converge
+    bitwise-equal to a cold recompute on the mutated graph; non-idempotent
+    (PR-style) rounds take the guarded rescaled-warm-start path and need
+    ``tol > 0``.  ``return_state=True`` returns ``(result, state)`` with the
+    round's final per-component ``[n]`` state — feed it back as the next
+    edit's ``init_state``."""
+    mutation = None
+    delta_ids = delta
+    if delta is not None and hasattr(delta, "touched"):
+        mutation = delta
+        delta_ids = np.asarray(mutation.touched)
     if plan is None or explain:
         planned = plan_execution(
             g, prog, engine=engine, model=model, mesh=mesh, axes=axes,
@@ -489,18 +547,40 @@ def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
             shard_strategy=shard_strategy, validate=validate,
             on_nonconverge=on_nonconverge, fallback=fallback,
             divergence_sentinel=divergence_sentinel, adaptive=adaptive,
-            default_engine="pull", explain=explain)
+            mutation=mutation,
+            default_engine="pallas" if (init_state is not None
+                                        or delta is not None or return_state)
+            else "pull", explain=explain)
         if explain:
             return planned
         plan = planned
+    if mutation is not None and plan.incremental == "full":
+        # The planner judged the warm+delta path unsound or unprofitable
+        # (touched set too large, or an idempotent round after deletions —
+        # stale monotone values cannot retract): planned full recompute,
+        # warm hints dropped.  The decision is visible in stats.plan.
+        init_state = None
+        delta_ids = None
     if (checkpoint_every is not None or resume) and plan.engine != "pallas":
         raise ValueError("checkpointed fixpoints are a pallas-engine "
                          f"feature; got engine={plan.engine!r}")
+    if init_state is not None or delta_ids is not None or return_state:
+        if plan.engine != "pallas":
+            raise ValueError(
+                "init_state/delta/return_state warm-start hooks are a "
+                f"pallas-engine feature; got engine={plan.engine!r}")
+        iter_rounds = [r for _, r in prog.rounds if r.leaves]
+        if len(prog.rounds) != 1 or len(iter_rounds) != 1:
+            raise ValueError(
+                "init_state/delta/return_state need a single-round program "
+                f"(one iteration round, no LetRound chain); got "
+                f"{len(prog.rounds)} rounds")
     chk = _validate_inputs(g, source=source) if plan.validate else None
     max_iter_eff = max_iter if max_iter is not None else 2 * g.n + 4
     stats = ExecStats(engine_used=plan.engine, plan=plan)
     named: dict = {}
     final = None
+    state_out = None
     for bind_name, round_ in prog.rounds:
         env: dict = dict(named)
         if round_.leaves:
@@ -509,7 +589,7 @@ def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
                     g, round_, eng, plan, mesh, axes, max_iter, tol,
                     source=source, graph_check=chk,
                     checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
-                    resume=resume)
+                    resume=resume, init_state=init_state, delta=delta_ids)
             (res, comps, synth_ms), eng_used, events, retries = \
                 _dispatch_guarded(call, plan.engine, plan.fallback, ft_config)
             stats.engine_used = eng_used
@@ -517,6 +597,8 @@ def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
             stats.exec_retries += retries
             _accumulate(stats, res, synth_ms)
             _check_outcome(res, max_iter_eff, plan.on_nonconverge)
+            if return_state:
+                state_out = tuple(np.asarray(s) for s in res.state)
             for leaf in round_.leaves:
                 env[leaf.name] = res.state[plan_output(leaf.plan)]
         out = _finish_round(g, round_, env)
@@ -525,7 +607,10 @@ def run_program(g, prog: FusedProgram, engine: Optional[str] = None,
             named[prefix + bind_name] = out
         final = out
     _plan.record_feedback(g, plan.kind, stats)
-    return ExecResult(value=final, named=named, stats=stats)
+    result = ExecResult(value=final, named=named, stats=stats)
+    if return_state:
+        return result, state_out
+    return result
 
 
 def run_program_batch(g, prog: FusedProgram, sources: Sequence,
@@ -753,7 +838,7 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
                divergence_sentinel: bool = True,
                checkpoint_every: Optional[int] = None,
                ckpt_dir=None, resume: bool = False,
-               init_state=None,
+               init_state=None, delta=None,
                adaptive: bool = False,
                plan: Optional[ExecutionPlan] = None,
                explain: bool = False):
@@ -779,9 +864,18 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
     ``divergence_sentinel``, plus the chunked-checkpoint knobs
     (``checkpoint_every``/``ckpt_dir``/``resume``/``init_state``, pallas
     engine only; ``init_state`` warm-starts the fixpoint from per-component
-    [n] arrays)."""
+    [n] arrays).  ``delta=`` (a ``mutate.MutationDelta`` or raw vertex-id
+    array, with ``init_state``) takes the incremental path exactly as in
+    ``run_program`` — for the non-idempotent kernels this engine mostly
+    serves (PR-style), that is the guarded rescaled warm start, converging
+    to the same tolerance-fixed answer as a cold run (DESIGN.md §15)."""
     from repro.core.fusion import Prim
 
+    mutation = None
+    delta_ids = delta
+    if delta is not None and hasattr(delta, "touched"):
+        mutation = delta
+        delta_ids = np.asarray(mutation.touched)
     if plan is None or explain:
         planned = plan_execution(
             g, dk, engine=engine, model=model, mesh=mesh, axes=axes,
@@ -790,12 +884,21 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
             batch=None if sources is None else len(sources),
             validate=validate, on_nonconverge=on_nonconverge,
             fallback=fallback, divergence_sentinel=divergence_sentinel,
-            adaptive=adaptive, default_engine="pull", explain=explain)
+            adaptive=adaptive, mutation=mutation,
+            default_engine="pallas" if (init_state is not None
+                                        or delta is not None) else "pull",
+            explain=explain)
         if explain:
             return planned
         plan = planned
-    if (checkpoint_every is not None or resume or init_state is not None) \
-            and plan.engine != "pallas":
+    if mutation is not None and plan.incremental == "full":
+        init_state = None
+        delta_ids = None
+    if delta_ids is not None and sources is not None:
+        raise ValueError("delta warm starts are a solo-query path; "
+                         "batched sources cannot share one touched set")
+    if (checkpoint_every is not None or resume or init_state is not None
+            or delta_ids is not None) and plan.engine != "pallas":
         raise ValueError("checkpointed/warm-started fixpoints are a "
                          f"pallas-engine feature; got engine={plan.engine!r}")
     if (source is not None or sources is not None) and dk.source is None:
@@ -874,6 +977,8 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
     # frontier-masked (+) models for idempotent kernels (BFS/CC/SSSP/WP);
     # full-recompute (−) for non-idempotent / epilogue kernels (PageRank)
     idempotent = dk.rop in iterate._IDEMPOTENT_OPS and dk.e_fn is None
+    if delta_ids is not None and init_state is not None and not idempotent:
+        init_state = _rescale_warm_state(init_state, [comp], g.n)
 
     def call(engine):
         eff = _plan.degrade_plan(plan, engine)
@@ -908,7 +1013,8 @@ def run_direct(g, dk: DirectKernels, engine: Optional[str] = None,
                 g, [comp], plans, max_iter=dk.max_iter, tol=dk.tol,
                 sources=src_over,
                 checkpoint_every=checkpoint_every, ckpt_dir=ckpt_dir,
-                resume=resume, init_state=init_state, plan=eff)
+                resume=resume, init_state=init_state, delta=delta_ids,
+                plan=eff)
         if engine == "pallas_sharded":
             assert mesh is not None, "pallas_sharded engine needs a mesh"
             from repro.kernels import ops as kops

@@ -76,6 +76,13 @@ ADAPT_PUSH_LO = 0.25        # ≤ this push fraction (with pushes observed) →
 ENGINES = ("pull", "push", "adaptive", "dense", "pallas", "distributed",
            "pallas_sharded")
 
+INCREMENTAL_DELTA = 0.05    # incremental-execution threshold (DESIGN.md §15):
+                            # a mutation batch editing ≤ this fraction of |E|
+                            # plans the warm+delta propagation; a larger edit
+                            # plans a full recompute (the touched frontier
+                            # would sweep most of the graph anyway, and the
+                            # warm state buys nothing over the identity init)
+
 
 # ---------------------------------------------------------------------------
 # Knob normalizers — THE single copy (engine.py and ops.py used to each run
@@ -147,6 +154,7 @@ def assert_normalized(plan: "ExecutionPlan") -> None:
         plan.on_nonconverge
     assert plan.shard_strategy in ("contiguous", "dst_hash"), \
         plan.shard_strategy
+    assert plan.incremental in (None, "delta", "full"), plan.incremental
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +193,11 @@ class ExecutionPlan:
     fallback: bool = False
     divergence_sentinel: bool = True
     adaptive: bool = False
+    incremental: Optional[str] = None  # mutation-aware execution mode: None
+                                       # (no mutation hint), "delta" (warm
+                                       # start + touched-set frontier seed) or
+                                       # "full" (planned cold recompute — the
+                                       # warm hints are dropped; DESIGN.md §15)
     kind: tuple = ()                 # structural query-shape key (plan cache
                                      # + feedback identity; source-free)
 
@@ -399,6 +412,7 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
                    fallback: bool = False,
                    divergence_sentinel: bool = True,
                    adaptive: bool = False,
+                   mutation=None,
                    default_engine: str = "pull",
                    explain: bool = False):
     """Resolve every execution knob of one query into an ``ExecutionPlan``.
@@ -412,6 +426,13 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
     ``push_resolution`` consult the recorded-stats feedback of this
     (graph, kind) instead (bounded adjustments; see ``FeedbackRecord``).
 
+    ``mutation=`` (a ``graph.mutate.MutationDelta`` or anything with
+    ``inserted``/``deleted``/``touched``/``has_deletes``) resolves the
+    ``incremental`` knob from mutation-size statistics: an edit touching
+    ≤ ``INCREMENTAL_DELTA`` of |E| plans ``"delta"`` (warm start + touched
+    frontier seed), a larger one — or an idempotent query after deletions,
+    whose stale monotone values cannot retract — plans ``"full"``.
+
     Plans are cached per (graph identity, kind, hints[, feedback epoch]) in
     a bounded LRU; ``explain=True`` bypasses the cache and returns a
     ``PlanExplanation`` carrying the statistics behind each choice."""
@@ -423,6 +444,14 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
 
     fb = feedback_for(g, kind) if adaptive else None
     fb_epoch = fb.epoch if fb is not None else 0
+    mut_key = None
+    if mutation is not None:
+        touched = getattr(mutation, "touched", None)
+        mut_key = (int(getattr(mutation, "inserted", 0)),
+                   int(getattr(mutation, "deleted", 0)),
+                   0 if touched is None else int(getattr(touched, "size",
+                                                         len(touched))),
+                   bool(getattr(mutation, "has_deletes", False)))
     # The plan depends on the mesh only through its device count (the mesh
     # object itself is threaded to execution separately) — keying the hint
     # by id(mesh) would go stale when a freed mesh's id is reused.
@@ -430,7 +459,7 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
                  None if mesh is None else _mesh_device_count(mesh),
                  _axes_key(axes), switch_k, dense_threshold, push_resolution,
                  shard_strategy, batch, validate, on_nonconverge, fallback,
-                 divergence_sentinel, adaptive, default_engine)
+                 divergence_sentinel, adaptive, mut_key, default_engine)
     cache_key = (id(g), kind, hints_key, fb_epoch)
     if not explain:
         hit = _PLAN_CACHE.get(cache_key)
@@ -526,6 +555,27 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
                 else f"engine {eng!r} has no batched fixpoint — B={batch} "
                      "sequential runs (recorded degradation)")
 
+    # --- incremental (mutation-aware) mode -----------------------------------
+    inc = None
+    if mut_key is not None:
+        n_ins, n_del, _n_touched, has_del = mut_key
+        sz = n_ins + n_del
+        small = sz <= INCREMENTAL_DELTA * max(1, stats.num_edges)
+        if idempotent and has_del:
+            inc = "full"
+            inc_reason = ("idempotent round after deletions: stale monotone "
+                          "values cannot retract — planned full recompute")
+        elif small:
+            inc = "delta"
+            inc_reason = (f"{sz} mutated edges ≤ {INCREMENTAL_DELTA:.0%} of "
+                          f"|E|={stats.num_edges} → warm+delta propagation")
+        else:
+            inc = "full"
+            inc_reason = (f"{sz} mutated edges > {INCREMENTAL_DELTA:.0%} of "
+                          f"|E|={stats.num_edges} → planned full recompute")
+        if decisions is not None:
+            decisions["incremental"] = inc_reason
+
     plan = ExecutionPlan(
         engine=eng, model=model, direction=direction,
         switch_k=k_norm, dense_threshold=dt,
@@ -534,7 +584,7 @@ def plan_execution(g, prog=None, *, engine: Optional[str] = None,
         batch_size=batch, batch_lane=lane,
         validate=validate, on_nonconverge=on_nonconverge,
         fallback=fallback, divergence_sentinel=divergence_sentinel,
-        adaptive=adaptive, kind=kind)
+        adaptive=adaptive, incremental=inc, kind=kind)
 
     if explain:
         return PlanExplanation(

@@ -778,19 +778,27 @@ def sharded_push_resolution_cached(g: Graph, k: int,
     return res
 
 
+# Per-graph edge→slot maps maintained by graph.mutate: for a PATCHED graph
+# the blocked-ELL slot of each edge is no longer the canonical left-to-right
+# fill order, so mutate records the actual (k_in, k_out) per edge (aligned to
+# host_edges order) here and chained mutations patch from it.  Same
+# (identity key, weakref, finalizer) contract as every other structure cache.
+_SLOT_CACHE: dict = {}
+
+
 def clear_graph_caches(g: Graph) -> int:
     """Drop every cached derived structure of ONE graph — the selective
     counterpart of ``engine.clear_program_caches`` used by the serving
     layer's bounded per-graph cache (DESIGN.md §13): evicting a graph from
     residency frees its blocked-ELL layouts, sharded layouts, push
-    resolutions, weighted degrees and validation summary without disturbing
-    the other resident graphs (or the graph-shape-generic compiled
-    executors, which carry no per-graph data).  Returns the number of
-    entries dropped."""
+    resolutions, weighted degrees, validation summary and mutation slot
+    maps without disturbing the other resident graphs (or the
+    graph-shape-generic compiled executors, which carry no per-graph data).
+    Returns the number of entries dropped."""
     dropped = 0
     for cache in (_ELL_CACHE, _SHARDED_ELL_CACHE, _RES_CACHE,
                   _SHARDED_RES_CACHE, _WDEG_CACHE, _VALID_CACHE,
-                  _STATS_CACHE):
+                  _STATS_CACHE, _SLOT_CACHE):
         stale = [k for k, (ref, _) in list(cache.items()) if ref() is g]
         for k in stale:
             if cache.pop(k, None) is not None:

@@ -571,7 +571,7 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
                    switch_k="auto", push_resolution: str = PUSH_RESOLUTION,
                    sources: Optional[dict] = None,
                    divergence_sentinel: bool = True,
-                   init_state=None,
+                   init_state=None, delta=None,
                    checkpoint_every: Optional[int] = None,
                    ckpt_dir=None, resume: bool = False,
                    fault_hook=None, plan=None) -> iterate.IterationResult:
@@ -617,6 +617,17 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
         per-component [n] arrays to warm-start the fixpoint from (e.g. a
         previous query's converged state); padding and the frontier reset
         are handled here.
+    ``delta``
+        vertex ids whose values may have changed (a mutation's touched set,
+        ``mutate.MutationDelta.touched``): seeds the warm-started frontier
+        with exactly these vertices instead of all-ones, so an idempotent
+        round after a small edit converges in a handful of
+        frontier-proportional sweeps (DESIGN.md §15).  Requires
+        ``init_state``; for non-idempotent rounds (whose per-iteration
+        recompute ignores the frontier — the warm state, not the mask, is
+        the saving) a positive ``tol`` is required, because their
+        convergence to the unique attractive fixpoint is a tolerance
+        statement, not a bitwise one.
     ``checkpoint_every`` / ``ckpt_dir`` / ``resume``
         run the SAME traced loop body in host-stepped chunks of
         ``checkpoint_every`` iterations, snapshotting the carry through
@@ -651,6 +662,19 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
     if (checkpoint_every is not None or resume) and ckpt_dir is None:
         raise ValueError("checkpoint_every/resume require ckpt_dir")
     srcs = _srcs_vector(comps, sources)
+    if delta is not None:
+        if init_state is None:
+            raise ValueError(
+                "delta= seeds the frontier of a warm start; pass init_state= "
+                "(the previous solution) with it")
+        if not idempotent and not tol > 0:
+            raise ValueError(
+                "delta warm start of a non-idempotent round requires tol > 0:"
+                " convergence to the unique attractive fixpoint is a "
+                "tolerance statement, not a bitwise one (DESIGN.md §15)")
+        delta = np.asarray(delta, dtype=np.int64).ravel()
+        if delta.size and (delta.min() < 0 or delta.max() >= n):
+            raise ValueError(f"delta vertex ids out of range [0, {n})")
     chunk_mode = (checkpoint_every is not None or init_state is not None
                   or resume or fault_hook is not None)
     if not chunk_mode:
@@ -684,6 +708,13 @@ def iterate_pallas(g: Graph, comps, plans, max_iter: Optional[int] = None,
             carry = carry0
             if init_state is not None:
                 carry = _warm_start_carry(carry, comps, init_state, n)
+            if delta is not None:
+                # replace the all-ones warm-start frontier with exactly the
+                # mutation's touched vertices: the first sweep propagates
+                # only from them (padding rows stay inactive)
+                seed = np.zeros(int(carry[1].shape[0]), dtype=bool)
+                seed[delta] = True
+                carry = (carry[0], jnp.asarray(seed)) + tuple(carry[2:])
         chunk = int(checkpoint_every) if checkpoint_every else max_iter
         while True:
             k_h = int(np.asarray(carry[2]))

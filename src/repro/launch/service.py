@@ -21,6 +21,12 @@ and the runtime — not the caller — decides how each request executes:
   single execution (no N+1 re-runs).
 * **Solo lane**: everything else (multi-round LetRound chains,
   vertex-valued one-offs) runs as a plain ``run_program``.
+* **Graph mutation under traffic** (``mutate_graph``, DESIGN.md §15):
+  batched edge inserts/deletes drain the graph's in-flight batch lanes
+  (queued requests hold), patch the blocked-ELL layouts in place
+  (``graph.mutate``), swap the resident graph, and let queued repeat
+  queries warm-start from the retired-answer memo — invalidated by
+  deletions, whose stale monotone values cannot retract.
 * **Bounded graph residency**: an LRU over resident graphs; evicting a
   graph drops exactly its derived layouts via
   ``engine.clear_graph_caches`` (compiled executors are shape-generic and
@@ -155,9 +161,20 @@ class AnalyticsService:
         self.solo_runs = 0
         self.graph_evictions = 0
         self.total_iterations = 0
+        self.mutations = 0             # mutate_graph batches applied
+        self.patched_layouts = 0       # blocked-ELL layouts patched in place
+        self.rebuilt_layouts = 0       # layouts that fell back to a rebuild
+        self.drain_launches = 0        # extra launches spent draining lanes
+                                       # before a mutation swapped the graph
+        self.warm_joins = 0            # batch joiners seeded from a retired
+                                       # answer instead of a cold init row
+        self._retired: OrderedDict = OrderedDict()  # (gname, kind, source) ->
+                                       # per-component [n] converged state
         self._occupancy: list = []     # live/max per batch launch
         self._wall_t0: Optional[float] = None
         self.wall_s = 0.0
+
+    _RETIRED_MAX = 256                 # retired-answer memo LRU bound
 
     # ----- graphs (bounded residency, LRU) ---------------------------------
 
@@ -195,8 +212,48 @@ class AnalyticsService:
             engine.clear_graph_caches(g)
             for key in [k for k in self._lanes if k[1] == victim]:
                 del self._lanes[key]
+            self._drop_retired(victim)
             self._rr = 0
             self.graph_evictions += 1
+
+    # ----- graph mutation (DESIGN.md §15) ----------------------------------
+
+    def _drop_retired(self, gname: str) -> None:
+        for key in [k for k in self._retired if k[0] == gname]:
+            del self._retired[key]
+
+    def mutate_graph(self, gname: str, insert=None, delete=None, **kw):
+        """Apply one batched edge insert/delete to a resident graph under
+        live traffic: drain the graph's in-flight batch lanes to completion
+        (queued requests stay queued — they join on the MUTATED graph),
+        patch the blocked-ELL layouts through ``graph.mutate.mutate_edges``,
+        and swap the resident graph.  Queued repeat queries of retired
+        (kind, source) answers warm-start from the retired-answer memo —
+        bitwise-safe for the idempotent batch-lane rounds under insert-only
+        edits (the unique-fixpoint argument), so the memo survives inserts
+        and is invalidated by deletions, whose stale values cannot retract.
+        Returns the ``MutationDelta``."""
+        from repro.graph import mutate as _mutate
+        if gname not in self._graphs:
+            raise KeyError(f"graph {gname!r} is not resident; add_graph it")
+        for key in [k for k in self._lanes if k[0] == "batch"
+                    and k[1] == gname]:
+            lane = self._lanes[key]
+            while lane.live():
+                self.drain_launches += 1
+                self._step_batch(gname, lane, admit=False)
+        old_g = self._graphs[gname]
+        new_g, md = _mutate.mutate_edges(old_g, insert=insert, delete=delete,
+                                         **kw)
+        self._graphs[gname] = new_g
+        self._graphs.move_to_end(gname)
+        engine.clear_graph_caches(old_g)
+        if md.has_deletes:
+            self._drop_retired(gname)
+        self.mutations += 1
+        self.patched_layouts += md.patched_layouts
+        self.rebuilt_layouts += md.rebuilt_layouts
+        return md
 
     # ----- registration / admission ----------------------------------------
 
@@ -280,30 +337,54 @@ class AnalyticsService:
         req.wall_latency_s = time.perf_counter() - req._wall_submit
         self.completed.append(req)
 
-    def _step_batch(self, gname: str, lane: _BatchLane) -> bool:
+    def _step_batch(self, gname: str, lane: _BatchLane,
+                    admit: bool = True) -> bool:
         g = self._graphs[gname]
         B = self.cfg.max_batch
         # 1. join: queued arrivals take over free slots with fresh init rows
+        # (or a retired answer's converged rows — the repeat-query warm
+        # start).  ``admit=False`` is the mutation drain: in-flight slots
+        # run to retirement, the queue holds for the mutated graph.
         joiners = []
-        for i in range(B):
-            if lane.slots[i] is None and lane.pending:
-                req = lane.pending.popleft()
-                lane.slots[i] = req
-                lane.sources[i] = int(req.source)
-                req.joined_launch = self._launch_seq
-                joiners.append(i)
+        if admit:
+            for i in range(B):
+                if lane.slots[i] is None and lane.pending:
+                    req = lane.pending.popleft()
+                    lane.slots[i] = req
+                    lane.sources[i] = int(req.source)
+                    req.joined_launch = self._launch_seq
+                    joiners.append(i)
         live = lane.live()
         if not live:
             return False
+        kind = lane.slots[live[0]].kind
+        memo_hits = {i: self._retired.get((gname, kind,
+                                           int(lane.sources[i])))
+                     for i in joiners}
+        memo_hits = {i: rows for i, rows in memo_hits.items()
+                     if rows is not None}
+        if lane.state is None and memo_hits:
+            # cold lane with a warm joiner: materialize the full carried
+            # state so the memo rows have somewhere to splice into
+            lane.state = [np.array(r) for r in engine.batch_init_state(
+                g, lane.prog, [int(s) for s in lane.sources])]
         if lane.state is None:
             init = None                # cold batch: C1/C2 init from sources
         else:
-            if joiners:
+            cold_joiners = [i for i in joiners if i not in memo_hits]
+            if cold_joiners:
                 rows = engine.batch_init_state(
-                    g, lane.prog, [int(lane.sources[i]) for i in joiners])
+                    g, lane.prog,
+                    [int(lane.sources[i]) for i in cold_joiners])
                 for c in range(len(lane.state)):
-                    for j, i in enumerate(joiners):
+                    for j, i in enumerate(cold_joiners):
                         lane.state[c][i] = np.asarray(rows[c][j])
+            for i, mrows in memo_hits.items():
+                self._retired.move_to_end((gname, kind,
+                                           int(lane.sources[i])))
+                self.warm_joins += 1
+                for c in range(len(lane.state)):
+                    lane.state[c][i] = np.array(mrows[c])
             init = tuple(lane.state)
         # 2. one bounded chunk launch; converged slots retire, the rest carry.
         # The service plans ONCE per (graph, kind, hints) — repeated chunk
@@ -341,6 +422,15 @@ class AnalyticsService:
                 req.value = np.array(np.asarray(outs[i].value))
                 self.batch_completed += 1
                 self._complete(req)
+                # retired-answer memo: the slot's converged per-component
+                # state seeds future repeat queries of this (kind, source)
+                self._retired[(gname, req.kind, int(lane.sources[i]))] = \
+                    [np.array(lane.state[c][i])
+                     for c in range(len(lane.state))]
+                self._retired.move_to_end((gname, req.kind,
+                                           int(lane.sources[i])))
+                while len(self._retired) > self._RETIRED_MAX:
+                    self._retired.popitem(last=False)
                 lane.slots[i] = None
         if not lane.busy():
             lane.state = None          # drained: next arrival cold-starts
@@ -422,6 +512,11 @@ class AnalyticsService:
             "solo_runs": self.solo_runs,
             "graph_evictions": self.graph_evictions,
             "total_iterations": self.total_iterations,
+            "mutations": self.mutations,
+            "patched_layouts": self.patched_layouts,
+            "rebuilt_layouts": self.rebuilt_layouts,
+            "drain_launches": self.drain_launches,
+            "warm_joins": self.warm_joins,
             "virtual_s": round(self.clock, 9),
             "v_p50_ms": round(float(np.percentile(v_lat, 50)) * 1e3, 6),
             "v_p99_ms": round(float(np.percentile(v_lat, 99)) * 1e3, 6),

@@ -1,0 +1,390 @@
+"""Incremental delta propagation over mutating graphs (DESIGN.md §15).
+
+The contracts under test: ``mutate_edges`` carries cached blocked-ELL
+layouts over by an in-place patch (slot reuse up to the padded width,
+counted rebuild on row overflow) that is value-invisible against a
+canonical from-scratch build; a delta-seeded warm start
+(``run_program(..., init_state=prev, delta=touched)``) converges
+BITWISE-equal to a cold recompute on the mutated graph for idempotent
+rounds over insert-only batches, and to tolerance for non-idempotent
+(PR-style) rounds; the planner's ``incremental`` knob resolves "delta"
+for small batches and "full" for large ones or idempotent rounds after
+deletions (whose stale monotone values cannot retract); the chunked
+checkpointed fixpoint composes with the warm+delta path through a kill
+and resume; and the serving layer's ``mutate_graph`` drains in-flight
+lanes, patches the resident layout, and warm-starts queued repeat
+queries from retired answers — all bitwise vs solo runs on the graph
+that actually served each request.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine, fusion, iterate
+from repro.core import usecases as U
+from repro.core.fusion import Prim
+from repro.core.guard import GraphValidationError
+from repro.graph import mutate
+from repro.graph.structure import from_edges, uniform_graph
+
+pytestmark = pytest.mark.incremental
+
+
+@pytest.fixture
+def g():
+    # 160 edges: a 4-edge batch sits well under the planner's 5% delta
+    # threshold, a half-|E| batch well over it
+    return uniform_graph(32, 160, seed=3, weighted=True)
+
+
+def _run(g_, name, **kw):
+    return engine.run_program(g_, fusion.fuse(U.ALL_SPECS[name]()),
+                              engine="pallas", **kw)
+
+
+def _canonical(g_):
+    """The same edge multiset rebuilt from scratch: canonical slot order,
+    no patched caches — the oracle a patched layout must agree with."""
+    src, dst, w, c = g_.host_edges()
+    return from_edges(g_.n, src, dst, w, c)
+
+
+def _insert(rng, g_, k, weighted=True):
+    parts = (rng.integers(0, g_.n, size=k), rng.integers(0, g_.n, size=k))
+    if weighted:
+        parts += ((0.1 + rng.random(k)).astype(np.float32),)
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# Layout patching: value-invisible vs a canonical rebuild
+# ---------------------------------------------------------------------------
+
+def test_patched_layouts_match_canonical_rebuild(g):
+    for name in ("BFS", "CC"):
+        _run(g, name)                       # warm g's layout caches
+    src, dst, _w, _c = g.host_edges()
+    mutate.reset_mutation_stats()
+    g2, md = mutate.mutate_edges(g, insert=([1, 2, 3], [4, 5, 6]),
+                                 delete=(src[:2], dst[:2]))
+    assert md.inserted == 3 and md.deleted == 2 and md.has_deletes
+    assert md.patched_layouts >= 1 and md.rebuilt_layouts == 0
+    ref = _canonical(g2)
+    for name in ("BFS", "CC"):
+        a = _run(g2, name)                  # served by the patched caches
+        b = _run(ref, name)                 # canonical lazy build
+        np.testing.assert_array_equal(np.asarray(a.value),
+                                      np.asarray(b.value), err_msg=name)
+
+
+def test_chained_mutations_keep_patching_from_real_slots(g):
+    """Patched slots are non-canonical; a second mutation must patch from
+    the RECORDED positions (structure._SLOT_CACHE), not the fill order."""
+    _run(g, "BFS")
+    g1, md1 = mutate.mutate_edges(g, insert=([0, 1], [2, 3]))
+    assert md1.patched_layouts >= 1
+    src, dst, _w, _c = g1.host_edges()
+    g2, md2 = mutate.mutate_edges(g1, insert=([4], [5]),
+                                  delete=(src[:1], dst[:1]))
+    assert md2.patched_layouts >= 1
+    a = _run(g2, "BFS")
+    b = _run(_canonical(g2), "BFS")
+    np.testing.assert_array_equal(np.asarray(a.value), np.asarray(b.value))
+
+
+def test_row_overflow_falls_back_to_counted_rebuild(g):
+    _run(g, "BFS")                          # warm layout caches
+    mutate.reset_mutation_stats()
+    # 200 inserts all landing on dst=0 overflow row 0's padded in-width
+    # (block_e=128 padding leaves ~123 free slots): the in-layout must
+    # fall back to a counted rebuild, and values must still be canonical
+    k = 200
+    rng = np.random.default_rng(0)
+    g2, md = mutate.mutate_edges(
+        g, insert=(rng.integers(1, g.n, size=k), np.zeros(k, np.int64)))
+    assert md.rebuilt_layouts >= 1
+    assert mutate.MUTATION_STATS["rebuilt_layouts"] == md.rebuilt_layouts
+    a = _run(g2, "BFS")
+    b = _run(_canonical(g2), "BFS")
+    np.testing.assert_array_equal(np.asarray(a.value), np.asarray(b.value))
+
+
+# ---------------------------------------------------------------------------
+# Mutation edge cases: policies and missing edges
+# ---------------------------------------------------------------------------
+
+def test_duplicate_insert_under_both_policies(g):
+    src, dst, _w, _c = g.host_edges()
+    dup = ([int(src[0])], [int(dst[0])])
+    g2, md = mutate.mutate_edges(g, insert=dup, duplicates="allow")
+    assert md.inserted == 1 and g2.num_edges == g.num_edges + 1
+    with pytest.raises(GraphValidationError, match="duplicate"):
+        mutate.mutate_edges(g, insert=dup, duplicates="error")
+
+
+def test_delete_missing_edge_raises(g):
+    src, dst, _w, _c = g.host_edges()
+    present = set(zip(src.tolist(), dst.tolist()))
+    missing = next((s, d) for s in range(g.n) for d in range(g.n)
+                   if (s, d) not in present)
+    with pytest.raises(GraphValidationError, match="not present"):
+        mutate.mutate_edges(g, delete=([missing[0]], [missing[1]]))
+    # a k-fold request needs k occurrences: one real edge + the same edge
+    # again is missing unless the graph holds a parallel copy
+    if (int(src[0]), int(dst[0])) not in \
+            set(zip(src[1:].tolist(), dst[1:].tolist())):
+        with pytest.raises(GraphValidationError, match="not present"):
+            mutate.mutate_edges(
+                g, delete=([int(src[0])] * 2, [int(dst[0])] * 2))
+
+
+def test_empty_mutation_rejected(g):
+    with pytest.raises(ValueError, match="insert batch"):
+        mutate.mutate_edges(g)
+
+
+# ---------------------------------------------------------------------------
+# Delta-seeded fixpoints: bitwise parity with the cold recompute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["BFS", "SSSP", "CC", "WP"])
+def test_insert_only_delta_bitwise_equals_cold(g, name):
+    _res0, state = _run(g, name, return_state=True)
+    g2, md = mutate.mutate_edges(g, insert=_insert(
+        np.random.default_rng(1), g, 4))
+    assert not md.has_deletes
+    warm = _run(g2, name, init_state=state, delta=md)
+    assert warm.stats.plan.incremental == "delta"
+    cold = _run(g2, name)
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value), err_msg=name)
+    # ... and both agree with a from-scratch canonical graph
+    scratch = _run(_canonical(g2), name)
+    np.testing.assert_array_equal(np.asarray(cold.value),
+                                  np.asarray(scratch.value), err_msg=name)
+
+
+def test_deletes_plan_full_recompute_and_stay_correct(g):
+    _res0, state = _run(g, "BFS", return_state=True)
+    src, dst, _w, _c = g.host_edges()
+    g2, md = mutate.mutate_edges(g, delete=(src[:2], dst[:2]))
+    assert md.has_deletes
+    # idempotent round after deletions: stale monotone values cannot
+    # retract, so the planner must drop the warm hints and run cold
+    warm = _run(g2, "BFS", init_state=state, delta=md)
+    assert warm.stats.plan.incremental == "full"
+    cold = _run(g2, "BFS")
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+
+
+def test_large_batch_plans_full(g):
+    _res0, state = _run(g, "BFS", return_state=True)
+    g2, md = mutate.mutate_edges(g, insert=_insert(
+        np.random.default_rng(2), g, g.num_edges // 2))
+    warm = _run(g2, "BFS", init_state=state, delta=md)
+    assert warm.stats.plan.incremental == "full"
+    cold = _run(g2, "BFS")
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+
+
+def test_explain_records_incremental_decision(g):
+    _res0, state = _run(g, "BFS", return_state=True)
+    g2, md = mutate.mutate_edges(g, insert=([0, 1], [2, 3]))
+    exp = _run(g2, "BFS", init_state=state, delta=md, explain=True)
+    assert exp.plan.incremental == "delta"
+    assert "delta" in exp.decisions["incremental"]
+    g3, md3 = mutate.mutate_edges(g, insert=_insert(
+        np.random.default_rng(3), g, g.num_edges))
+    exp3 = _run(g3, "BFS", init_state=state, delta=md3, explain=True)
+    assert exp3.plan.incremental == "full"
+    assert "full" in exp3.decisions["incremental"]
+
+
+def test_raw_delta_array_is_honored_verbatim(g):
+    """A raw vertex-id delta bypasses the planner's mutation heuristic: no
+    MutationDelta, no incremental decision — the warm hints run as given."""
+    _res0, state = _run(g, "BFS", return_state=True)
+    g2, _md = mutate.mutate_edges(g, insert=([0, 1], [2, 3]))
+    warm = _run(g2, "BFS", init_state=state,
+                delta=np.array([0, 1, 2, 3], np.int64))
+    assert warm.stats.plan.incremental is None
+    cold = _run(g2, "BFS")
+    np.testing.assert_array_equal(np.asarray(warm.value),
+                                  np.asarray(cold.value))
+
+
+# ---------------------------------------------------------------------------
+# Non-idempotent (PR-style) rounds: rescaled warm start, tolerance parity
+# ---------------------------------------------------------------------------
+
+def test_pagerank_warm_delta_converges_to_tolerance(g):
+    dk = U.handwritten_pagerank(g.n)
+    prev = engine.run_direct(g, dk, engine="pallas")
+    g2, md = mutate.mutate_edges(g, insert=([1, 2], [3, 4], [0.4, 0.6]))
+    cold = engine.run_direct(g2, dk, engine="pallas")
+    warm = engine.run_direct(g2, dk, engine="pallas",
+                             init_state=[np.asarray(prev.value)],
+                             delta=np.asarray(md.touched))
+    assert np.allclose(np.asarray(warm.value), np.asarray(cold.value),
+                       atol=1e-4)
+    # the converged neighbouring state must not be slower than cold — the
+    # regression the mass-preserving rescale exists to prevent
+    assert warm.stats.iterations <= cold.stats.iterations
+
+
+def test_delta_validation_guards(g):
+    _res0, state = _run(g, "BFS", return_state=True)
+    with pytest.raises(ValueError, match="init_state"):
+        _run(g, "BFS", delta=np.array([0, 1]))
+    with pytest.raises(ValueError, match="out of range"):
+        _run(g, "BFS", init_state=state, delta=np.array([g.n + 5]))
+    with pytest.raises(ValueError, match="pallas"):
+        engine.run_program(g, fusion.fuse(U.bfs(0)), engine="pull",
+                           init_state=state)
+    with pytest.raises(ValueError, match="single-round"):
+        engine.run_program(g, fusion.fuse(U.rds(0, 1)), engine="pallas",
+                           init_state=state, delta=np.array([0]))
+    # non-idempotent + tol=0: bitwise convergence is not a meaningful
+    # contract for a contraction — the engine must refuse, not hand back
+    # a state that merely stopped changing in float
+    dk0 = U.pagerank_kernels(g.n, tol=0.0)
+    with pytest.raises(ValueError, match="tol > 0"):
+        engine.run_direct(g, dk0, engine="pallas",
+                          init_state=[np.full(g.n, 1.0 / g.n, np.float32)],
+                          delta=np.array([0]))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed fixpoint across a mutation: kill mid-delta-run, resume
+# ---------------------------------------------------------------------------
+
+class _Kill(Exception):
+    pass
+
+
+def test_mutation_then_kill_and_resume_bitwise(g, tmp_path):
+    from repro.kernels import ops as kops
+    dk = U.handwritten_sssp(0)
+    comp = iterate.CompRuntime(idx=0, op=dk.rop,
+                               dtype=iterate.DTYPES[dk.dtype],
+                               p_fn=dk.p_fn, init_fn=dk.init_fn,
+                               source=dk.source, e_fn=dk.e_fn)
+    plans = [Prim(dk.rop, 0)]
+    base = kops.iterate_pallas(g, [comp], plans)
+    state = [np.asarray(s) for s in base.state]
+    g2, md = mutate.mutate_edges(g, insert=([0, 3], [5, 7], [0.2, 0.3]))
+    ref = kops.iterate_pallas(g2, [comp], plans, init_state=state,
+                              delta=md.touched)
+    d = str(tmp_path / "mut")
+
+    def killer(k):
+        raise _Kill
+
+    with pytest.raises(_Kill):
+        kops.iterate_pallas(g2, [comp], plans, init_state=state,
+                            delta=md.touched, checkpoint_every=1,
+                            ckpt_dir=d, fault_hook=killer)
+    resumed = kops.iterate_pallas(g2, [comp], plans, init_state=state,
+                                  delta=md.touched, checkpoint_every=1,
+                                  ckpt_dir=d, resume=True)
+    assert resumed.iterations == ref.iterations
+    for a, b in zip(ref.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Cache accounting: slot maps in the stats surface, cleared with the rest
+# ---------------------------------------------------------------------------
+
+def test_slot_cache_stats_and_clear(g):
+    _run(g, "BFS")                          # warm layout caches
+    mutate.reset_mutation_stats()
+    _g2, md = mutate.mutate_edges(g, insert=([0], [1]))
+    assert md.patched_layouts >= 1
+    stats = engine.program_cache_stats()
+    assert stats["slot_maps"] >= 1
+    assert mutate.MUTATION_STATS["mutations"] == 1
+    engine.clear_program_caches()
+    stats = engine.program_cache_stats()
+    assert stats["slot_maps"] == 0
+    assert mutate.MUTATION_STATS["mutations"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: mutate under traffic — drain, patch, warm-join
+# ---------------------------------------------------------------------------
+
+def _service(g_):
+    from repro.launch import service as S
+    svc = S.AnalyticsService(S.ServiceConfig(engine="pallas", max_batch=4,
+                                             chunk_iters=3))
+    svc.add_graph("g", g_)
+    svc.register("BFS", U.bfs)
+    return S, svc
+
+
+def _drain(svc, limit=10_000):
+    steps = 0
+    while svc.step():
+        steps += 1
+        assert steps < limit, "service failed to drain"
+
+
+def test_service_mutate_drains_patches_and_warm_joins(g):
+    S, svc = _service(g)
+    for i in range(3):
+        svc.submit("g", S.Request(rid=i, kind="BFS", source=i))
+    _drain(svc)
+    # repeats of two retired sources + a fresh one queue across the edit
+    for i, s in enumerate((0, 1, 9)):
+        svc.submit("g", S.Request(rid=10 + i, kind="BFS", source=s))
+    md = svc.mutate_graph("g", insert=([2, 4], [6, 8], [0.5, 0.5]))
+    assert md.inserted == 2 and md.patched_layouts >= 1
+    _drain(svc)
+    m = svc.metrics()
+    assert m["completed"] == 6
+    assert m["mutations"] == 1
+    assert m["patched_layouts"] >= 1 and m["rebuilt_layouts"] == 0
+    assert m["warm_joins"] >= 2             # both repeat queries joined warm
+    # every answer must be bitwise-equal to a solo run on the graph that
+    # actually served it: pre-mutation rids on the old graph, queued
+    # post-mutation rids on the patched resident graph
+    prog = fusion.fuse(U.bfs(0))
+    new_g = svc.graphs["g"]
+    for req in svc.completed:
+        served_on = g if req.rid < 10 else new_g
+        ref = engine.run_program(served_on, prog, engine="pallas",
+                                 source=req.source).value
+        np.testing.assert_array_equal(
+            np.asarray(req.value), np.asarray(ref),
+            err_msg=f"rid {req.rid} diverged from its solo run")
+
+
+def test_service_deletes_invalidate_retired_memo(g):
+    S, svc = _service(g)
+    svc.submit("g", S.Request(rid=0, kind="BFS", source=0))
+    _drain(svc)
+    assert len(svc._retired) == 1
+    src, dst, _w, _c = g.host_edges()
+    md = svc.mutate_graph("g", delete=(src[:1], dst[:1]))
+    assert md.has_deletes
+    # deletions retract support: the retired-answer memo for this graph
+    # must be dropped, and the repeat query must run cold — and correct —
+    # on the mutated graph
+    assert len(svc._retired) == 0
+    svc.submit("g", S.Request(rid=1, kind="BFS", source=0))
+    _drain(svc)
+    m = svc.metrics()
+    assert m["warm_joins"] == 0
+    prog = fusion.fuse(U.bfs(0))
+    req = svc.completed[-1]
+    ref = engine.run_program(svc.graphs["g"], prog, engine="pallas",
+                             source=0).value
+    np.testing.assert_array_equal(np.asarray(req.value), np.asarray(ref))
+
+
+def test_service_mutate_unknown_graph_raises(g):
+    _S, svc = _service(g)
+    with pytest.raises(KeyError, match="not resident"):
+        svc.mutate_graph("nope", insert=([0], [1]))
